@@ -1,0 +1,50 @@
+"""Kernel-level benchmark: bytes-moved roofline projection for the fused
+Pallas ops vs. their unfused jnp reference.
+
+On this CPU container, interpret-mode wall time is meaningless; what is
+meaningful and machine-independent is the HBM traffic each formulation
+implies. We count bytes (inputs read + outputs written, assuming perfect
+fusion for the Pallas kernel and materialized intermediates for the
+unfused reference) and project v5e time at 819 GB/s.
+
+CSV columns: name, us_per_call (projected TPU v5e us), derived.
+"""
+import numpy as np
+
+HBM_BW = 819e9
+BYTES = 4  # f32
+
+
+def admm_update_traffic(n):
+    fused = (3 + 3) * n * BYTES          # read g,y,z~ ; write x,y',w
+    # unfused: x = z-(g+y)/rho (r3,w1); y' = -g (r1,w1); w = rho*x+y' (r2,w1)
+    unfused = (3 + 1 + 1 + 1 + 2 + 1) * n * BYTES
+    return fused, unfused
+
+
+def prox_traffic(n):
+    fused = (2 + 1) * n * BYTES          # read z~,w_sum ; write z'
+    # unfused: v=(g z+w)/mu (r2,w1); soft-thresh (r1,w1); clip (r1,w1)
+    unfused = (3 + 2 + 2) * n * BYTES
+    return fused, unfused
+
+
+def main(emit=print):
+    for n in (1 << 20, 1 << 24, 1 << 27):
+        f, u = admm_update_traffic(n)
+        emit(f"kern_admm_update_n{n},{f/HBM_BW*1e6:.1f},"
+             f"unfused_us={u/HBM_BW*1e6:.1f};saving={1-f/u:.2%}")
+        f, u = prox_traffic(n)
+        emit(f"kern_prox_update_n{n},{f/HBM_BW*1e6:.1f},"
+             f"unfused_us={u/HBM_BW*1e6:.1f};saving={1-f/u:.2%}")
+    # logreg grad: arithmetic intensity of the two matmul passes
+    m, d = 1 << 20, 1 << 14
+    flops = 2 * 2 * m * d                 # Xw and X^T v
+    bytes_ = (2 * m * d + 2 * (m + d)) * BYTES
+    emit(f"kern_logreg_grad_m{m}_d{d},{flops/197e12*1e6:.1f},"
+         f"ai={flops/bytes_:.2f}flops/B;"
+         f"mem_us={bytes_/HBM_BW*1e6:.1f}")
+
+
+if __name__ == "__main__":
+    main()

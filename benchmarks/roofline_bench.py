@@ -1,0 +1,44 @@
+"""Roofline report: aggregates experiments/dryrun.jsonl into the
+EXPERIMENTS.md §Roofline table.
+
+CSV columns: name, us_per_call (roofline step-time bound, us), derived
+(bottleneck + the three terms).
+"""
+import json
+import os
+
+DEFAULT_PATH = os.path.join(os.path.dirname(__file__), "..",
+                            "experiments", "dryrun.jsonl")
+
+
+def load(path=DEFAULT_PATH, variant="baseline"):
+    rows = {}
+    if not os.path.exists(path):
+        return rows
+    with open(path) as f:
+        for line in f:
+            r = json.loads(line)
+            if r.get("status") != "ok" or r.get("variant") != variant:
+                continue
+            rows[(r["arch"], r["shape"], r["mesh"])] = r   # last write wins
+    return rows
+
+
+def main(emit=print, path=DEFAULT_PATH):
+    rows = load(path)
+    if not rows:
+        emit("roofline_missing,0,run `python -m repro.launch.dryrun` first")
+        return
+    for (arch, shape, mesh), r in sorted(rows.items()):
+        name = f"roofline_{arch}_{shape}_{mesh}"
+        us = r["step_time_bound_s"] * 1e6
+        der = (f"bottleneck={r['bottleneck']};"
+               f"tc={r['t_compute_s']:.2e};tm={r['t_memory_s']:.2e};"
+               f"tx={r['t_collective_s']:.2e};"
+               f"useful={r.get('useful_flops_ratio') or 0:.3f};"
+               f"mfu_bound={r.get('mfu_bound') or 0:.3f}")
+        emit(f"{name},{us:.1f},{der}")
+
+
+if __name__ == "__main__":
+    main()

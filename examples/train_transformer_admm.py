@@ -1,0 +1,93 @@
+"""End-to-end driver: train a ~100M-parameter transformer with the
+block-wise asynchronous consensus trainer for a few hundred steps.
+
+    PYTHONPATH=src python examples/train_transformer_admm.py \
+        [--steps 300] [--quick]
+
+Compares AsyBADMM against the synchronous AdamW baseline on the same
+deterministic token stream (both learn a synthetic bigram language).
+"""
+import argparse
+import json
+import time
+
+import jax
+
+from repro.configs.base import ADMMConfig, ModelConfig
+from repro.data import TokenPipeline
+from repro.models import build_model
+from repro.optim import adamw, warmup_cosine
+from repro.training import ADMMTrainer, SGDTrainer
+
+
+def model_100m() -> ModelConfig:
+    """~110M params: a qwen3-family dense decoder."""
+    return ModelConfig(
+        name="demo-100m", arch_type="dense", num_layers=12, d_model=768,
+        num_heads=12, num_kv_heads=4, d_ff=2048, vocab_size=32000,
+        head_dim=64, qk_norm=True, tie_embeddings=True)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--quick", action="store_true",
+                    help="tiny model + 30 steps (CI-sized)")
+    ap.add_argument("--workers", type=int, default=4)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--batch", type=int, default=8)
+    args = ap.parse_args()
+
+    cfg = model_100m()
+    if args.quick:
+        cfg = cfg.with_(num_layers=2, d_model=128, num_heads=4,
+                        num_kv_heads=2, d_ff=256, vocab_size=1024)
+        args.steps = min(args.steps, 30)
+        args.seq = 32
+
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    n = sum(x.size for x in jax.tree.leaves(params))
+    print(f"model: {cfg.name} ({n/1e6:.1f}M params)")
+
+    # data uses a reduced working vocabulary so the bigram structure is
+    # learnable within a few hundred steps (the model vocab is unchanged)
+    data_vocab = min(cfg.vocab_size, 512)
+    pipe = TokenPipeline(vocab_size=data_vocab, seq_len=args.seq + 1,
+                         global_batch=args.batch, seed=0, branch=2)
+
+    # ---- AsyBADMM consensus trainer (the paper's technique) ----
+    admm = ADMMTrainer(
+        loss_fn=model.loss,
+        admm=ADMMConfig(rho=8.0, gamma=0.01, max_delay=1,
+                        block_fraction=0.5, num_blocks=8),
+        num_workers=args.workers)
+    st_admm = admm.init(params)
+    admm_step = jax.jit(admm.train_step)
+
+    # ---- AdamW data-parallel baseline ----
+    sgd = SGDTrainer(loss_fn=model.loss,
+                     optimizer=adamw(warmup_cosine(3e-4, args.steps // 10,
+                                                   args.steps)))
+    st_sgd = sgd.init(params)
+    sgd_step = jax.jit(sgd.train_step)
+
+    t0 = time.time()
+    for step in range(args.steps):
+        b_admm = pipe.batch(step, num_workers=args.workers)
+        b_sgd = pipe.batch(step)
+        st_admm, info_a = admm_step(st_admm, b_admm)
+        st_sgd, info_s = sgd_step(st_sgd, b_sgd)
+        if step % max(args.steps // 15, 1) == 0 or step == args.steps - 1:
+            print(json.dumps({
+                "step": step,
+                "admm_loss": round(float(info_a["loss"]), 4),
+                "adamw_loss": round(float(info_s["loss"]), 4),
+                "consensus_residual":
+                    round(float(admm.consensus_residual(st_admm)), 5),
+                "elapsed_s": round(time.time() - t0, 1),
+            }), flush=True)
+
+
+if __name__ == "__main__":
+    main()

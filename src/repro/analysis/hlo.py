@@ -1,0 +1,66 @@
+"""Parse collective traffic out of post-SPMD HLO text.
+
+``compiled.as_text()`` is the *per-device* partitioned module; we sum
+the result-shape bytes of every collective op, bucketed by kind. For
+all-gather the result is the gathered (larger) buffer — a reasonable
+proxy for link bytes in a ring implementation; for reduce-scatter /
+all-reduce the result is the reduced buffer (ring moves ~2x that; we
+report raw bytes and apply protocol factors in roofline.py).
+"""
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+from typing import Dict
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1,
+}
+
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+# result part of an HLO instruction: "%name = <shape-or-tuple> opname("
+_INSTR_RE = re.compile(
+    r"=\s*((?:\([^)]*\))|(?:[a-z0-9]+\[[0-9,]*\][^\s]*))\s+"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start|-done)?\(")
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+
+
+def _shape_bytes(text: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(text):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, int]:
+    """Per-device bytes by collective kind (result-shape convention).
+    ``-done`` ops are skipped so async start/done pairs count once."""
+    out: Dict[str, int] = defaultdict(int)
+    for m in _INSTR_RE.finditer(hlo_text):
+        shape_txt, kind = m.group(1), m.group(2)
+        if "-done(" in m.group(0):
+            continue
+        out[kind] += _shape_bytes(shape_txt)
+    out["total"] = sum(v for k, v in out.items() if k != "total")
+    return dict(out)
+
+
+def count_ops(hlo_text: str) -> Dict[str, int]:
+    counts: Dict[str, int] = defaultdict(int)
+    for kind in _COLLECTIVES:
+        counts[kind] = len(re.findall(rf"\s{kind}(?:-start)?\(", hlo_text))
+    counts["fusion"] = hlo_text.count(" fusion(")
+    counts["while"] = hlo_text.count(" while(")
+    return dict(counts)

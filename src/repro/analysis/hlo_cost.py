@@ -1,0 +1,293 @@
+"""Trip-count-aware HLO cost analysis.
+
+``compiled.cost_analysis()`` on the CPU backend counts each while-loop
+*body once*, so any scanned layer stack (all our models) is undercounted
+by ~num_layers x. XLA annotates every while with
+``backend_config={"known_trip_count":{"n":...}}`` — this module walks
+the computation call graph from ENTRY and scales costs correctly.
+
+Cost model (per device — the module is the partitioned SPMD program):
+  flops      : dot = 2 * prod(result dims) * prod(contracting dims);
+               elementwise/reduce = prod(result dims) (1 flop/elem).
+  hbm bytes  : per *top-level* instruction: operand bytes + result bytes
+               (fusion = boundary only — internals live in
+               registers/VMEM, which is exactly the fused-kernel HBM
+               model; tuple/GTE/parameter/constant/bitcast are free).
+  collective : result-shape bytes per kind, scaled by loop trips.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from collections import defaultdict
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "s4": 1, "u4": 1, "pred": 1, "token": 0,
+}
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_FREE_OPS = {"parameter", "constant", "tuple", "get-tuple-element",
+             "bitcast", "after-all", "iota", "partition-id", "replica-id"}
+_COLL_KINDS = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+
+def _shapes(text: str) -> List[Tuple[str, List[int]]]:
+    out = []
+    for dt, dims in _SHAPE_RE.findall(text):
+        if dt in _DTYPE_BYTES:
+            out.append((dt, [int(d) for d in dims.split(",")] if dims else []))
+    return out
+
+
+def _bytes_of(text: str) -> int:
+    total = 0
+    for dt, dims in _shapes(text):
+        n = 1
+        for d in dims:
+            n *= d
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _elems_of(text: str) -> int:
+    total = 0
+    for _dt, dims in _shapes(text):
+        n = 1
+        for d in dims:
+            n *= d
+        total += n
+    return total
+
+
+@dataclasses.dataclass
+class Instr:
+    name: str
+    op: str
+    type_text: str
+    operands: List[str]
+    attrs: str
+
+
+@dataclasses.dataclass
+class Cost:
+    flops: float = 0.0
+    hbm_bytes: float = 0.0
+    coll: Dict[str, float] = dataclasses.field(
+        default_factory=lambda: defaultdict(float))
+
+    def add(self, other: "Cost", mult: float = 1.0) -> None:
+        self.flops += mult * other.flops
+        self.hbm_bytes += mult * other.hbm_bytes
+        for k, v in other.coll.items():
+            self.coll[k] += mult * v
+
+
+_INSTR_RE = re.compile(r"^\s+(?:ROOT )?%([^\s=]+) = ")
+_COMP_RE = re.compile(r"^(ENTRY )?%?([^\s(]+)[^{]*\{\s*$")
+_TRIP_RE = re.compile(r'known_trip_count":\{"n":"(\d+)"')
+
+
+def _balanced(text: str, start: int) -> int:
+    depth = 0
+    for i in range(start, len(text)):
+        if text[i] == "(":
+            depth += 1
+        elif text[i] == ")":
+            depth -= 1
+            if depth == 0:
+                return i
+    return len(text) - 1
+
+
+def parse_module(hlo: str):
+    comps: Dict[str, List[Instr]] = {}
+    entry: Optional[str] = None
+    shapes: Dict[str, str] = {}          # instr name -> type text
+    cur: Optional[str] = None
+    for line in hlo.splitlines():
+        if cur is None:
+            m = _COMP_RE.match(line)
+            if m and "->" in line:
+                cur = m.group(2)
+                comps[cur] = []
+                if m.group(1):
+                    entry = cur
+            continue
+        if line.startswith("}"):
+            cur = None
+            continue
+        m = _INSTR_RE.match(line)
+        if not m:
+            continue
+        name = m.group(1)
+        rest = line[m.end():]
+        # type: tuple or simple
+        if rest.startswith("("):
+            close = _balanced(rest, 0)
+            type_text = rest[: close + 1]
+            rest2 = rest[close + 1:].lstrip()
+        else:
+            sp = rest.index(" ")
+            type_text = rest[:sp]
+            rest2 = rest[sp + 1:]
+        par = rest2.find("(")
+        if par < 0:
+            continue
+        op = rest2[:par].strip()
+        aclose = _balanced(rest2, par)
+        operand_text = rest2[par + 1 : aclose]
+        attrs = rest2[aclose + 1:]
+        operands = re.findall(r"%([^\s,()]+)", operand_text)
+        comps[cur].append(Instr(name, op, type_text, operands, attrs))
+        shapes[name] = type_text
+    return comps, entry, shapes
+
+
+def _dot_flops(instr: Instr, shapes: Dict[str, str]) -> float:
+    res_elems = _elems_of(instr.type_text)
+    m = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}", instr.attrs)
+    k = 1
+    if m and instr.operands:
+        lhs_type = shapes.get(instr.operands[0], "")
+        sh = _shapes(lhs_type)
+        if sh:
+            dims = sh[0][1]
+            for idx in (int(x) for x in m.group(1).split(",") if x):
+                if idx < len(dims):
+                    k *= dims[idx]
+    return 2.0 * res_elems * k
+
+
+def analyze_hlo(hlo: str) -> Cost:
+    comps, entry, shapes = parse_module(hlo)
+    memo: Dict[str, Cost] = {}
+
+    def comp_cost(name: str) -> Cost:
+        if name in memo:
+            return memo[name]
+        memo[name] = Cost()                      # guard (no real recursion)
+        total = Cost()
+        for ins in comps.get(name, []):
+            op = ins.op
+            if op in _FREE_OPS:
+                continue
+            if op == "fusion":
+                called = re.search(r"calls=%([^\s,]+)", ins.attrs)
+                if called:
+                    sub = comp_cost(called.group(1))
+                    total.flops += sub.flops     # flops only; bytes at boundary
+                total.hbm_bytes += _boundary_bytes(ins, shapes, comps)
+                continue
+            if op == "while":
+                body = re.search(r"body=%([^\s,]+)", ins.attrs)
+                cond = re.search(r"condition=%([^\s,]+)", ins.attrs)
+                trip = 1
+                tm = _TRIP_RE.search(ins.attrs)
+                if tm:
+                    trip = int(tm.group(1))
+                if body:
+                    total.add(comp_cost(body.group(1)), trip)
+                if cond:
+                    total.add(comp_cost(cond.group(1)), trip + 1)
+                continue
+            if op in ("call", "async-start"):
+                called = re.search(r"(?:to_apply|calls)=%([^\s,]+)", ins.attrs)
+                if called:
+                    total.add(comp_cost(called.group(1)))
+                continue
+            if op == "conditional":
+                for c in re.findall(r"(?:branch_computations=\{([^}]*)\}|"
+                                    r"true_computation=%([^\s,]+)|"
+                                    r"false_computation=%([^\s,]+))", ins.attrs):
+                    for g in c:
+                        for nm in re.findall(r"%?([\w\.\-]+)", g or ""):
+                            if nm in comps:
+                                total.add(comp_cost(nm))
+                total.hbm_bytes += _boundary_bytes(ins, shapes, comps)
+                continue
+            kind = next((k for k in _COLL_KINDS if op.startswith(k)), None)
+            if kind is not None:
+                if op.endswith("-done"):
+                    continue
+                b = _bytes_of(ins.type_text)
+                total.coll[kind] += b
+                total.hbm_bytes += _boundary_bytes(ins, shapes, comps)
+                continue
+            # generic compute op
+            total.hbm_bytes += _boundary_bytes(ins, shapes, comps)
+            if op == "dot":
+                total.flops += _dot_flops(ins, shapes)
+            elif op == "convolution":
+                # approx: 2 * result elems * kernel elems / out_channels
+                total.flops += 2.0 * _elems_of(ins.type_text)
+            elif op in ("reduce", "reduce-window"):
+                total.flops += sum(_elems_of(shapes.get(o, ""))
+                                   for o in ins.operands[:1])
+            else:
+                total.flops += _elems_of(ins.type_text)
+            if op in ("reduce", "map", "sort", "scatter", "select-and-scatter"):
+                called = re.search(r"to_apply=%([^\s,]+)", ins.attrs)
+                # tiny scalar computations — ignore
+        memo[name] = total
+        return total
+
+    if entry is None:
+        raise ValueError("no ENTRY computation found")
+    return comp_cost(entry)
+
+
+def _boundary_bytes(ins: Instr, shapes: Dict[str, str],
+                    comps: Optional[Dict[str, List["Instr"]]] = None) -> int:
+    """HBM traffic of one top-level instruction.
+
+    In-place patterns are special-cased: dynamic-(update-)slice on a big
+    buffer touches only the slice (XLA aliases the buffer), so counting
+    the full operand would overcharge scan carries by ~num_layers x.
+    """
+    op = ins.op
+    result = _bytes_of(ins.type_text)
+    if op == "dynamic-slice":
+        return 2 * result
+    if op == "dynamic-update-slice":
+        upd = _bytes_of(shapes.get(ins.operands[1], "")) if len(ins.operands) > 1 else 0
+        return 2 * upd
+    if op == "gather":
+        idx = _bytes_of(shapes.get(ins.operands[1], "")) if len(ins.operands) > 1 else 0
+        return 2 * result + idx
+    if op == "scatter":
+        upd = _bytes_of(shapes.get(ins.operands[2], "")) if len(ins.operands) > 2 else result
+        return 2 * upd
+    if op == "fusion" and comps is not None:
+        called = re.search(r"calls=%([^\s,]+)", ins.attrs)
+        root = None
+        if called and called.group(1) in comps:
+            body = comps[called.group(1)]
+            if body:
+                root = body[-1]
+        if root is not None and root.op == "dynamic-slice":
+            return 2 * result + sum(
+                _bytes_of(shapes.get(o, "")) for o in ins.operands
+                if _bytes_of(shapes.get(o, "")) <= result)
+        if root is not None and root.op in ("dynamic-update-slice", "scatter"):
+            # in-place rooted fusion: charge small operands twice (read
+            # update / write slice), skip the big aliased buffer.
+            small = sum(_bytes_of(shapes.get(o, "")) for o in ins.operands
+                        if _bytes_of(shapes.get(o, "")) * 2 <= result)
+            return 2 * small
+    b = result
+    for o in ins.operands:
+        t = shapes.get(o)
+        if t:
+            b += _bytes_of(t)
+    return b
+
+
+def collective_bytes_scaled(hlo: str) -> Dict[str, int]:
+    cost = analyze_hlo(hlo)
+    out = {k: int(v) for k, v in cost.coll.items()}
+    out["total"] = int(sum(cost.coll.values()))
+    return out

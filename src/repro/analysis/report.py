@@ -1,0 +1,91 @@
+"""Render EXPERIMENTS.md tables from experiments/dryrun.jsonl.
+
+  PYTHONPATH=src python -m repro.analysis.report [--variant baseline]
+"""
+import argparse
+import json
+import os
+from collections import defaultdict
+
+
+def load(path, variant=None):
+    rows = {}
+    with open(path) as f:
+        for line in f:
+            r = json.loads(line)
+            key = (r["arch"], r["shape"], r["mesh"], r.get("variant", "baseline"))
+            rows[key] = r
+    if variant is not None:
+        rows = {k: v for k, v in rows.items() if k[3] == variant}
+    return rows
+
+
+def fmt_bytes(b):
+    if b >= 1 << 30:
+        return f"{b / (1 << 30):.1f}G"
+    if b >= 1 << 20:
+        return f"{b / (1 << 20):.1f}M"
+    return f"{b / 1024:.0f}K"
+
+
+def roofline_table(rows, mesh="pod"):
+    out = ["| arch | shape | t_comp (s) | t_mem (s) | t_coll (s) | bottleneck "
+           "| useful_flops | MFU bound | coll bytes/dev |",
+           "|---|---|---|---|---|---|---|---|---|"]
+    for (arch, shape, m, _v), r in sorted(rows.items()):
+        if m != mesh:
+            continue
+        if r["status"] == "skipped":
+            out.append(f"| {arch} | {shape} | — | — | — | skipped "
+                       f"(full-attn @500k) | — | — | — |")
+            continue
+        uf = r.get("useful_flops_ratio")
+        mfu = r.get("mfu_bound")
+        uf_s = f"{uf:.3f}" if uf is not None else "—"
+        mfu_s = f"{mfu:.3f}" if mfu is not None else "—"
+        out.append(
+            f"| {arch} | {shape} | {r['t_compute_s']:.2e} | "
+            f"{r['t_memory_s']:.2e} | {r['t_collective_s']:.2e} | "
+            f"**{r['bottleneck']}** | {uf_s} | {mfu_s} | "
+            f"{fmt_bytes(r['collective_bytes_per_device'])} |")
+    return "\n".join(out)
+
+
+def dryrun_table(rows, mesh):
+    out = [f"| arch | shape | status | flops/dev | HBM bytes/dev | "
+           f"coll bytes/dev | arg bytes/dev | compile (s) |",
+           "|---|---|---|---|---|---|---|---|"]
+    for (arch, shape, m, _v), r in sorted(rows.items()):
+        if m != mesh:
+            continue
+        if r["status"] != "ok":
+            out.append(f"| {arch} | {shape} | {r['status']} | — | — | — | — | — |")
+            continue
+        mem = r.get("memory_analysis", {})
+        args = mem.get("argument_size_in_bytes", 0)
+        out.append(
+            f"| {arch} | {shape} | ok | {r['flops_per_device']:.2e} | "
+            f"{fmt_bytes(r['hbm_bytes_per_device'])} | "
+            f"{fmt_bytes(r['collective_bytes_per_device'])} | "
+            f"{fmt_bytes(args)} | "
+            f"{r['compile_s']['compile']:.1f} |")
+    return "\n".join(out)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--path", default="experiments/dryrun.jsonl")
+    ap.add_argument("--variant", default="baseline")
+    ap.add_argument("--table", default="roofline",
+                    choices=["roofline", "dryrun"])
+    ap.add_argument("--mesh", default="pod")
+    args = ap.parse_args()
+    rows = load(args.path, args.variant)
+    if args.table == "roofline":
+        print(roofline_table(rows, args.mesh))
+    else:
+        print(dryrun_table(rows, args.mesh))
+
+
+if __name__ == "__main__":
+    main()

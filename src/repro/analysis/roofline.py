@@ -1,0 +1,121 @@
+"""Roofline model for TPU v5e from dry-run compiled artifacts.
+
+Hardware constants (per chip):
+  peak bf16 compute : 197 TFLOP/s
+  HBM bandwidth     : 819 GB/s
+  ICI               : ~50 GB/s per link
+
+All inputs are per-device quantities (cost_analysis and as_text both
+describe the partitioned per-device module), so each term is simply
+per-device work / per-chip rate:
+
+  compute    = flops_per_device / peak
+  memory     = hbm_bytes_per_device / hbm_bw
+  collective = sum_k protocol_factor_k * bytes_k / ici_bw
+
+Protocol factors approximate ring implementations on the 2D torus:
+all-reduce 2x (reduce-scatter + all-gather), others 1x on their
+result-byte conventions (see hlo.py).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional
+
+PEAK_FLOPS = 197e12        # bf16 / chip
+HBM_BW = 819e9             # bytes/s / chip
+ICI_BW = 50e9              # bytes/s / link
+
+_PROTOCOL_FACTOR = {
+    "all-reduce": 2.0,
+    "all-gather": 1.0,
+    "reduce-scatter": 1.0,
+    "all-to-all": 1.0,
+    "collective-permute": 1.0,
+}
+
+
+@dataclasses.dataclass
+class Roofline:
+    arch: str
+    shape: str
+    mesh: str
+    flops_per_device: float
+    hbm_bytes_per_device: float
+    collective_bytes: Dict[str, int]
+    chips: int
+    model_flops_total: float = 0.0      # 6*N*D (active) across the step
+    bytes_accessed_peak: float = 0.0    # memory_analysis peak, if available
+
+    @property
+    def t_compute(self) -> float:
+        return self.flops_per_device / PEAK_FLOPS
+
+    @property
+    def t_memory(self) -> float:
+        return self.hbm_bytes_per_device / HBM_BW
+
+    @property
+    def t_collective(self) -> float:
+        t = 0.0
+        for kind, b in self.collective_bytes.items():
+            if kind == "total":
+                continue
+            t += _PROTOCOL_FACTOR.get(kind, 1.0) * b / ICI_BW
+        return t
+
+    @property
+    def bottleneck(self) -> str:
+        terms = {"compute": self.t_compute, "memory": self.t_memory,
+                 "collective": self.t_collective}
+        return max(terms, key=terms.get)
+
+    @property
+    def step_time(self) -> float:
+        """Perfect-overlap lower bound: max of the three terms."""
+        return max(self.t_compute, self.t_memory, self.t_collective)
+
+    @property
+    def useful_flops_ratio(self) -> Optional[float]:
+        """MODEL_FLOPS / total HLO flops — remat/redundancy waste probe."""
+        if not self.model_flops_total:
+            return None
+        return self.model_flops_total / (self.flops_per_device * self.chips)
+
+    @property
+    def mfu_bound(self) -> Optional[float]:
+        """Upper bound on MFU implied by the roofline (useful flops over
+        peak at the bound step time)."""
+        if not self.model_flops_total or self.step_time == 0:
+            return None
+        return (self.model_flops_total / self.chips) / (
+            self.step_time * PEAK_FLOPS)
+
+    def row(self) -> Dict:
+        return {
+            "arch": self.arch, "shape": self.shape, "mesh": self.mesh,
+            "chips": self.chips,
+            "t_compute_s": self.t_compute,
+            "t_memory_s": self.t_memory,
+            "t_collective_s": self.t_collective,
+            "bottleneck": self.bottleneck,
+            "step_time_bound_s": self.step_time,
+            "useful_flops_ratio": self.useful_flops_ratio,
+            "mfu_bound": self.mfu_bound,
+            "flops_per_device": self.flops_per_device,
+            "hbm_bytes_per_device": self.hbm_bytes_per_device,
+            "collective_bytes_per_device": self.collective_bytes.get("total", 0),
+        }
+
+
+def model_flops(cfg, shape) -> float:
+    """6 * N_active * tokens for training; 2 * N_active * tokens for a
+    forward-only step (prefill); decode processes one token per request."""
+    n_active = cfg.param_count(active_only=True)
+    if shape.kind == "train":
+        tokens = shape.seq_len * shape.global_batch
+        return 6.0 * n_active * tokens
+    if shape.kind == "prefill":
+        tokens = shape.seq_len * shape.global_batch
+        return 2.0 * n_active * tokens
+    return 2.0 * n_active * shape.global_batch      # decode: 1 tok/request

@@ -1,0 +1,1 @@
+from .checkpoint import load_step, restore, save

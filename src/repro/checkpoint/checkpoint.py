@@ -1,0 +1,60 @@
+"""Pytree checkpointing: .npz payload + JSON treedef manifest.
+
+Path-keyed (not order-keyed) so checkpoints survive adding/removing
+state fields; supports partial restore and dtype/shape validation.
+"""
+from __future__ import annotations
+
+import json
+import os
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _flatten_with_paths(tree) -> Dict[str, Any]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = "/".join(
+            str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
+        flat[key] = leaf
+    return flat
+
+
+def save(path: str, tree, step: Optional[int] = None) -> None:
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    flat = _flatten_with_paths(tree)
+    arrays = {k: np.asarray(v) for k, v in flat.items()}
+    np.savez(path + ".npz", **arrays)
+    manifest = {
+        "step": step,
+        "leaves": {k: {"shape": list(a.shape), "dtype": str(a.dtype)}
+                   for k, a in arrays.items()},
+    }
+    with open(path + ".json", "w") as f:
+        json.dump(manifest, f, indent=1)
+
+
+def restore(path: str, like_tree) -> Any:
+    """Restore into the structure of ``like_tree`` (path-matched)."""
+    data = np.load(path + ".npz")
+    flat_like = _flatten_with_paths(like_tree)
+    missing = [k for k in flat_like if k not in data.files]
+    if missing:
+        raise KeyError(f"checkpoint missing keys: {missing[:5]}...")
+    leaves_like, treedef = jax.tree_util.tree_flatten(like_tree)
+    paths = list(_flatten_with_paths(like_tree).keys())
+    out = []
+    for key, ref in zip(paths, leaves_like):
+        arr = data[key]
+        if tuple(arr.shape) != tuple(ref.shape):
+            raise ValueError(f"{key}: shape {arr.shape} != {ref.shape}")
+        out.append(jnp.asarray(arr, ref.dtype))
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def load_step(path: str) -> Optional[int]:
+    with open(path + ".json") as f:
+        return json.load(f).get("step")

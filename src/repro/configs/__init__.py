@@ -1,0 +1,33 @@
+"""Architecture config registry: ``get_config(arch_id)`` / ``get_smoke``.
+
+Every assigned architecture is a selectable ``--arch <id>`` config; each
+module cites its source paper / model card.
+"""
+from . import (chameleon_34b, chatglm3_6b, granite_moe_1b, mamba2_370m,
+               minicpm3_4b, mixtral_8x7b, qwen1p5_32b, qwen3_1p7b,
+               whisper_medium, zamba2_1p2b)
+from .base import (ADMMConfig, INPUT_SHAPES, InputShape, MLAConfig,
+                   ModelConfig, MoEConfig, SSMConfig)
+
+_MODULES = [
+    zamba2_1p2b, minicpm3_4b, qwen1p5_32b, whisper_medium, qwen3_1p7b,
+    mixtral_8x7b, granite_moe_1b, mamba2_370m, chameleon_34b, chatglm3_6b,
+]
+
+REGISTRY = {m.ARCH_ID: m for m in _MODULES}
+
+
+def list_archs():
+    return list(REGISTRY)
+
+
+def get_config(arch_id: str):
+    if arch_id not in REGISTRY:
+        raise KeyError(f"unknown arch {arch_id!r}; known: {list_archs()}")
+    return REGISTRY[arch_id].config()
+
+
+def get_smoke(arch_id: str):
+    if arch_id not in REGISTRY:
+        raise KeyError(f"unknown arch {arch_id!r}; known: {list_archs()}")
+    return REGISTRY[arch_id].smoke()

@@ -1,0 +1,7 @@
+from .admm import server_update, theorem1_feasible, worker_update
+from .blocks import (FlatBlocks, TreeBlocks, edge_set_from_support,
+                     make_flat_blocks, make_tree_blocks)
+from .consensus import (AsyBADMMState, ConsensusProblem, asybadmm_step,
+                        init_state, make_problem, make_step_fn, run)
+from .metrics import kkt_violations, stationarity
+from .prox import Regularizer, make_prox, prox_box, prox_l1, soft_threshold

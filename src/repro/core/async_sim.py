@@ -1,0 +1,57 @@
+"""Bounded-delay asynchrony simulation (Assumption 3).
+
+True asynchrony does not exist inside an SPMD program; what the theory
+needs is only *bounded staleness*: z~_j^t = z_j^{t-tau}, tau <= T_ij.
+We reproduce exactly that semantics deterministically:
+
+* a ring buffer keeps the last D+1 versions of every z block
+  (index 0 = newest);
+* each worker draws a per-(i, j) delay tau_ij ~ U{0..D} per step and
+  reads z~_ij = z_hist[tau_ij, j];
+* the server mixes fresh w pushes with its stale w~ cache (eq. 13).
+
+This makes delay a *sweepable, seedable* experiment parameter — the
+tests sweep it to verify the Theorem 1 convergence claims.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def push_history(z_hist, z_new):
+    """z_hist: (D+1, M, dblk); insert z_new at index 0, shifting back."""
+    if z_hist.shape[0] == 1:
+        return z_new[None]
+    return jnp.concatenate([z_new[None], z_hist[:-1]], axis=0)
+
+
+def sample_delays(rng, n_workers: int, n_blocks: int, max_delay: int):
+    """Per-(i,j) integer delays in [0, max_delay]."""
+    if max_delay == 0:
+        return jnp.zeros((n_workers, n_blocks), jnp.int32)
+    return jax.random.randint(rng, (n_workers, n_blocks), 0, max_delay + 1)
+
+
+def gather_delayed(z_hist, delays):
+    """z_hist: (D+1, M, dblk); delays: (N, M) -> z~: (N, M, dblk)."""
+    return z_hist[delays, jnp.arange(z_hist.shape[1])[None, :]]
+
+
+def select_blocks(rng, edge, block_fraction: float):
+    """Per-worker random block selection (Alg. 1 line 4).
+
+    edge: (N, M) bool.  block_fraction == 1 selects every block in N(i)
+    (the synchronous full-sweep limit); otherwise each worker samples
+    ~max(1, frac*|N(i)|) blocks uniformly from its neighborhood without
+    replacement (Gumbel top-k over the edge support).
+    """
+    N, M = edge.shape
+    if block_fraction >= 1.0:
+        return edge
+    k = max(1, int(round(block_fraction * M)))
+    gumbel = jax.random.gumbel(rng, (N, M))
+    scored = jnp.where(edge, gumbel, -jnp.inf)
+    thresh = jax.lax.top_k(scored, k)[0][:, -1:]
+    sel = (scored >= thresh) & edge
+    return sel

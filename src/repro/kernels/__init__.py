@@ -1,0 +1,2 @@
+from . import ops, ref
+from .ops import admm_worker_update, logreg_grad, matmul, prox_consensus

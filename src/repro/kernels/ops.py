@@ -1,0 +1,112 @@
+"""Public jit'd wrappers around the Pallas kernels.
+
+Handle arbitrary shapes/dtypes: flatten to 2D, pad to (8,128) vreg /
+(128,128) MXU alignment, dispatch, slice back. ``interpret`` defaults to
+True off-TPU (this container is CPU-only: interpret mode executes the
+kernel body in Python for validation; on TPU the same code compiles to
+Mosaic).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from . import admm_update as _admm
+from . import logreg_grad as _lg
+from . import prox_update as _prox
+
+LANE = 128
+
+
+def _default_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def _to_2d(v, lane=LANE, sublane=8):
+    """Flatten to (R, lane) with R % sublane == 0; returns (arr2d, orig)."""
+    flat = v.reshape(-1)
+    n = flat.shape[0]
+    row = lane
+    rows = -(-n // row)
+    rows = -(-rows // sublane) * sublane
+    padded = jnp.zeros((rows * row,), v.dtype).at[:n].set(flat)
+    return padded.reshape(rows, row), (v.shape, n)
+
+
+def _from_2d(a2d, orig):
+    shape, n = orig
+    return a2d.reshape(-1)[:n].reshape(shape)
+
+
+@functools.partial(jax.jit, static_argnames=("rho", "interpret"))
+def admm_worker_update(g, y, z_tilde, rho: float,
+                       interpret: Optional[bool] = None):
+    """Fused eqs. (11)+(12)+(9) on arbitrarily-shaped buffers."""
+    interpret = _default_interpret() if interpret is None else interpret
+    g2, orig = _to_2d(g)
+    y2, _ = _to_2d(y)
+    z2, _ = _to_2d(z_tilde)
+    x2, yn2, w2 = _admm.admm_worker_update_2d(g2, y2, z2, rho,
+                                              interpret=interpret)
+    return (_from_2d(x2, orig), _from_2d(yn2, orig), _from_2d(w2, orig))
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("gamma", "l1", "clip", "interpret"))
+def prox_consensus(z_tilde, w_sum, rho_sum, gamma: float, l1: float = 0.0,
+                   clip: float = 0.0, interpret: Optional[bool] = None):
+    """Fused eq. (13). z_tilde, w_sum: (M, d); rho_sum: (M,) or (M, 1)."""
+    interpret = _default_interpret() if interpret is None else interpret
+    M, d = z_tilde.shape
+    rho_sum = rho_sum.reshape(M, 1).astype(z_tilde.dtype)
+    dp = -(-d // LANE) * LANE
+    Mp = -(-M // _prox.BLK_M) * _prox.BLK_M
+    zt = jnp.zeros((Mp, dp), z_tilde.dtype).at[:M, :d].set(z_tilde)
+    ws = jnp.zeros((Mp, dp), w_sum.dtype).at[:M, :d].set(w_sum)
+    rs = jnp.ones((Mp, 1), z_tilde.dtype).at[:M].set(rho_sum)
+    out = _prox.prox_consensus_2d(zt, ws, rs, gamma, l1, clip,
+                                  interpret=interpret)
+    return out[:M, :d]
+
+
+def _pad2(a, rm, cm):
+    r, c = a.shape
+    rp, cp = -(-r // rm) * rm, -(-c // cm) * cm
+    if (rp, cp) == (r, c):
+        return a
+    return jnp.zeros((rp, cp), a.dtype).at[:r, :c].set(a)
+
+
+@functools.partial(jax.jit, static_argnames=("transpose_a", "interpret"))
+def matmul(a, b, transpose_a: bool = False,
+           interpret: Optional[bool] = None):
+    interpret = _default_interpret() if interpret is None else interpret
+    if transpose_a:
+        K, M = a.shape
+    else:
+        M, K = a.shape
+    N = b.shape[1]
+    ap = _pad2(a, _lg.BLK, _lg.BLK)
+    bp = _pad2(b, _lg.BLK, _lg.BLK)
+    out = _lg.matmul(ap, bp, transpose_a=transpose_a, interpret=interpret)
+    return out[:M, :N]
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def logreg_grad(X, y, w, interpret: Optional[bool] = None):
+    """Gradient of mean logistic loss: X (m, d), y (m,) in {-1,+1},
+    w (d,). Composition of three kernels; X^T never materialized."""
+    interpret = _default_interpret() if interpret is None else interpret
+    m, d = X.shape
+    Xp = _pad2(X, _lg.BLK, _lg.BLK)
+    mp, dp = Xp.shape
+    wp = jnp.zeros((dp, LANE), X.dtype).at[:d, 0].set(w)
+    s = _lg.matmul(Xp, wp, interpret=interpret)            # (mp, 128)
+    yp = jnp.zeros((mp, LANE), X.dtype).at[:m, 0].set(y)
+    mask = jnp.zeros((mp, LANE), X.dtype).at[:m, 0].set(1.0)
+    v = _lg.margin(s, yp, interpret=interpret) * mask      # zero padded rows
+    g = _lg.matmul(Xp, v, transpose_a=True, interpret=interpret)  # (dp, 128)
+    return g[:d, 0] / m

@@ -1,0 +1,42 @@
+"""Pure-jnp oracles for every Pallas kernel (the correctness contract).
+
+Tests sweep shapes/dtypes and assert the kernels (interpret mode on CPU,
+compiled on TPU) match these to numerical tolerance.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def admm_worker_update_ref(g, y, z_tilde, rho: float):
+    """Fused eqs. (11)+(12)+(9): returns (x, y_new, w)."""
+    x = z_tilde - (g + y) / rho
+    y_new = y + rho * (x - z_tilde)      # == -g
+    w = rho * x + y_new
+    return x, y_new, w
+
+
+def prox_consensus_ref(z_tilde, w_sum, rho_sum, gamma: float,
+                       l1: float, clip: float):
+    """Fused eq. (13) with h = l1*|.|_1 + box(clip).
+    z_tilde, w_sum: (M, d); rho_sum: (M, 1)."""
+    mu = gamma + rho_sum
+    v = (gamma * z_tilde + w_sum) / mu
+    u = jnp.sign(v) * jnp.maximum(jnp.abs(v) - l1 / mu, 0.0) if l1 > 0 else v
+    if clip > 0:
+        u = jnp.clip(u, -clip, clip)
+    return u
+
+
+def logreg_margin_ref(X, y, w):
+    """v = -y * sigmoid(-y * (X @ w)) — per-sample dloss/dmargin."""
+    s = X @ w
+    return -y * jax.nn.sigmoid(-y * s)
+
+
+def logreg_grad_ref(X, y, w):
+    """grad of mean_i log(1+exp(-y_i x_i.w)) wrt w (eq. 22 smooth part)."""
+    m = X.shape[0]
+    v = logreg_margin_ref(X, y, w)
+    return (X.T @ v) / m

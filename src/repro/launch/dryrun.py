@@ -1,0 +1,357 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# The two lines above MUST run before any other import (jax locks the
+# device count at first init). 512 host devices back both production
+# meshes; single-pod runs slice the first 256.
+"""Multi-pod dry-run: lower + compile every (arch x input-shape) step on
+the production meshes, record memory/cost/collective analysis.
+
+  PYTHONPATH=src python -m repro.launch.dryrun --mesh pod [--arch A] \
+      [--shape S] [--out out.jsonl] [--perf-variant NAME]
+
+Shapes map to programs:
+  train_4k              -> ADMM consensus train_step (the paper's technique)
+  prefill_32k           -> full-sequence forward (serving prefill)
+  decode_32k, long_500k -> one-token decode_step against a full KV cache
+
+long_500k is skipped for pure full-attention archs (DESIGN.md §5).
+"""
+import argparse
+import dataclasses
+import json
+import sys
+import time
+import traceback
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from ..analysis.hlo import collective_bytes, count_ops
+from ..analysis.hlo_cost import analyze_hlo
+from ..analysis.roofline import Roofline, model_flops
+from ..configs import INPUT_SHAPES, get_config, list_archs
+from ..configs.base import ADMMConfig
+from ..models import build_model
+from ..training.trainer import ADMMTrainer
+from . import shardings as sh
+from .mesh import data_axes, make_production_mesh, num_workers
+
+DTYPE = "bfloat16"
+
+
+# ---------------------------------------------------------------------------
+# input specs (ShapeDtypeStruct stand-ins, shardings attached — no
+# device allocation anywhere)
+# ---------------------------------------------------------------------------
+
+def _sds(shape, dtype, mesh, spec):
+    return jax.ShapeDtypeStruct(shape, dtype,
+                                sharding=NamedSharding(mesh, spec))
+
+
+def _with_sharding(shape_tree, spec_tree, mesh):
+    return jax.tree.map(
+        lambda s, p: jax.ShapeDtypeStruct(s.shape, s.dtype,
+                                          sharding=NamedSharding(mesh, p)),
+        shape_tree, spec_tree,
+        is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct))
+
+
+def input_specs(cfg, shape, mesh, *, worker_axis: bool,
+                batch_over_model: bool = False):
+    """Training/prefill batch specs for one input shape."""
+    daxes = data_axes(mesh)
+    N = num_workers(mesh)
+    B, S = shape.global_batch, shape.seq_len
+    if worker_axis:
+        assert B % N == 0, (B, N)
+        tok_shape = (N, B // N, S)
+        ms = mesh.shape.get("model", 1)
+        if batch_over_model and (B // N) % ms == 0:
+            spec = P(daxes, "model", None)
+        else:
+            spec = P(daxes, None, None)
+    else:
+        tok_shape = (B, S)
+        spec = P(daxes, None) if B % N == 0 else P(None, None)
+    batch = {
+        "tokens": _sds(tok_shape, jnp.int32, mesh, spec),
+        "labels": _sds(tok_shape, jnp.int32, mesh, spec),
+    }
+    if cfg.is_enc_dec:
+        # stubbed modality frontend: precomputed frame embeddings
+        fr_shape = tok_shape[:-1] + (cfg.encoder_seq_len, cfg.d_model)
+        fr_spec = P(*((daxes,) + (None,) * (len(fr_shape) - 1)))
+        batch["enc_frames"] = _sds(fr_shape, jnp.dtype(DTYPE), mesh, fr_spec)
+    return batch
+
+
+def admm_config(mesh) -> ADMMConfig:
+    """Paper-faithful baseline: block-wise consensus with bounded delay 1,
+    full block sweep per round (see EXPERIMENTS.md §Perf for the
+    block-selection variants)."""
+    return ADMMConfig(rho=100.0, gamma=0.01, max_delay=1,
+                      block_fraction=1.0, num_blocks=mesh.shape["model"])
+
+
+# ---------------------------------------------------------------------------
+# program builders — each returns (fn, example_args) ready to lower
+# ---------------------------------------------------------------------------
+
+def _apply_cfg_variants(cfg, tokens):
+    if "chunked_attn" in tokens:
+        cfg = cfg.with_(attn_impl="chunked", attn_chunk=1024)
+    if "qchunk_attn" in tokens:
+        cfg = cfg.with_(attn_impl="qchunk", attn_chunk=2048)
+    if "moe_scatter" in tokens:
+        cfg = cfg.with_(moe_impl="scatter")
+    if "no_remat" in tokens:
+        cfg = cfg.with_(remat=False)
+    for t in tokens:
+        if t.startswith("ssm_chunk_") and cfg.ssm is not None:
+            cfg = cfg.with_(ssm=dataclasses.replace(
+                cfg.ssm, chunk_size=int(t.rsplit("_", 1)[1])))
+    return cfg
+
+
+def build_train(cfg, shape, mesh, variant: str = "baseline"):
+    tokens = set(variant.split("+"))
+    cfg = _apply_cfg_variants(cfg.with_(dtype=DTYPE, param_dtype=DTYPE,
+                                        remat=True), tokens)
+    from ..models import set_activation_sharding
+    if "act_replicated" in tokens:
+        # pin the residual stream replicated over the model axis: the
+        # column/row-parallel einsums then need no activation all-gather
+        # (only the row-parallel partial-sum all-reduce remains)
+        def _constrain(x):
+            if x.ndim >= 2:
+                return jax.lax.with_sharding_constraint(
+                    x, P(*([None] * x.ndim)))
+            return x
+        set_activation_sharding(_constrain)
+    else:
+        set_activation_sharding(None)
+    model = build_model(cfg)
+    N = num_workers(mesh)
+    acfg = admm_config(mesh)
+    if "sync" in tokens or "cyclic" in tokens:
+        acfg = dataclasses.replace(acfg, max_delay=0)
+    trainer = ADMMTrainer(loss_fn=model.loss, admm=acfg, num_workers=N)
+    cyclic = "cyclic" in tokens
+    mode = "fsdp" if "fsdp" in tokens else "tp"
+
+    params_shape = model.param_specs()
+    state_shape = jax.eval_shape(lambda p: trainer.init(p, cyclic=cyclic),
+                                 params_shape)
+    state_spec = sh.admm_state_specs(state_shape, mesh, mode=mode,
+                                     expert_parallel="expert_parallel" in tokens)
+    state_in = _with_sharding(state_shape, state_spec, mesh)
+    batch_in = input_specs(cfg, shape, mesh, worker_axis=True,
+                           batch_over_model="batch_over_model" in tokens)
+
+    out_sh = (jax.tree.map(lambda s: NamedSharding(mesh, s), state_spec,
+                           is_leaf=lambda x: isinstance(x, P)), None)
+    if cyclic:
+        # Gauss-Seidel round for block 0 — representative of every round
+        fn = jax.jit(lambda st, b: trainer.train_step_block(st, b, 0),
+                     out_shardings=out_sh, donate_argnums=(0,))
+    else:
+        fn = jax.jit(trainer.train_step, out_shardings=out_sh,
+                     donate_argnums=(0,))
+    return fn, (state_in, batch_in)
+
+
+def build_prefill(cfg, shape, mesh, variant: str = "baseline"):
+    tokens = set(variant.split("+"))
+    cfg = _apply_cfg_variants(cfg.with_(dtype=DTYPE, param_dtype=DTYPE),
+                              tokens)
+    model = build_model(cfg)
+    params_shape = model.param_specs()
+    pspec = sh.param_specs(params_shape, mesh,
+                           mode="fsdp" if "fsdp" in tokens else "tp",
+                           expert_parallel="expert_parallel" in tokens)
+    params_in = _with_sharding(params_shape, pspec, mesh)
+    batch = input_specs(cfg, shape, mesh, worker_axis=False)
+
+    logits_mode = "last" if "last_logits" in tokens else "all"
+
+    def prefill(params, tokens, enc_frames=None):
+        return model.prefill(params, tokens, enc_frames=enc_frames,
+                             logits_mode=logits_mode)
+
+    args = (params_in, batch["tokens"])
+    if cfg.is_enc_dec:
+        fn = jax.jit(lambda p, t, e: model.prefill(p, t, enc_frames=e,
+                                                   logits_mode=logits_mode))
+        return fn, args + (batch["enc_frames"],)
+    return jax.jit(prefill), args
+
+
+def build_decode(cfg, shape, mesh):
+    cfg = cfg.with_(dtype=DTYPE, param_dtype=DTYPE)
+    model = build_model(cfg)
+    params_shape = model.param_specs()
+    pspec = sh.param_specs(params_shape, mesh)
+    params_in = _with_sharding(params_shape, pspec, mesh)
+
+    B, S = shape.global_batch, shape.seq_len
+    cache_shape = model.cache_specs(B, S)
+    cspec = sh.cache_specs_tree(cache_shape, mesh, B)
+    cache_in = _with_sharding(cache_shape, cspec, mesh)
+
+    daxes = data_axes(mesh)
+    N = num_workers(mesh)
+    tok_spec = P(daxes, None) if B % N == 0 else P(None, None)
+    token_in = _sds((B, 1), jnp.int32, mesh, tok_spec)
+    pos_in = _sds((), jnp.int32, mesh, P())
+
+    fn = jax.jit(
+        lambda p, t, c, pos: model.decode_step(p, t, c, pos),
+        out_shardings=(None, jax.tree.map(
+            lambda s: NamedSharding(mesh, s), cspec,
+            is_leaf=lambda x: isinstance(x, P))),
+        donate_argnums=(2,))
+    return fn, (params_in, token_in, cache_in, pos_in)
+
+
+def build(arch: str, shape_name: str, mesh, variant: str = "baseline"):
+    cfg = get_config(arch)
+    shape = INPUT_SHAPES[shape_name]
+    if shape.kind == "train":
+        return build_train(cfg, shape, mesh, variant)
+    if shape.kind == "prefill":
+        return build_prefill(cfg, shape, mesh, variant)
+    return build_decode(cfg, shape, mesh)
+
+
+def skip_reason(arch: str, shape_name: str) -> Optional[str]:
+    cfg = get_config(arch)
+    if shape_name == "long_500k" and not cfg.sub_quadratic:
+        return "full-attention arch: 500k decode requires sub-quadratic attention (DESIGN.md §5)"
+    return None
+
+
+# ---------------------------------------------------------------------------
+# analysis of one compiled program
+# ---------------------------------------------------------------------------
+
+def analyze(arch: str, shape_name: str, mesh_name: str, mesh, lowered,
+            compiled, elapsed: Dict[str, float]) -> Dict[str, Any]:
+    cfg = get_config(arch)
+    shape = INPUT_SHAPES[shape_name]
+    chips = int(np.prod(list(mesh.shape.values())))
+
+    cost = compiled.cost_analysis() or {}
+    xla_flops = float(cost.get("flops", 0.0))
+    xla_bytes = float(cost.get("bytes accessed", 0.0))
+
+    mem: Dict[str, float] = {}
+    try:
+        ma = compiled.memory_analysis()
+        if ma is not None:
+            for k in ("argument_size_in_bytes", "output_size_in_bytes",
+                      "temp_size_in_bytes", "alias_size_in_bytes",
+                      "generated_code_size_in_bytes"):
+                v = getattr(ma, k, None)
+                if v is not None:
+                    mem[k] = float(v)
+    except Exception as e:                                    # CPU backend gaps
+        mem["error"] = str(e)
+
+    hlo = compiled.as_text()
+    ops = count_ops(hlo)
+    # trip-count-aware analysis (XLA cost_analysis counts while bodies
+    # once — see analysis/hlo_cost.py)
+    hc = analyze_hlo(hlo)
+    coll = {k: int(v) for k, v in hc.coll.items()}
+    coll["total"] = int(sum(hc.coll.values()))
+
+    rl = Roofline(arch=arch, shape=shape_name, mesh=mesh_name,
+                  flops_per_device=hc.flops,
+                  hbm_bytes_per_device=hc.hbm_bytes,
+                  collective_bytes=coll, chips=chips,
+                  model_flops_total=model_flops(cfg, shape))
+    row = rl.row()
+    row.update({
+        "collectives": coll, "op_counts": ops, "memory_analysis": mem,
+        "collectives_unscaled": collective_bytes(hlo),
+        "xla_cost_analysis": {"flops": xla_flops, "bytes": xla_bytes},
+        "hlo_bytes": len(hlo),
+        "compile_s": elapsed,
+        "per_device_state_bytes": mem.get("argument_size_in_bytes", 0),
+    })
+    return row
+
+
+def run_one(arch: str, shape_name: str, mesh_name: str,
+            variant: str = "baseline") -> Dict[str, Any]:
+    mesh = make_production_mesh(multi_pod=(mesh_name == "multipod"))
+    reason = skip_reason(arch, shape_name)
+    base = {"arch": arch, "shape": shape_name, "mesh": mesh_name,
+            "variant": variant}
+    if reason:
+        return dict(base, status="skipped", reason=reason)
+    t0 = time.time()
+    fn, args = build(arch, shape_name, mesh, variant)
+    with mesh:
+        lowered = fn.lower(*args)
+        t1 = time.time()
+        compiled = lowered.compile()
+        t2 = time.time()
+    row = analyze(arch, shape_name, mesh_name, mesh, lowered, compiled,
+                  {"lower": t1 - t0, "compile": t2 - t1})
+    row.update(base)
+    row["status"] = "ok"
+    return row
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", default="pod", choices=["pod", "multipod", "both"])
+    ap.add_argument("--variant", default="baseline")
+    ap.add_argument("--out", default="experiments/dryrun.jsonl")
+    args = ap.parse_args()
+
+    archs = [args.arch] if args.arch else list_archs()
+    shapes = [args.shape] if args.shape else list(INPUT_SHAPES)
+    meshes = ["pod", "multipod"] if args.mesh == "both" else [args.mesh]
+
+    os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+    n_fail = 0
+    with open(args.out, "a") as f:
+        for mesh_name in meshes:
+            for arch in archs:
+                for shape_name in shapes:
+                    tag = f"{arch} x {shape_name} x {mesh_name} [{args.variant}]"
+                    t0 = time.time()
+                    try:
+                        row = run_one(arch, shape_name, mesh_name, args.variant)
+                    except Exception as e:
+                        n_fail += 1
+                        row = {"arch": arch, "shape": shape_name,
+                               "mesh": mesh_name, "variant": args.variant,
+                               "status": "error", "error": repr(e),
+                               "traceback": traceback.format_exc()[-3000:]}
+                    row["wall_s"] = time.time() - t0
+                    f.write(json.dumps(row) + "\n")
+                    f.flush()
+                    status = row["status"]
+                    extra = (f" bottleneck={row.get('bottleneck')}"
+                             f" t=({row.get('t_compute_s', 0):.2e},"
+                             f"{row.get('t_memory_s', 0):.2e},"
+                             f"{row.get('t_collective_s', 0):.2e})s"
+                             if status == "ok" else
+                             row.get("reason", row.get("error", "")))
+                    print(f"[{status:7s}] {tag:60s} {row['wall_s']:6.1f}s {extra}",
+                          flush=True)
+    print(f"done; {n_fail} failures")
+    sys.exit(1 if n_fail else 0)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,49 @@
+"""Production mesh construction.
+
+Defined as functions (never module-level constants) so importing this
+module never touches jax device state — smoke tests must keep seeing the
+single real CPU device; only dryrun.py forces 512 host devices.
+
+Production target: TPU v5e, 256 chips/pod (16x16), optionally 2 pods.
+  single pod : (data=16, model=16)            axes ("data", "model")
+  multi pod  : (pod=2, data=16, model=16)     axes ("pod", "data", "model")
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    import numpy as np
+    n = int(np.prod(shape))
+    devs = jax.devices()
+    if len(devs) < n:
+        raise RuntimeError(
+            f"need {n} devices (set XLA_FLAGS=--xla_force_host_platform_"
+            f"device_count=512 before importing jax); have {len(devs)}")
+    return jax.make_mesh(shape, axes, devices=devs[:n])
+
+
+def make_test_mesh(devices: int = 8):
+    """Small host-device mesh for CPU integration tests (requires the
+    test to have set xla_force_host_platform_device_count)."""
+    model = 2
+    data = devices // model
+    return jax.make_mesh((data, model), ("data", "model"))
+
+
+def data_axes(mesh) -> tuple:
+    return tuple(a for a in mesh.axis_names if a in ("pod", "data"))
+
+
+def num_workers(mesh) -> int:
+    n = 1
+    for a in data_axes(mesh):
+        n *= mesh.shape[a]
+    return n
+
+
+def model_axis_size(mesh) -> int:
+    return mesh.shape.get("model", 1)

@@ -1,0 +1,181 @@
+"""Sharding rules: map params / optimizer state / inputs / caches to
+PartitionSpecs on the production mesh.
+
+Parameter rule (tensor parallelism over the ``model`` axis):
+  * stacked layer leaves carry a leading (num_layers,) scan axis — skipped;
+  * shard the *last* dim divisible by the model-axis size, preferring the
+    largest; replicate if nothing divides (tiny norms/biases).
+
+ADMM state rule:
+  * z_hist leaves: leading (D+1,) ring axis skipped, then the param rule;
+  * y / w_cache leaves: leading (N,) worker axis sharded over the data
+    axes (each worker's duals live with its data shard), then the param
+    rule on the rest — per-device cost 2P/model_size (DESIGN.md §4).
+
+Input rule:
+  * worker-batched train inputs (N, b, ...): N over the data axes;
+  * flat batch (B, ...): B over data axes if divisible, else replicated;
+  * decode KV caches: batch over data axes if divisible; the *sequence*
+    dim over ``model`` (decode attention then auto-partitions into
+    per-shard partial softmax + a tiny cross-shard combine).
+"""
+from __future__ import annotations
+
+from typing import Any, Optional
+
+import jax
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from .mesh import data_axes, model_axis_size
+
+
+def _shard_param_dims(shape, model_size: int, skip_leading: int = 0):
+    spec = [None] * len(shape)
+    # prefer the largest dim (ties -> later dim); require divisibility
+    best, best_size = None, 0
+    for i in range(skip_leading, len(shape)):
+        if shape[i] % model_size == 0 and shape[i] >= model_size:
+            if shape[i] >= best_size:
+                best, best_size = i, shape[i]
+    if best is not None:
+        spec[best] = "model"
+    return spec
+
+
+def _is_stacked(path) -> bool:
+    """Leaves under 'layers'/'enc_layers' carry a leading scan axis."""
+    for p in path:
+        key = getattr(p, "key", None)
+        if key in ("layers", "enc_layers"):
+            return True
+    return False
+
+
+def _is_moe_expert(path) -> bool:
+    keys = [getattr(p, "key", None) for p in path]
+    return "moe" in keys and keys[-1] in ("w_gate", "w_up", "w_down")
+
+
+def param_specs(params_shape, mesh, *, mode: str = "tp",
+                expert_parallel: bool = False) -> Any:
+    """mode="tp"   — Megatron-style tensor parallel (shard a weight dim);
+    mode="fsdp" — shard the stacked *layer* axis over ``model``: the layer
+    scan gathers one layer's weights per step (ZeRO-3 over depth) and
+    activations stay replicated on the model axis — zero activation
+    collectives, weight gathers only (EXPERIMENTS.md §Perf).
+    expert_parallel — shard MoE expert stacks on the *expert* dim instead
+    of the tiny per-expert ff dim; dispatch becomes an all-to-all."""
+    ms = model_axis_size(mesh)
+
+    def spec_for(path, leaf):
+        stacked = _is_stacked(path)
+        if expert_parallel and _is_moe_expert(path):
+            edim = 1 if stacked else 0           # (L, E, a, b) / (E, a, b)
+            if leaf.shape[edim] % ms == 0:
+                spec = [None] * len(leaf.shape)
+                spec[edim] = "model"
+                return P(*spec)
+        if mode == "fsdp" and stacked and leaf.shape[0] % ms == 0:
+            return P(*(["model"] + [None] * (len(leaf.shape) - 1)))
+        skip = 1 if stacked else 0
+        return P(*_shard_param_dims(leaf.shape, ms, skip))
+
+    return jax.tree_util.tree_map_with_path(spec_for, params_shape)
+
+
+def admm_state_specs(state_shape, mesh, *, mode: str = "tp",
+                     expert_parallel: bool = False) -> Any:
+    """Specs for ADMMTrainState(z_hist, y, w_cache, step, rng)."""
+    ms = model_axis_size(mesh)
+    daxes = data_axes(mesh)
+
+    def _ep_spec(path, leaf, lead):
+        if expert_parallel and _is_moe_expert(path):
+            stacked = _is_stacked(path)
+            edim = lead + (1 if stacked else 0)
+            if edim < len(leaf.shape) and leaf.shape[edim] % ms == 0:
+                spec = [None] * len(leaf.shape)
+                spec[edim] = "model"
+                return spec
+        return None
+
+    def z_spec(path, leaf):
+        ep = _ep_spec(path, leaf, 1)
+        if ep is not None:
+            return P(*ep)
+        stacked = _is_stacked(path)
+        if mode == "fsdp" and stacked and len(leaf.shape) > 1 \
+                and leaf.shape[1] % ms == 0:
+            return P(*([None, "model"] + [None] * (len(leaf.shape) - 2)))
+        skip = 2 if stacked else 1                 # (D+1, [L], ...)
+        return P(*([None] + _shard_param_dims(leaf.shape, ms, skip)[1:]))
+
+    def worker_spec(path, leaf):
+        ep = _ep_spec(path, leaf, 1)
+        if ep is not None:
+            ep[0] = daxes
+            return P(*ep)
+        stacked = _is_stacked(path)
+        if mode == "fsdp" and stacked and len(leaf.shape) > 1 \
+                and leaf.shape[1] % ms == 0:
+            return P(*([daxes, "model"] + [None] * (len(leaf.shape) - 2)))
+        skip = 2 if stacked else 1                 # (N, [L], ...)
+        inner = _shard_param_dims(leaf.shape, ms, skip)[1:]
+        return P(*([daxes] + inner))
+
+    from ..training.train_state import ADMMTrainState
+    return ADMMTrainState(
+        z_hist=jax.tree_util.tree_map_with_path(z_spec, state_shape.z_hist),
+        y=jax.tree_util.tree_map_with_path(worker_spec, state_shape.y),
+        w_cache=jax.tree_util.tree_map_with_path(worker_spec, state_shape.w_cache),
+        step=P(), rng=P())
+
+
+def batch_specs(batch_shape, mesh, *, worker_axis: bool) -> Any:
+    daxes = data_axes(mesh)
+    ndev = int(np.prod([mesh.shape[a] for a in daxes]))
+
+    def spec_for(leaf):
+        if worker_axis:
+            return P(*([daxes] + [None] * (len(leaf.shape) - 1)))
+        if leaf.shape and leaf.shape[0] % ndev == 0 and leaf.shape[0] >= ndev:
+            return P(*([daxes] + [None] * (len(leaf.shape) - 1)))
+        return P(*([None] * len(leaf.shape)))
+
+    return jax.tree.map(spec_for, batch_shape)
+
+
+def cache_specs_tree(cache_shape, mesh, batch: int) -> Any:
+    """Decode cache sharding. Leaves (layer-stacked):
+       gqa k/v:      (L, B, S, nkv, hd)   -> B over data (if divisible),
+                                            S over model
+       mla c_kv:     (L, B, S, rank)      -> same
+       ssm conv:     (L, B, W-1, convdim) -> B data, convdim model
+       ssm state:    (L, B, h, n, p)      -> B data, h over model if div.
+       cross k/v:    (L, B, T, nkv, hd)   -> B data, T model
+    Heuristic: leading (L,) skipped; batch dim -> data if divisible;
+    the largest remaining dim divisible by model size -> model."""
+    daxes = data_axes(mesh)
+    ndev = int(np.prod([mesh.shape[a] for a in daxes]))
+    ms = model_axis_size(mesh)
+
+    def spec_for(leaf):
+        dims = [None] * len(leaf.shape)
+        # dim 0 = layer stack, dim 1 = batch
+        if len(leaf.shape) >= 2 and leaf.shape[1] % ndev == 0 and leaf.shape[1] >= ndev:
+            dims[1] = daxes
+        best, best_size = None, 0
+        for i in range(2, len(leaf.shape)):
+            if leaf.shape[i] % ms == 0 and leaf.shape[i] >= ms and leaf.shape[i] > best_size:
+                best, best_size = i, leaf.shape[i]
+        if best is not None:
+            dims[best] = "model"
+        return P(*dims)
+
+    return jax.tree.map(spec_for, cache_shape)
+
+
+def named(mesh, spec_tree):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), spec_tree,
+                        is_leaf=lambda x: isinstance(x, P))

@@ -1,0 +1,3 @@
+from .model import Model, build_model
+from .transformer import (decode_step, forward, init_cache, init_cache_specs,
+                          init_params, set_activation_sharding)

@@ -1,0 +1,385 @@
+"""Attention variants used by the assigned architectures.
+
+Supports: MHA / GQA (grouped KV heads), QKV bias (Qwen1.5 / ChatGLM),
+qk-norm (Qwen3 / Chameleon), partial RoPE (ChatGLM "2d"), sliding-window
+(Mixtral), cross-attention (Whisper), and MLA — Multi-head Latent
+Attention (MiniCPM3 / DeepSeek-V2) with the *absorbed* decode path that
+attends directly over the latent cache.
+
+Two entry points per variant:
+  *_forward : full-sequence (training / prefill); optionally returns a cache
+  *_decode  : one-token step against a pre-filled cache (decode shapes)
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from .layers import apply_rope, causal_mask, dense_init, rmsnorm
+
+
+# --------------------------------------------------------------------------
+# parameter init
+# --------------------------------------------------------------------------
+
+def init_attention(key, cfg, *, cross: bool = False):
+    d, hd = cfg.d_model, cfg.resolved_head_dim
+    nq, nkv = cfg.num_heads, cfg.num_kv_heads
+    ks = jax.random.split(key, 8)
+    dt = jnp.dtype(cfg.param_dtype)
+    if cfg.mla is not None and not cross:
+        m = cfg.mla
+        qk_dim = m.qk_nope_head_dim + m.qk_rope_head_dim
+        return {
+            "w_dq": dense_init(ks[0], d, m.q_lora_rank, dt),
+            "q_norm": jnp.ones((m.q_lora_rank,), dt),
+            "w_uq": dense_init(ks[1], m.q_lora_rank, nq * qk_dim, dt),
+            "w_dkv": dense_init(ks[2], d, m.kv_lora_rank + m.qk_rope_head_dim, dt),
+            "kv_norm": jnp.ones((m.kv_lora_rank,), dt),
+            "w_uk": dense_init(ks[3], m.kv_lora_rank, nq * m.qk_nope_head_dim, dt),
+            "w_uv": dense_init(ks[4], m.kv_lora_rank, nq * m.v_head_dim, dt),
+            "w_o": dense_init(ks[5], nq * m.v_head_dim, d, dt),
+        }
+    p = {
+        "w_q": dense_init(ks[0], d, nq * hd, dt),
+        "w_k": dense_init(ks[1], d, nkv * hd, dt),
+        "w_v": dense_init(ks[2], d, nkv * hd, dt),
+        "w_o": dense_init(ks[3], nq * hd, d, dt),
+    }
+    if cfg.qkv_bias:
+        p["b_q"] = jnp.zeros((nq * hd,), dt)
+        p["b_k"] = jnp.zeros((nkv * hd,), dt)
+        p["b_v"] = jnp.zeros((nkv * hd,), dt)
+    if cfg.qk_norm:
+        p["q_norm"] = jnp.ones((hd,), dt)
+        p["k_norm"] = jnp.ones((hd,), dt)
+    return p
+
+
+# --------------------------------------------------------------------------
+# GQA core
+# --------------------------------------------------------------------------
+
+def _project_qkv(params, x, cfg, positions, *, rope: bool = True):
+    B, S, _ = x.shape
+    hd, nq, nkv = cfg.resolved_head_dim, cfg.num_heads, cfg.num_kv_heads
+    q = x @ params["w_q"]
+    k = x @ params["w_k"]
+    v = x @ params["w_v"]
+    if cfg.qkv_bias:
+        q, k, v = q + params["b_q"], k + params["b_k"], v + params["b_v"]
+    q = q.reshape(B, S, nq, hd)
+    k = k.reshape(B, S, nkv, hd)
+    v = v.reshape(B, S, nkv, hd)
+    if cfg.qk_norm:
+        q = rmsnorm(q, params["q_norm"], cfg.norm_eps)
+        k = rmsnorm(k, params["k_norm"], cfg.norm_eps)
+    if rope:
+        q = apply_rope(q, positions, cfg.rope_theta, cfg.rope_fraction)
+        k = apply_rope(k, positions, cfg.rope_theta, cfg.rope_fraction)
+    return q, k, v
+
+
+def _sdpa(q, k, v, mask, nq, nkv):
+    """q: (B,S,nq,hd) k/v: (B,T,nkv,hd); mask broadcastable (S,T) or None."""
+    hd = q.shape[-1]
+    group = nq // nkv
+    B, S = q.shape[:2]
+    T = k.shape[1]
+    q = q.reshape(B, S, nkv, group, hd)
+    scores = jnp.einsum("bsngh,btnh->bngst", q, k).astype(jnp.float32)
+    scores = scores / jnp.sqrt(hd).astype(jnp.float32)
+    if mask is not None:
+        scores = jnp.where(mask[None, None, None, :, :], scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1).astype(v.dtype)
+    out = jnp.einsum("bngst,btnh->bsngh", probs, v)
+    return out.reshape(B, S, nq * hd)
+
+
+def _sdpa_chunked(q, k, v, nq, nkv, *, causal=True, window=None,
+                  chunk=1024):
+    """Flash-style online-softmax attention: O(S*chunk) memory instead of
+    O(S^2). Pure JAX (lax.scan over query and kv chunks) so XLA/SPMD can
+    partition it; running (max, sum, out) accumulators in f32."""
+    B, S, _, hd = q.shape
+    T = k.shape[1]
+    group = nq // nkv
+    qc = min(chunk, S)
+    kc = min(chunk, T)
+    pad_q, pad_k = (-S) % qc, (-T) % kc
+    if pad_q:
+        q = jnp.pad(q, ((0, 0), (0, pad_q), (0, 0), (0, 0)))
+    if pad_k:
+        k = jnp.pad(k, ((0, 0), (0, pad_k), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad_k), (0, 0), (0, 0)))
+    nQ, nK = (S + pad_q) // qc, (T + pad_k) // kc
+    qb = jnp.moveaxis(q.reshape(B, nQ, qc, nkv, group, hd), 1, 0)
+    kb = jnp.moveaxis(k.reshape(B, nK, kc, nkv, hd), 1, 0)
+    vb = jnp.moveaxis(v.reshape(B, nK, kc, nkv, hd), 1, 0)
+    scale = 1.0 / jnp.sqrt(hd).astype(jnp.float32)
+
+    def q_step(_, qi_and_idx):
+        qt, qi = qi_and_idx                          # (B,qc,nkv,g,hd), ()
+        q_pos = qi * qc + jnp.arange(qc)
+
+        def kv_step(carry, kv):
+            m, l, o = carry
+            kt, vt, ki = kv
+            k_pos = ki * kc + jnp.arange(kc)
+            s = jnp.einsum("bqngh,bknh->bngqk", qt, kt).astype(jnp.float32)
+            s = s * scale
+            valid = k_pos[None, :] < T
+            if causal:
+                valid = valid & (k_pos[None, :] <= q_pos[:, None])
+            if window is not None:
+                valid = valid & (k_pos[None, :] > q_pos[:, None] - window)
+            s = jnp.where(valid[None, None, None], s, -1e30)
+            m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l_new = l * corr + jnp.sum(p, axis=-1)
+            o_new = (o * corr[..., None]
+                     + jnp.einsum("bngqk,bknh->bngqh", p.astype(vt.dtype)
+                                  .astype(jnp.float32),
+                                  vt.astype(jnp.float32)))
+            return (m_new, l_new, o_new), None
+
+        m0 = jnp.full((B, nkv, group, qc), -jnp.inf, jnp.float32)
+        l0 = jnp.zeros((B, nkv, group, qc), jnp.float32)
+        o0 = jnp.zeros((B, nkv, group, qc, hd), jnp.float32)
+        (m, l, o), _ = jax.lax.scan(
+            kv_step, (m0, l0, o0), (kb, vb, jnp.arange(nK)))
+        o = o / jnp.maximum(l[..., None], 1e-30)
+        return None, o                               # (B,nkv,g,qc,hd)
+
+    _, outs = jax.lax.scan(q_step, None, (qb, jnp.arange(nQ)))
+    out = jnp.moveaxis(outs, 0, 3)                   # (B,nkv,g,nQ,qc,hd)
+    out = out.transpose(0, 3, 4, 1, 2, 5).reshape(B, nQ * qc, nq * hd)
+    return out[:, :S].astype(q.dtype)
+
+
+def _sdpa_qchunk(q, k, v, nq, nkv, *, causal=True, window=None,
+                 chunk=2048):
+    """Query-chunked attention: scan over query tiles, full-width keys.
+
+    Unlike the kv-scanned online-softmax variant, there are NO carried
+    accumulators — each scan step reads (K, V) and writes its output
+    tile once, so the only large transient is one (qc, T) score tile.
+    This is the better XLA realization (a while-loop carry round-trips
+    HBM every iteration; ys-stacked outputs are written once).
+    """
+    B, S, _, hd = q.shape
+    T = k.shape[1]
+    group = nq // nkv
+    qc = min(chunk, S)
+    pad_q = (-S) % qc
+    if pad_q:
+        q = jnp.pad(q, ((0, 0), (0, pad_q), (0, 0), (0, 0)))
+    nQ = (S + pad_q) // qc
+    qb = jnp.moveaxis(q.reshape(B, nQ, qc, nkv, group, hd), 1, 0)
+    scale = 1.0 / jnp.sqrt(hd).astype(jnp.float32)
+    k_pos = jnp.arange(T)
+
+    def q_step(_, qt_and_idx):
+        qt, qi = qt_and_idx                          # (B,qc,nkv,g,hd)
+        q_pos = qi * qc + jnp.arange(qc)
+        s = jnp.einsum("bqngh,bknh->bngqk", qt, k).astype(jnp.float32) * scale
+        valid = jnp.ones((qc, T), bool)
+        if causal:
+            valid = valid & (k_pos[None, :] <= q_pos[:, None])
+        if window is not None:
+            valid = valid & (k_pos[None, :] > q_pos[:, None] - window)
+        s = jnp.where(valid[None, None, None], s, -1e30)
+        p = jax.nn.softmax(s, axis=-1).astype(v.dtype)
+        o = jnp.einsum("bngqk,bknh->bqngh", p, v)
+        return None, o.reshape(o.shape[0], qc, nq * hd)
+
+    _, outs = jax.lax.scan(q_step, None, (qb, jnp.arange(nQ)))
+    out = jnp.moveaxis(outs, 0, 1).reshape(B, nQ * qc, nq * hd)
+    return out[:, :S]
+
+
+def _sdpa_flash(q, k, v, nq, nkv, *, causal=True):
+    """Dispatch into the Pallas flash kernel (kernels/flash_attention.py).
+    Interpret-mode on CPU (tests), Mosaic on TPU. Requires no sliding
+    window (callers fall back to qchunk for SWA)."""
+    from ..kernels.flash_attention import flash_attention_bhsd
+    B, S, _, hd = q.shape
+    group = nq // nkv
+    kr = jnp.repeat(k, group, axis=2)                # expand GQA kv heads
+    vr = jnp.repeat(v, group, axis=2)
+    scale = 1.0 / (hd ** 0.5)
+    pad_s = (-S) % 128
+    hd_p = max(128, -(-hd // 128) * 128)
+    def prep(t):
+        t = jnp.pad(t, ((0, 0), (0, pad_s), (0, 0), (0, hd_p - hd)))
+        return t.transpose(0, 2, 1, 3).reshape(B * nq, S + pad_s, hd_p)
+    out = flash_attention_bhsd(prep(q), prep(kr), prep(vr), causal=causal,
+                               scale=scale)
+    out = out.reshape(B, nq, S + pad_s, hd_p)[:, :, :S, :hd]
+    return out.transpose(0, 2, 1, 3).reshape(B, S, nq * hd)
+
+
+def gqa_forward(params, x, cfg, positions, *, window=None, causal=True,
+                return_cache=False):
+    q, k, v = _project_qkv(params, x, cfg, positions)
+    S = x.shape[1]
+    if cfg.attn_impl == "flash" and window is None:
+        out = _sdpa_flash(q, k, v, cfg.num_heads, cfg.num_kv_heads,
+                          causal=causal) @ params["w_o"]
+        if return_cache:
+            return out, {"k": k, "v": v}
+        return out
+    if cfg.attn_impl == "qchunk":
+        out = _sdpa_qchunk(q, k, v, cfg.num_heads, cfg.num_kv_heads,
+                           causal=causal, window=window,
+                           chunk=cfg.attn_chunk) @ params["w_o"]
+        if return_cache:
+            return out, {"k": k, "v": v}
+        return out
+    if cfg.attn_impl == "chunked":
+        out = _sdpa_chunked(q, k, v, cfg.num_heads, cfg.num_kv_heads,
+                            causal=causal, window=window,
+                            chunk=cfg.attn_chunk) @ params["w_o"]
+    else:
+        mask = causal_mask(S, S, 0, window) if causal else None
+        out = _sdpa(q, k, v, mask, cfg.num_heads,
+                    cfg.num_kv_heads) @ params["w_o"]
+    if return_cache:
+        return out, {"k": k, "v": v}
+    return out
+
+
+def gqa_decode(params, x, cfg, cache, pos):
+    """x: (B,1,d); cache: {"k","v"} of shape (B, max_len, nkv, hd); pos: ()
+    scalar — number of tokens already in the cache. Window masking is
+    applied logically (the cache for SWA archs is allocated window-sized
+    by the serving layer; for dry-runs it is seq_len-sized)."""
+    positions = pos + jnp.zeros(x.shape[:2], jnp.int32)
+    q, k, v = _project_qkv(params, x, cfg, positions)
+    ck = jax.lax.dynamic_update_slice(cache["k"], k, (0, pos, 0, 0))
+    cv = jax.lax.dynamic_update_slice(cache["v"], v, (0, pos, 0, 0))
+    T = ck.shape[1]
+    kj = jnp.arange(T)
+    m = kj <= pos
+    if cfg.sliding_window is not None:
+        m = m & (kj > pos - cfg.sliding_window)
+    out = _sdpa(q, ck, cv, m[None, :], cfg.num_heads, cfg.num_kv_heads) @ params["w_o"]
+    return out, {"k": ck, "v": cv}
+
+
+def gqa_cache_spec(cfg, batch: int, max_len: int):
+    hd, nkv = cfg.resolved_head_dim, cfg.num_kv_heads
+    if cfg.sliding_window is not None:
+        max_len = min(max_len, cfg.sliding_window)
+    shape = (batch, max_len, nkv, hd)
+    return {"k": jax.ShapeDtypeStruct(shape, cfg.jnp_dtype()),
+            "v": jax.ShapeDtypeStruct(shape, cfg.jnp_dtype())}
+
+
+# --------------------------------------------------------------------------
+# cross attention (Whisper decoder)
+# --------------------------------------------------------------------------
+
+def cross_attn_forward(params, x, enc_kv, cfg):
+    """enc_kv = (k, v) precomputed from encoder output."""
+    B, S, _ = x.shape
+    hd, nq, nkv = cfg.resolved_head_dim, cfg.num_heads, cfg.num_kv_heads
+    q = (x @ params["w_q"]).reshape(B, S, nq, hd)
+    k, v = enc_kv
+    out = _sdpa(q, k, v, None, nq, nkv)
+    return out @ params["w_o"]
+
+
+def encode_cross_kv(params, enc_out, cfg):
+    B, T, _ = enc_out.shape
+    hd, nkv = cfg.resolved_head_dim, cfg.num_kv_heads
+    k = (enc_out @ params["w_k"]).reshape(B, T, nkv, hd)
+    v = (enc_out @ params["w_v"]).reshape(B, T, nkv, hd)
+    return k, v
+
+
+# --------------------------------------------------------------------------
+# MLA — Multi-head Latent Attention
+# --------------------------------------------------------------------------
+
+def _mla_q(params, x, cfg, positions):
+    m = cfg.mla
+    B, S, _ = x.shape
+    nq = cfg.num_heads
+    cq = rmsnorm(x @ params["w_dq"], params["q_norm"], cfg.norm_eps)
+    q = (cq @ params["w_uq"]).reshape(B, S, nq, m.qk_nope_head_dim + m.qk_rope_head_dim)
+    q_nope, q_rope = q[..., : m.qk_nope_head_dim], q[..., m.qk_nope_head_dim:]
+    q_rope = apply_rope(q_rope, positions, cfg.rope_theta)
+    return q_nope, q_rope
+
+
+def _mla_latent(params, x, cfg, positions):
+    m = cfg.mla
+    dkv = x @ params["w_dkv"]                       # (B,S,rank+rope)
+    c_kv = rmsnorm(dkv[..., : m.kv_lora_rank], params["kv_norm"], cfg.norm_eps)
+    k_rope = dkv[..., m.kv_lora_rank:][:, :, None, :]   # single shared rope head
+    k_rope = apply_rope(k_rope, positions, cfg.rope_theta)[:, :, 0, :]
+    return c_kv, k_rope
+
+
+def mla_forward(params, x, cfg, positions, *, return_cache=False):
+    """Naive (materialized K/V) path — used for train / prefill."""
+    m = cfg.mla
+    B, S, _ = x.shape
+    nq = cfg.num_heads
+    q_nope, q_rope = _mla_q(params, x, cfg, positions)
+    c_kv, k_rope = _mla_latent(params, x, cfg, positions)
+    k_nope = (c_kv @ params["w_uk"]).reshape(B, S, nq, m.qk_nope_head_dim)
+    v = (c_kv @ params["w_uv"]).reshape(B, S, nq, m.v_head_dim)
+    scale = 1.0 / jnp.sqrt(m.qk_nope_head_dim + m.qk_rope_head_dim)
+    scores = (
+        jnp.einsum("bsnh,btnh->bnst", q_nope, k_nope)
+        + jnp.einsum("bsnh,bth->bnst", q_rope, k_rope)
+    ).astype(jnp.float32) * scale
+    mask = causal_mask(S, S, 0)
+    scores = jnp.where(mask[None, None], scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1).astype(v.dtype)
+    out = jnp.einsum("bnst,btnh->bsnh", probs, v).reshape(B, S, -1)
+    out = out @ params["w_o"]
+    if return_cache:
+        return out, {"c_kv": c_kv, "k_rope": k_rope}
+    return out
+
+
+def mla_decode(params, x, cfg, cache, pos):
+    """Absorbed decode: attend over the latent cache directly.
+    score = (q_nope @ W_uk) @ c_kv^T + q_rope @ k_rope^T ; out via W_uv."""
+    m = cfg.mla
+    B = x.shape[0]
+    nq = cfg.num_heads
+    positions = pos + jnp.zeros(x.shape[:2], jnp.int32)
+    q_nope, q_rope = _mla_q(params, x, cfg, positions)      # (B,1,nq,·)
+    c_new, kr_new = _mla_latent(params, x, cfg, positions)
+    c_kv = jax.lax.dynamic_update_slice(cache["c_kv"], c_new, (0, pos, 0))
+    k_rope = jax.lax.dynamic_update_slice(cache["k_rope"], kr_new, (0, pos, 0))
+    w_uk = params["w_uk"].reshape(m.kv_lora_rank, nq, m.qk_nope_head_dim)
+    q_abs = jnp.einsum("bsnh,rnh->bsnr", q_nope, w_uk)      # (B,1,nq,rank)
+    scale = 1.0 / jnp.sqrt(m.qk_nope_head_dim + m.qk_rope_head_dim)
+    scores = (
+        jnp.einsum("bsnr,btr->bnst", q_abs, c_kv)
+        + jnp.einsum("bsnh,bth->bnst", q_rope, k_rope)
+    ).astype(jnp.float32) * scale
+    T = c_kv.shape[1]
+    mask = jnp.arange(T)[None, :] <= pos
+    scores = jnp.where(mask[None, None], scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1).astype(x.dtype)
+    ctx = jnp.einsum("bnst,btr->bsnr", probs, c_kv)         # (B,1,nq,rank)
+    w_uv = params["w_uv"].reshape(m.kv_lora_rank, nq, m.v_head_dim)
+    out = jnp.einsum("bsnr,rnh->bsnh", ctx, w_uv).reshape(B, 1, -1)
+    return out @ params["w_o"], {"c_kv": c_kv, "k_rope": k_rope}
+
+
+def mla_cache_spec(cfg, batch: int, max_len: int):
+    m = cfg.mla
+    return {
+        "c_kv": jax.ShapeDtypeStruct((batch, max_len, m.kv_lora_rank), cfg.jnp_dtype()),
+        "k_rope": jax.ShapeDtypeStruct((batch, max_len, m.qk_rope_head_dim), cfg.jnp_dtype()),
+    }

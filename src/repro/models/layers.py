@@ -1,0 +1,129 @@
+"""Core layer primitives: inits, norms, rotary embeddings, MLPs.
+
+Everything is functional: params are plain nested dicts of jnp arrays,
+layers are pure functions. Layer stacks are scanned (see transformer.py)
+so compile time is depth-independent.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+# --------------------------------------------------------------------------
+# initializers
+# --------------------------------------------------------------------------
+
+def dense_init(key, in_dim: int, out_dim: int, dtype, scale: Optional[float] = None):
+    if scale is None:
+        scale = 1.0 / math.sqrt(in_dim)
+    return (jax.random.normal(key, (in_dim, out_dim)) * scale).astype(dtype)
+
+
+def embed_init(key, vocab: int, dim: int, dtype):
+    return (jax.random.normal(key, (vocab, dim)) * 0.02).astype(dtype)
+
+
+# --------------------------------------------------------------------------
+# norms
+# --------------------------------------------------------------------------
+
+def rmsnorm(x, weight, eps: float = 1e-5):
+    dt = x.dtype
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x32), axis=-1, keepdims=True)
+    y = x32 * jax.lax.rsqrt(var + eps)
+    return (y * weight.astype(jnp.float32)).astype(dt)
+
+
+def rmsnorm_gated(x, weight, gate, eps: float = 1e-5):
+    """Mamba2 gated RMSNorm: norm(x * silu(gate))."""
+    return rmsnorm(x * jax.nn.silu(gate.astype(jnp.float32)).astype(x.dtype), weight, eps)
+
+
+# --------------------------------------------------------------------------
+# rotary position embeddings
+# --------------------------------------------------------------------------
+
+def rope_freqs(head_dim: int, theta: float, fraction: float = 1.0):
+    """Return inverse frequencies for the rotary fraction of the head dim.
+
+    ``fraction < 1`` implements partial rotary ("2d RoPE", ChatGLM style):
+    only the first ``fraction * head_dim`` channels rotate.
+    """
+    rot_dim = int(head_dim * fraction)
+    rot_dim -= rot_dim % 2
+    inv = 1.0 / (theta ** (jnp.arange(0, rot_dim, 2, dtype=jnp.float32) / rot_dim))
+    return inv, rot_dim
+
+
+def apply_rope(x, positions, theta: float, fraction: float = 1.0):
+    """x: (..., seq, heads, head_dim); positions: (..., seq) int32."""
+    head_dim = x.shape[-1]
+    inv, rot_dim = rope_freqs(head_dim, theta, fraction)
+    if rot_dim == 0:
+        return x
+    ang = positions[..., :, None].astype(jnp.float32) * inv[None, :]  # (..., seq, rot/2)
+    cos = jnp.cos(ang)[..., :, None, :]   # (..., seq, 1, rot/2)
+    sin = jnp.sin(ang)[..., :, None, :]
+    xr, xp = x[..., :rot_dim], x[..., rot_dim:]
+    x1, x2 = xr[..., 0::2], xr[..., 1::2]
+    o1 = x1 * cos - x2 * sin
+    o2 = x2 * cos + x1 * sin
+    out = jnp.stack([o1, o2], axis=-1).reshape(xr.shape)
+    return jnp.concatenate([out.astype(x.dtype), xp], axis=-1)
+
+
+# --------------------------------------------------------------------------
+# MLPs
+# --------------------------------------------------------------------------
+
+def init_mlp(key, d_model: int, d_ff: int, act: str, dtype):
+    k1, k2, k3 = jax.random.split(key, 3)
+    if act == "swiglu":
+        return {
+            "w_gate": dense_init(k1, d_model, d_ff, dtype),
+            "w_up": dense_init(k2, d_model, d_ff, dtype),
+            "w_down": dense_init(k3, d_ff, d_model, dtype),
+        }
+    return {
+        "w_up": dense_init(k1, d_model, d_ff, dtype),
+        "w_down": dense_init(k2, d_ff, d_model, dtype),
+    }
+
+
+def mlp(params, x, act: str = "swiglu"):
+    if act == "swiglu":
+        h = jax.nn.silu(x @ params["w_gate"]) * (x @ params["w_up"])
+    else:
+        h = jax.nn.gelu(x @ params["w_up"])
+    return h @ params["w_down"]
+
+
+# --------------------------------------------------------------------------
+# misc
+# --------------------------------------------------------------------------
+
+def causal_mask(q_len: int, kv_len: int, q_offset, window: Optional[int] = None):
+    """Boolean (q_len, kv_len) mask. q position i sits at absolute index
+    q_offset + i; kv index j is absolute j.  window = sliding-window width."""
+    qi = q_offset + jnp.arange(q_len)[:, None]
+    kj = jnp.arange(kv_len)[None, :]
+    m = kj <= qi
+    if window is not None:
+        m = m & (kj > qi - window)
+    return m
+
+
+def cross_entropy(logits, labels, label_mask=None):
+    """Mean token cross-entropy. logits: (B, S, V); labels: (B, S) int32."""
+    logits = logits.astype(jnp.float32)
+    lse = jax.scipy.special.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    nll = lse - gold
+    if label_mask is not None:
+        return jnp.sum(nll * label_mask) / jnp.maximum(jnp.sum(label_mask), 1.0)
+    return jnp.mean(nll)

@@ -1,0 +1,62 @@
+"""Public model API: a thin facade over transformer.py.
+
+``Model`` bundles init / loss / prefill / decode for one ModelConfig.
+The ADMM trainer, serving engine, launcher and tests all go through
+this facade so model families stay interchangeable.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from . import transformer
+from .layers import cross_entropy
+
+
+@dataclasses.dataclass(frozen=True)
+class Model:
+    cfg: Any
+
+    # ---- params ----
+    def init(self, rng) -> Dict[str, Any]:
+        return transformer.init_params(rng, self.cfg)
+
+    def param_specs(self, rng=None):
+        """ShapeDtypeStruct pytree of params without allocating."""
+        return jax.eval_shape(lambda k: transformer.init_params(k, self.cfg),
+                              jax.random.PRNGKey(0))
+
+    # ---- training ----
+    def loss(self, params, batch) -> jax.Array:
+        """batch: {"tokens": (B,S), "labels": (B,S), ["enc_frames"]}."""
+        logits, aux = transformer.forward(
+            params, batch["tokens"], self.cfg,
+            enc_frames=batch.get("enc_frames"))
+        mask = batch.get("label_mask")
+        return cross_entropy(logits, batch["labels"], mask) + aux
+
+    def grad_fn(self):
+        return jax.grad(self.loss)
+
+    # ---- inference ----
+    def prefill(self, params, tokens, enc_frames=None, logits_mode="all"):
+        logits, _ = transformer.forward(params, tokens, self.cfg,
+                                        enc_frames=enc_frames,
+                                        logits_mode=logits_mode)
+        return logits
+
+    def decode_step(self, params, token, cache, pos):
+        return transformer.decode_step(params, token, cache, pos, self.cfg)
+
+    def init_cache(self, batch: int, max_len: int):
+        return transformer.init_cache(self.cfg, batch, max_len)
+
+    def cache_specs(self, batch: int, max_len: int):
+        return transformer.init_cache_specs(self.cfg, batch, max_len)
+
+
+def build_model(cfg) -> Model:
+    return Model(cfg)

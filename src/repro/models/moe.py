@@ -1,0 +1,97 @@
+"""Mixture-of-Experts layer (Mixtral / Granite-MoE families).
+
+TPU-idiomatic GShard-style capacity dispatch: tokens are routed into an
+(experts, capacity, d_model) buffer with one-hot dispatch/combine
+einsums, so compiled FLOPs reflect *active* experts (top-k), not all
+experts — the dense-compute alternative would inflate the roofline by
+E/k. The expert dimension is a natural ADMM *block* axis: a worker batch
+only routes into a subset of experts, giving a genuinely sparse edge set
+E exactly like the paper's sparse-feature examples (DESIGN.md §5).
+
+Router auxiliary load-balance loss follows Switch/Mixtral:
+  aux = E * sum_e( mean_tokens(gate_e) * frac_tokens_routed_to_e )
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .layers import dense_init
+
+
+def init_moe(key, cfg):
+    m = cfg.moe
+    d = cfg.d_model
+    dt = jnp.dtype(cfg.param_dtype)
+    kr, k1, k2, k3 = jax.random.split(key, 4)
+    # experts stacked on a leading axis: (E, d, ff) / (E, ff, d)
+    def expert_stack(k, a, b):
+        keys = jax.random.split(k, m.num_experts)
+        return jnp.stack([dense_init(kk, a, b, dt) for kk in keys])
+    return {
+        "router": dense_init(kr, d, m.num_experts, dt, scale=0.02),
+        "w_gate": expert_stack(k1, d, m.expert_ff),
+        "w_up": expert_stack(k2, d, m.expert_ff),
+        "w_down": expert_stack(k3, m.expert_ff, d),
+    }
+
+
+def moe_forward(params, x, cfg):
+    """x: (B, S, d) -> (y, aux_loss)."""
+    m = cfg.moe
+    capacity_factor = m.capacity_factor
+    B, S, d = x.shape
+    T = B * S
+    E, K = m.num_experts, m.top_k
+    xt = x.reshape(T, d)
+
+    logits = (xt @ params["router"]).astype(jnp.float32)        # (T, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_p, top_e = jax.lax.top_k(probs, K)                      # (T, K)
+    top_p = top_p / jnp.sum(top_p, axis=-1, keepdims=True)      # renormalize
+
+    # ---- load balance auxiliary (Switch eq. 4) ----
+    me = jnp.mean(probs, axis=0)                                # (E,)
+    routed = jax.nn.one_hot(top_e, E, dtype=jnp.float32)        # (T, K, E)
+    ce = jnp.mean(jnp.sum(routed, axis=1), axis=0)              # frac per expert
+    aux = E * jnp.sum(me * ce) * m.router_aux_coef
+
+    # ---- capacity-based dispatch ----
+    C = max(int(T * K / E * capacity_factor), 4)
+    # position of each (token, k) within its expert queue
+    flat_e = top_e.reshape(-1)                                  # (T*K,)
+    onehot = jax.nn.one_hot(flat_e, E, dtype=jnp.int32)         # (T*K, E)
+    pos_in_e = jnp.cumsum(onehot, axis=0) * onehot - 1          # (T*K, E)
+    pos = jnp.sum(pos_in_e * onehot, axis=-1)                   # (T*K,)
+    keep = pos < C
+    gate = top_p.reshape(-1) * keep                             # dropped -> 0
+
+    if cfg.moe_impl == "scatter":
+        # index-based dispatch: O(T*K*d) scatter/gather instead of the
+        # O(T*E*C*d) one-hot einsums (EXPERIMENTS.md §Perf iteration)
+        pos_c = jnp.where(keep, pos, C - 1)
+        x_rep = jnp.repeat(xt, K, axis=0) * keep[:, None].astype(xt.dtype)
+        expert_in = jnp.zeros((E, C, d), xt.dtype).at[flat_e, pos_c].add(x_rep)
+        h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", expert_in, params["w_gate"]))
+        h = h * jnp.einsum("ecd,edf->ecf", expert_in, params["w_up"])
+        expert_out = jnp.einsum("ecf,efd->ecd", h, params["w_down"])
+        picked = expert_out[flat_e, pos_c] * gate[:, None].astype(xt.dtype)
+        yt = picked.reshape(T, K, d).sum(axis=1)
+        return yt.reshape(B, S, d), aux
+
+    disp = (
+        jax.nn.one_hot(flat_e, E, dtype=xt.dtype)[..., None]
+        * jax.nn.one_hot(jnp.where(keep, pos, 0), C, dtype=xt.dtype)[:, None, :]
+        * keep[:, None, None].astype(xt.dtype)
+    )                                                           # (T*K, E, C)
+    disp_t = disp.reshape(T, K, E, C).sum(axis=1)               # (T, E, C)
+    expert_in = jnp.einsum("tec,td->ecd", disp_t, xt)           # (E, C, d)
+
+    h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", expert_in, params["w_gate"]))
+    h = h * jnp.einsum("ecd,edf->ecf", expert_in, params["w_up"])
+    expert_out = jnp.einsum("ecf,efd->ecd", h, params["w_down"])  # (E, C, d)
+
+    comb = (disp.reshape(T, K, E, C) * gate.reshape(T, K)[..., None, None]
+            .astype(xt.dtype)).sum(axis=1)                      # (T, E, C)
+    yt = jnp.einsum("tec,ecd->td", comb, expert_out)
+    return yt.reshape(B, S, d), aux

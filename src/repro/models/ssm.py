@@ -1,0 +1,186 @@
+"""Mamba2 — state-space duality (SSD) block [arXiv:2405.21060].
+
+Training / prefill uses the chunked SSD algorithm: quadratic
+attention-like compute *within* chunks of length Q plus a linear
+recurrence *across* chunks (scanned), giving O(L·Q) work and O(1)-state
+decode. Decode is the pure SSM recurrence: one state update per token —
+this is what makes the ssm/hybrid archs eligible for the long_500k
+shape (DESIGN.md §5).
+
+Layout notation: b=batch, l=seq, c=chunks, q=chunk pos, h=heads,
+p=head channels, n=state dim, g=groups (we use g=1, broadcast to h).
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .layers import dense_init, rmsnorm_gated
+
+
+def _dims(cfg):
+    s = cfg.ssm
+    d_inner = s.expand * cfg.d_model
+    nheads = d_inner // s.head_dim
+    conv_dim = d_inner + 2 * s.state_dim  # x + B + C (g=1)
+    return d_inner, nheads, conv_dim
+
+
+def init_mamba2(key, cfg):
+    s = cfg.ssm
+    d = cfg.d_model
+    d_inner, nheads, conv_dim = _dims(cfg)
+    dt = jnp.dtype(cfg.param_dtype)
+    ks = jax.random.split(key, 5)
+    in_dim = 2 * d_inner + 2 * s.state_dim + nheads  # z, xBC, dt
+    return {
+        "w_in": dense_init(ks[0], d, in_dim, dt),
+        "conv_w": (jax.random.normal(ks[1], (s.conv_width, conv_dim)) * 0.1).astype(dt),
+        "conv_b": jnp.zeros((conv_dim,), dt),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, nheads)).astype(dt),
+        "D": jnp.ones((nheads,), dt),
+        "dt_bias": jnp.zeros((nheads,), dt),
+        "norm_w": jnp.ones((d_inner,), dt),
+        "w_out": dense_init(ks[4], d_inner, d, dt),
+    }
+
+
+def _split_in(params, u, cfg):
+    s = cfg.ssm
+    d_inner, nheads, conv_dim = _dims(cfg)
+    zxbcdt = u @ params["w_in"]
+    z = zxbcdt[..., :d_inner]
+    xBC = zxbcdt[..., d_inner : d_inner + conv_dim]
+    dt_raw = zxbcdt[..., d_inner + conv_dim :]
+    return z, xBC, dt_raw
+
+
+def _causal_conv(params, xBC, cfg, conv_state=None):
+    """Depthwise causal conv over seq. conv_state: (B, W-1, conv_dim) or None."""
+    W = cfg.ssm.conv_width
+    if conv_state is None:
+        pad = jnp.zeros((xBC.shape[0], W - 1, xBC.shape[-1]), xBC.dtype)
+    else:
+        pad = conv_state
+    xp = jnp.concatenate([pad, xBC], axis=1)              # (B, L+W-1, C)
+    out = sum(xp[:, i : i + xBC.shape[1], :] * params["conv_w"][i] for i in range(W))
+    out = jax.nn.silu(out + params["conv_b"])
+    new_state = xp[:, -(W - 1):, :]
+    return out, new_state
+
+
+def ssd_chunked(x, dt, A, B, C, chunk: int, init_state=None):
+    """Chunked SSD scan.
+    x: (b,l,h,p)  dt: (b,l,h)  A: (h,)  B,C: (b,l,n)  (g=1, broadcast to h)
+    Returns y: (b,l,h,p), final_state: (b,h,n,p)."""
+    b, l, h, p = x.shape
+    n = B.shape[-1]
+    Q = min(chunk, l)
+    pad = (-l) % Q
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        B = jnp.pad(B, ((0, 0), (0, pad), (0, 0)))
+        C = jnp.pad(C, ((0, 0), (0, pad), (0, 0)))
+    L = l + pad
+    nc = L // Q
+    xc = x.reshape(b, nc, Q, h, p)
+    dtc = dt.reshape(b, nc, Q, h)
+    Bc = B.reshape(b, nc, Q, n)
+    Cc = C.reshape(b, nc, Q, n)
+
+    dA = dtc * A[None, None, None, :]                     # (b,nc,Q,h) negative
+    cum = jnp.cumsum(dA, axis=2)
+    # intra-chunk: (scores ∘ decay ∘ causal) @ (dt*x)
+    # mask the exponent BEFORE exp: for j > i the difference is positive
+    # and exp overflows to inf, which poisons the backward pass even
+    # under a post-hoc where (inf * 0 = nan in the VJP).
+    diff = cum[:, :, :, None, :] - cum[:, :, None, :, :]  # (b,nc,i,j,h)
+    causal = jnp.tril(jnp.ones((Q, Q), bool))
+    diff = jnp.where(causal[None, None, :, :, None], diff, -jnp.inf)
+    decay = jnp.exp(diff)
+    scores = jnp.einsum("bcin,bcjn->bcij", Cc, Bc)        # (b,nc,Q,Q)
+    dtx = xc * dtc[..., None]                             # (b,nc,Q,h,p)
+    y_intra = jnp.einsum("bcij,bcijh,bcjhp->bcihp", scores, decay, dtx)
+
+    # chunk end states
+    decay_to_end = jnp.exp(cum[:, :, -1:, :] - cum)       # (b,nc,Q,h)
+    S = jnp.einsum("bcjn,bcjh,bcjhp->bchnp", Bc, decay_to_end, dtx)
+    chunk_decay = jnp.exp(cum[:, :, -1, :])               # (b,nc,h)
+
+    if init_state is None:
+        init_state = jnp.zeros((b, h, n, p), x.dtype)
+
+    def step(carry, inp):
+        S_c, cd = inp                                     # (b,h,n,p), (b,h)
+        new = carry * cd[:, :, None, None] + S_c
+        return new, carry                                 # emit state *before* chunk
+
+    final, states_before = jax.lax.scan(
+        step, init_state, (jnp.moveaxis(S, 1, 0), jnp.moveaxis(chunk_decay, 1, 0)))
+    states_before = jnp.moveaxis(states_before, 0, 1)     # (b,nc,h,n,p)
+
+    y_inter = jnp.einsum("bcin,bcih,bchnp->bcihp", Cc, jnp.exp(cum), states_before)
+    y = (y_intra + y_inter).reshape(b, L, h, p)
+    return y[:, :l], final
+
+
+def mamba2_forward(params, u, cfg, *, return_cache=False, init_cache=None):
+    """u: (B, L, d_model) -> (B, L, d_model)."""
+    s = cfg.ssm
+    d_inner, nheads, _ = _dims(cfg)
+    B_, L, _ = u.shape
+    z, xBC, dt_raw = _split_in(params, u, cfg)
+    conv_state = None if init_cache is None else init_cache["conv"]
+    xBC, new_conv = _causal_conv(params, xBC, cfg, conv_state)
+    x = xBC[..., :d_inner].reshape(B_, L, nheads, s.head_dim)
+    Bmat = xBC[..., d_inner : d_inner + s.state_dim]
+    Cmat = xBC[..., d_inner + s.state_dim :]
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + params["dt_bias"].astype(jnp.float32))
+    A = -jnp.exp(params["A_log"].astype(jnp.float32))
+    init_state = None if init_cache is None else init_cache["ssm"]
+    y, final_state = ssd_chunked(
+        x.astype(jnp.float32), dt, A, Bmat.astype(jnp.float32),
+        Cmat.astype(jnp.float32), s.chunk_size, init_state)
+    y = y + x.astype(jnp.float32) * params["D"].astype(jnp.float32)[None, None, :, None]
+    y = y.reshape(B_, L, d_inner).astype(u.dtype)
+    y = rmsnorm_gated(y, params["norm_w"], z, cfg.norm_eps)
+    out = y @ params["w_out"]
+    if return_cache:
+        return out, {"conv": new_conv, "ssm": final_state.astype(jnp.float32)}
+    return out
+
+
+def mamba2_decode(params, u, cfg, cache):
+    """One-token step. u: (B,1,d); cache: {"conv": (B,W-1,convdim),
+    "ssm": (B,h,n,p)}."""
+    s = cfg.ssm
+    d_inner, nheads, _ = _dims(cfg)
+    B_ = u.shape[0]
+    z, xBC, dt_raw = _split_in(params, u, cfg)
+    xBC, new_conv = _causal_conv(params, xBC, cfg, cache["conv"])
+    x = xBC[:, 0, :d_inner].reshape(B_, nheads, s.head_dim)
+    Bmat = xBC[:, 0, d_inner : d_inner + s.state_dim].astype(jnp.float32)
+    Cmat = xBC[:, 0, d_inner + s.state_dim :].astype(jnp.float32)
+    dt = jax.nn.softplus(dt_raw[:, 0].astype(jnp.float32) + params["dt_bias"].astype(jnp.float32))
+    A = -jnp.exp(params["A_log"].astype(jnp.float32))
+    dA = jnp.exp(dt * A[None, :])                         # (B,h)
+    state = cache["ssm"]
+    dtx = x.astype(jnp.float32) * dt[..., None]           # (B,h,p)
+    new_state = state * dA[:, :, None, None] + jnp.einsum("bn,bhp->bhnp", Bmat, dtx)
+    y = jnp.einsum("bn,bhnp->bhp", Cmat, new_state)
+    y = y + x.astype(jnp.float32) * params["D"].astype(jnp.float32)[None, :, None]
+    y = y.reshape(B_, 1, d_inner).astype(u.dtype)
+    y = rmsnorm_gated(y, params["norm_w"], z, cfg.norm_eps)
+    return y @ params["w_out"], {"conv": new_conv, "ssm": new_state}
+
+
+def mamba2_cache_spec(cfg, batch: int):
+    s = cfg.ssm
+    d_inner, nheads, conv_dim = _dims(cfg)
+    return {
+        "conv": jax.ShapeDtypeStruct((batch, s.conv_width - 1, conv_dim), cfg.jnp_dtype()),
+        "ssm": jax.ShapeDtypeStruct((batch, nheads, s.state_dim, s.head_dim), jnp.float32),
+    }

@@ -1,0 +1,360 @@
+"""Transformer stack composition for all assigned architecture families.
+
+Layer stacks are *scanned* over stacked parameter pytrees so compile time
+and HLO size are depth-independent (crucial for the 62/64-layer dry-runs
+on 512 host devices). Families:
+
+  dense  — [attn + MLP] x L                       (qwen*, minicpm3(MLA),
+                                                   chatglm3, chameleon)
+  moe    — [attn + MoE] x L                       (mixtral, granite)
+  ssm    — [mamba2] x L                           (mamba2-370m)
+  hybrid — groups of k mamba2 layers, a *shared*  (zamba2)
+           attention block applied after each group
+  audio  — encoder (bi-attn) + decoder (self+cross) (whisper; conv
+           frontend stubbed — input is frame embeddings)
+
+Activation-sharding hook: ``set_activation_sharding(fn)`` lets the
+launcher inject ``with_sharding_constraint`` at layer boundaries without
+threading mesh objects through the model code.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from . import attention as attn
+from . import moe as moe_mod
+from . import ssm as ssm_mod
+from .layers import dense_init, embed_init, init_mlp, mlp, rmsnorm
+
+# ---------------------------------------------------------------------------
+# activation sharding hook
+# ---------------------------------------------------------------------------
+
+_ACT_SHARD: Callable[[jax.Array], jax.Array] = lambda x: x
+
+
+def set_activation_sharding(fn: Optional[Callable]) -> None:
+    global _ACT_SHARD
+    _ACT_SHARD = fn if fn is not None else (lambda x: x)
+
+
+def _shard(x):
+    return _ACT_SHARD(x)
+
+
+# ---------------------------------------------------------------------------
+# per-layer init
+# ---------------------------------------------------------------------------
+
+def _init_dense_layer(key, cfg, *, cross: bool = False):
+    ks = jax.random.split(key, 6)
+    dt = jnp.dtype(cfg.param_dtype)
+    p = {
+        "attn": attn.init_attention(ks[0], cfg),
+        "norm1": jnp.ones((cfg.d_model,), dt),
+        "norm2": jnp.ones((cfg.d_model,), dt),
+    }
+    if cfg.moe is not None:
+        p["moe"] = moe_mod.init_moe(ks[1], cfg)
+    else:
+        p["mlp"] = init_mlp(ks[1], cfg.d_model, cfg.d_ff, cfg.act, dt)
+    if cross:
+        p["cross"] = attn.init_attention(ks[2], cfg, cross=True)
+        p["norm_cross"] = jnp.ones((cfg.d_model,), dt)
+    return p
+
+
+def _init_ssm_layer(key, cfg):
+    dt = jnp.dtype(cfg.param_dtype)
+    return {
+        "mamba": ssm_mod.init_mamba2(key, cfg),
+        "norm1": jnp.ones((cfg.d_model,), dt),
+    }
+
+
+def _stack_init(fn, rng, n):
+    keys = jax.random.split(rng, n)
+    return jax.tree.map(lambda *xs: jnp.stack(xs), *[fn(k) for k in keys])
+
+
+def init_params(rng, cfg) -> Dict[str, Any]:
+    ks = jax.random.split(rng, 8)
+    dt = jnp.dtype(cfg.param_dtype)
+    params: Dict[str, Any] = {
+        "embed": embed_init(ks[0], cfg.vocab_size, cfg.d_model, dt),
+        "final_norm": jnp.ones((cfg.d_model,), dt),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = dense_init(ks[1], cfg.d_model, cfg.vocab_size, dt)
+
+    if cfg.arch_type == "ssm":
+        params["layers"] = _stack_init(lambda k: _init_ssm_layer(k, cfg), ks[2], cfg.num_layers)
+    elif cfg.arch_type == "hybrid":
+        params["layers"] = _stack_init(lambda k: _init_ssm_layer(k, cfg), ks[2], cfg.num_layers)
+        params["shared_attn"] = _init_dense_layer(ks[3], cfg)
+    elif cfg.is_enc_dec:
+        params["layers"] = _stack_init(
+            lambda k: _init_dense_layer(k, cfg, cross=True), ks[2], cfg.num_layers)
+        params["enc_layers"] = _stack_init(
+            lambda k: _init_dense_layer(k, cfg), ks[3], cfg.encoder_layers)
+        params["enc_norm"] = jnp.ones((cfg.d_model,), dt)
+    else:
+        params["layers"] = _stack_init(lambda k: _init_dense_layer(k, cfg), ks[2], cfg.num_layers)
+    return params
+
+
+# ---------------------------------------------------------------------------
+# layer application (full sequence)
+# ---------------------------------------------------------------------------
+
+def _dense_layer_fwd(lp, x, cfg, positions, *, causal=True, enc_kv=None):
+    h = rmsnorm(x, lp["norm1"], cfg.norm_eps)
+    if cfg.mla is not None:
+        a = attn.mla_forward(lp["attn"], h, cfg, positions)
+    else:
+        a = attn.gqa_forward(lp["attn"], h, cfg, positions,
+                             window=cfg.sliding_window, causal=causal)
+    x = _shard(x + a)
+    aux = jnp.zeros((), jnp.float32)
+    if enc_kv is not None:
+        c = attn.cross_attn_forward(lp["cross"], rmsnorm(x, lp["norm_cross"], cfg.norm_eps),
+                                    enc_kv, cfg)
+        x = _shard(x + c)
+    h = rmsnorm(x, lp["norm2"], cfg.norm_eps)
+    if cfg.moe is not None:
+        y, aux = moe_mod.moe_forward(lp["moe"], h, cfg)
+    else:
+        y = mlp(lp["mlp"], h, cfg.act)
+    return _shard(x + y), aux
+
+
+def _ssm_layer_fwd(lp, x, cfg):
+    h = rmsnorm(x, lp["norm1"], cfg.norm_eps)
+    return _shard(x + ssm_mod.mamba2_forward(lp["mamba"], h, cfg))
+
+
+def _scan_layers(body, x, stacked, cfg, extra=None):
+    """Scan `body(carry, layer_params)` over the stacked layer axis."""
+    if cfg.remat:
+        body = jax.checkpoint(body, prevent_cse=False)
+
+    def f(carry, lp):
+        return body(carry, lp)
+
+    return jax.lax.scan(f, x, stacked)
+
+
+# ---------------------------------------------------------------------------
+# full-sequence forward (train / prefill)
+# ---------------------------------------------------------------------------
+
+def forward(params, tokens, cfg, *, enc_frames=None, logits_mode="all"):
+    """tokens: (B, S) int32 -> logits (B, S, V).
+
+    enc_frames: (B, T_enc, d_model) precomputed frame/patch embeddings
+    (audio/vlm frontend stub) — required for enc-dec archs.
+    logits_mode="last": project only the final position (serving
+    prefill needs one next-token distribution, not S of them — skips
+    the (B, S, V) logit tensor entirely).
+    """
+    B, S = tokens.shape
+    x = params["embed"][tokens]
+    x = _shard(x)
+    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None, :], (B, S))
+    aux_total = jnp.zeros((), jnp.float32)
+
+    if cfg.arch_type == "ssm":
+        def body(carry, lp):
+            return _ssm_layer_fwd(lp, carry, cfg), None
+        x, _ = _scan_layers(body, x, params["layers"], cfg)
+
+    elif cfg.arch_type == "hybrid":
+        x = _hybrid_forward(params, x, cfg, positions)
+
+    elif cfg.is_enc_dec:
+        enc = _shard(enc_frames.astype(x.dtype))
+        enc_pos = jnp.broadcast_to(
+            jnp.arange(enc.shape[1], dtype=jnp.int32)[None, :], enc.shape[:2])
+
+        def enc_body(carry, lp):
+            y, _ = _dense_layer_fwd(lp, carry, cfg, enc_pos, causal=False)
+            return y, None
+        enc, _ = _scan_layers(enc_body, enc, params["enc_layers"], cfg)
+        enc = rmsnorm(enc, params["enc_norm"], cfg.norm_eps)
+
+        def dec_body(carry, lp):
+            enc_kv = attn.encode_cross_kv(lp["cross"], enc, cfg)
+            y, _ = _dense_layer_fwd(lp, carry, cfg, positions, enc_kv=enc_kv)
+            return y, None
+        x, _ = _scan_layers(dec_body, x, params["layers"], cfg)
+
+    else:
+        def body(carry, lp):
+            y, aux = _dense_layer_fwd(lp, carry[0], cfg, positions)
+            return (y, carry[1] + aux), None
+        (x, aux_total), _ = jax.lax.scan(
+            jax.checkpoint(body, prevent_cse=False) if cfg.remat else body,
+            (x, aux_total), params["layers"])
+
+    if logits_mode == "last":
+        x = x[:, -1:]
+    x = rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    logits = _logits(params, x, cfg)
+    return logits, aux_total
+
+
+def _hybrid_forward(params, x, cfg, positions):
+    k = max(cfg.hybrid_attn_every, 1)
+    n_groups = cfg.num_layers // k
+    rem = cfg.num_layers - n_groups * k
+    stacked = params["layers"]
+
+    def body(carry, lp):
+        return _ssm_layer_fwd(lp, carry, cfg), None
+
+    for g in range(n_groups):
+        group = jax.tree.map(lambda a: a[g * k : (g + 1) * k], stacked)
+        x, _ = _scan_layers(body, x, group, cfg)
+        x, _ = _dense_layer_fwd(params["shared_attn"], x, cfg, positions)
+    if rem:
+        tail = jax.tree.map(lambda a: a[n_groups * k :], stacked)
+        x, _ = _scan_layers(body, x, tail, cfg)
+    return x
+
+
+def _logits(params, x, cfg):
+    if cfg.tie_embeddings:
+        return _shard(x @ params["embed"].T)
+    return _shard(x @ params["lm_head"])
+
+
+# ---------------------------------------------------------------------------
+# decode (one token against a pre-filled cache)
+# ---------------------------------------------------------------------------
+
+def init_cache_specs(cfg, batch: int, max_len: int):
+    """ShapeDtypeStruct pytree for the decode cache (dry-run input_specs)."""
+    L = cfg.num_layers
+
+    def stack_spec(spec_tree, n):
+        return jax.tree.map(
+            lambda s: jax.ShapeDtypeStruct((n,) + s.shape, s.dtype), spec_tree)
+
+    if cfg.arch_type == "ssm":
+        return {"layers": stack_spec(ssm_mod.mamba2_cache_spec(cfg, batch), L)}
+    if cfg.arch_type == "hybrid":
+        k = max(cfg.hybrid_attn_every, 1)
+        n_apps = L // k
+        return {
+            "layers": stack_spec(ssm_mod.mamba2_cache_spec(cfg, batch), L),
+            "shared_attn": stack_spec(attn.gqa_cache_spec(cfg, batch, max_len), n_apps),
+        }
+    if cfg.mla is not None:
+        return {"layers": stack_spec(attn.mla_cache_spec(cfg, batch, max_len), L)}
+    cache = {"layers": stack_spec(attn.gqa_cache_spec(cfg, batch, max_len), L)}
+    if cfg.is_enc_dec:
+        hd, nkv = cfg.resolved_head_dim, cfg.num_kv_heads
+        enc_kv_shape = (L, batch, cfg.encoder_seq_len, nkv, hd)
+        cache["cross_k"] = jax.ShapeDtypeStruct(enc_kv_shape, cfg.jnp_dtype())
+        cache["cross_v"] = jax.ShapeDtypeStruct(enc_kv_shape, cfg.jnp_dtype())
+    return cache
+
+
+def init_cache(cfg, batch: int, max_len: int):
+    return jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype),
+                        init_cache_specs(cfg, batch, max_len))
+
+
+def decode_step(params, token, cache, pos, cfg):
+    """token: (B, 1) int32; pos: () int32 — current cache fill.
+    Returns (logits (B, 1, V), new_cache)."""
+    x = params["embed"][token]
+
+    if cfg.arch_type == "ssm":
+        def body(carry, inp):
+            lp, lc = inp
+            h = rmsnorm(carry, lp["norm1"], cfg.norm_eps)
+            y, nc = ssm_mod.mamba2_decode(lp["mamba"], h, cfg, lc)
+            return carry + y, nc
+        x, new_layer_cache = jax.lax.scan(body, x, (params["layers"], cache["layers"]))
+        new_cache = {"layers": new_layer_cache}
+
+    elif cfg.arch_type == "hybrid":
+        x, new_cache = _hybrid_decode(params, x, cache, pos, cfg)
+
+    elif cfg.is_enc_dec:
+        def body(carry, inp):
+            lp, lc, ck, cv = inp
+            h = rmsnorm(carry, lp["norm1"], cfg.norm_eps)
+            a, nc = attn.gqa_decode(lp["attn"], h, cfg, lc, pos)
+            y = carry + a
+            c = attn.cross_attn_forward(
+                lp["cross"], rmsnorm(y, lp["norm_cross"], cfg.norm_eps), (ck, cv), cfg)
+            y = y + c
+            y = y + mlp(lp["mlp"], rmsnorm(y, lp["norm2"], cfg.norm_eps), cfg.act)
+            return y, nc
+        x, new_layer_cache = jax.lax.scan(
+            body, x, (params["layers"], cache["layers"], cache["cross_k"], cache["cross_v"]))
+        new_cache = dict(cache, layers=new_layer_cache)
+
+    else:
+        def body(carry, inp):
+            lp, lc = inp
+            h = rmsnorm(carry, lp["norm1"], cfg.norm_eps)
+            if cfg.mla is not None:
+                a, nc = attn.mla_decode(lp["attn"], h, cfg, lc, pos)
+            else:
+                a, nc = attn.gqa_decode(lp["attn"], h, cfg, lc, pos)
+            y = carry + a
+            h2 = rmsnorm(y, lp["norm2"], cfg.norm_eps)
+            if cfg.moe is not None:
+                z, _ = moe_mod.moe_forward(lp["moe"], h2, cfg)
+            else:
+                z = mlp(lp["mlp"], h2, cfg.act)
+            return y + z, nc
+        x, new_layer_cache = jax.lax.scan(body, x, (params["layers"], cache["layers"]))
+        new_cache = {"layers": new_layer_cache}
+
+    x = rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    return _logits(params, x, cfg), new_cache
+
+
+def _hybrid_decode(params, x, cache, pos, cfg):
+    k = max(cfg.hybrid_attn_every, 1)
+    n_groups = cfg.num_layers // k
+    rem = cfg.num_layers - n_groups * k
+
+    def body(carry, inp):
+        lp, lc = inp
+        h = rmsnorm(carry, lp["norm1"], cfg.norm_eps)
+        y, nc = ssm_mod.mamba2_decode(lp["mamba"], h, cfg, lc)
+        return carry + y, nc
+
+    new_mamba = []
+    new_attn = []
+    for g in range(n_groups):
+        sl = lambda a, g=g, n=k: a[g * n : (g + 1) * n]
+        x, nm = jax.lax.scan(body, x, (jax.tree.map(sl, params["layers"]),
+                                       jax.tree.map(sl, cache["layers"])))
+        new_mamba.append(nm)
+        ac = jax.tree.map(lambda a, g=g: a[g], cache["shared_attn"])
+        h = rmsnorm(x, params["shared_attn"]["norm1"], cfg.norm_eps)
+        a, nac = attn.gqa_decode(params["shared_attn"]["attn"], h, cfg, ac, pos)
+        x = x + a
+        x = x + mlp(params["shared_attn"]["mlp"],
+                    rmsnorm(x, params["shared_attn"]["norm2"], cfg.norm_eps), cfg.act)
+        new_attn.append(nac)
+    if rem:
+        sl = lambda a: a[n_groups * k :]
+        x, nm = jax.lax.scan(body, x, (jax.tree.map(sl, params["layers"]),
+                                       jax.tree.map(sl, cache["layers"])))
+        new_mamba.append(nm)
+    new_cache = {
+        "layers": jax.tree.map(lambda *xs: jnp.concatenate(xs, axis=0), *new_mamba),
+        "shared_attn": jax.tree.map(lambda *xs: jnp.stack(xs, axis=0), *new_attn),
+    }
+    return x, new_cache

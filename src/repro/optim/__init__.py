@@ -1,0 +1,2 @@
+from .optimizers import Optimizer, adamw, apply_updates, sgd
+from .schedule import constant, warmup_cosine

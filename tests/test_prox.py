@@ -1,0 +1,84 @@
+"""Unit + property tests for proximal operators."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.prox import (make_prox, prox_box, prox_group_lasso, prox_l1,
+                             prox_l2, soft_threshold)
+
+finite_floats = st.floats(-1e3, 1e3, allow_nan=False, allow_infinity=False,
+                          width=32)
+
+
+def test_soft_threshold_values():
+    v = jnp.array([-2.0, -0.5, 0.0, 0.5, 2.0])
+    out = soft_threshold(v, 1.0)
+    np.testing.assert_allclose(out, [-1.0, 0.0, 0.0, 0.0, 1.0])
+
+
+def test_prox_l1_matches_argmin():
+    # brute-force check: prox solves argmin lam|u| + mu/2 (v-u)^2
+    rng = np.random.RandomState(0)
+    v = rng.randn(16).astype(np.float32)
+    lam, mu = 0.3, 2.0
+    u = np.asarray(prox_l1(jnp.asarray(v), lam, mu))
+    grid = np.linspace(-3, 3, 20001)
+    for i in range(16):
+        obj = lam * np.abs(grid) + mu / 2 * (v[i] - grid) ** 2
+        assert abs(grid[obj.argmin()] - u[i]) < 1e-3
+
+
+def test_prox_l2_shrinks():
+    v = jnp.ones(4) * 2.0
+    out = prox_l2(v, lam=1.0, mu=1.0)
+    np.testing.assert_allclose(out, 1.0)
+
+
+def test_group_lasso_zeroes_small_groups():
+    v = jnp.array([0.1, 0.1, 5.0, 5.0])
+    out = prox_group_lasso(v, lam=1.0, mu=1.0, group_size=2)
+    np.testing.assert_allclose(out[:2], 0.0)
+    assert float(jnp.linalg.norm(out[2:])) > 0
+
+
+@given(st.lists(finite_floats, min_size=1, max_size=64),
+       st.floats(0.0, 10.0), st.floats(0.1, 10.0))
+@settings(max_examples=50, deadline=None)
+def test_prox_l1_nonexpansive_and_shrinking(vals, lam, mu):
+    v = jnp.asarray(vals, jnp.float32)
+    u = prox_l1(v, lam, mu)
+    # shrinkage: |u| <= |v| elementwise; sign preserved
+    assert bool(jnp.all(jnp.abs(u) <= jnp.abs(v) + 1e-6))
+    assert bool(jnp.all(u * v >= -1e-6))
+
+
+@given(st.lists(finite_floats, min_size=1, max_size=64),
+       st.floats(0.01, 100.0))
+@settings(max_examples=50, deadline=None)
+def test_box_bounds(vals, clip):
+    v = jnp.asarray(vals, jnp.float32)
+    u = prox_box(v, clip)
+    assert bool(jnp.all(jnp.abs(u) <= clip + 1e-6))
+
+
+@given(st.lists(finite_floats, min_size=2, max_size=32),
+       st.lists(finite_floats, min_size=2, max_size=32),
+       st.floats(0.0, 5.0), st.floats(0.5, 5.0))
+@settings(max_examples=40, deadline=None)
+def test_prox_firm_nonexpansiveness(a, b, lam, mu):
+    """||prox(x)-prox(y)|| <= ||x-y|| — used in the Thm 1 proof (eq. 47)."""
+    n = min(len(a), len(b))
+    x = jnp.asarray(a[:n], jnp.float32)
+    y = jnp.asarray(b[:n], jnp.float32)
+    reg = make_prox(l1_coef=lam, clip=50.0)
+    d_out = float(jnp.linalg.norm(reg.prox(x, mu) - reg.prox(y, mu)))
+    d_in = float(jnp.linalg.norm(x - y))
+    assert d_out <= d_in + 1e-4
+
+
+def test_regularizer_value():
+    reg = make_prox(l1_coef=0.5, clip=10.0, l2_coef=2.0)
+    z = jnp.array([1.0, -2.0])
+    expected = 0.5 * 3.0 + 0.5 * 2.0 * 5.0
+    np.testing.assert_allclose(float(reg.value(z)), expected, rtol=1e-6)

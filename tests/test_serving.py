@@ -1,0 +1,59 @@
+"""Serving engine tests."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke
+from repro.models import build_model
+from repro.serving import Engine
+
+
+@pytest.mark.parametrize("arch", ["qwen3-1.7b", "mamba2-370m", "zamba2-1.2b"])
+def test_greedy_matches_prefill_argmax(arch):
+    """First generated token must equal argmax of the prefill logits at
+    the last prompt position."""
+    cfg = get_smoke(arch)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    prompts = np.random.RandomState(0).randint(0, cfg.vocab_size, (2, 6))
+    res = Engine(model, params, max_len=32).generate(prompts, max_new=4)
+    ref = model.prefill(params, jnp.asarray(prompts))
+    expect = np.asarray(jnp.argmax(ref[:, -1, :], axis=-1))
+    np.testing.assert_array_equal(res.tokens[:, 0], expect)
+    assert res.tokens.shape == (2, 4)
+
+
+def test_generation_deterministic():
+    cfg = get_smoke("qwen3-1.7b")
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    prompts = np.random.RandomState(1).randint(0, cfg.vocab_size, (3, 5))
+    e = Engine(model, params, max_len=24)
+    a = e.generate(prompts, max_new=6).tokens
+    b = e.generate(prompts, max_new=6).tokens
+    np.testing.assert_array_equal(a, b)
+
+
+def test_temperature_sampling_runs():
+    cfg = get_smoke("granite-moe-1b-a400m")
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    prompts = np.zeros((2, 4), np.int64)
+    res = Engine(model, params, max_len=16).generate(
+        prompts, max_new=4, temperature=0.8, seed=3)
+    assert res.tokens.shape == (2, 4)
+    assert res.tokens.max() < cfg.vocab_size
+
+
+def test_enc_dec_serving():
+    cfg = get_smoke("whisper-medium")
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    enc = jnp.asarray(
+        np.random.RandomState(0).randn(2, cfg.encoder_seq_len, cfg.d_model),
+        jnp.float32) * 0.1
+    prompts = np.random.RandomState(2).randint(0, cfg.vocab_size, (2, 4))
+    res = Engine(model, params, max_len=16).generate(prompts, max_new=4,
+                                                     enc_frames=enc)
+    assert res.tokens.shape == (2, 4)
