@@ -11,15 +11,15 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.api import ConsensusSession
 from repro.configs.base import ADMMConfig
-from repro.core import init_state, make_problem, make_step_fn, stationarity
 from repro.data import make_sparse_logreg
 
 EPOCHS = 600
 EVAL_EVERY = 100
 
 
-def build_problem(num_workers=8, dim=512, samples=64, num_blocks=16, seed=0):
+def build_session(cfg, num_workers=8, dim=512, samples=64, seed=0):
     data = make_sparse_logreg(num_workers=num_workers,
                               samples_per_worker=samples, dim=dim,
                               density=0.1, seed=seed)
@@ -28,31 +28,29 @@ def build_problem(num_workers=8, dim=512, samples=64, num_blocks=16, seed=0):
         X, y = d
         return jnp.mean(jnp.log1p(jnp.exp(-y * (X @ z))))
 
-    return make_problem(loss_fn, (jnp.asarray(data.X), jnp.asarray(data.y)),
-                        dim=dim, num_blocks=num_blocks, support=data.support,
-                        l1_coef=1e-3, clip=1e4)
+    return ConsensusSession.flat(
+        loss_fn, (jnp.asarray(data.X), jnp.asarray(data.y)), dim=dim,
+        cfg=cfg, support=data.support, l1_coef=1e-3, clip=1e4)
 
 
-def run_one(prob, cfg, epochs=EPOCHS):
-    state = init_state(prob, cfg)
-    step = make_step_fn(prob, cfg)
-    state = step(state)                      # compile
+def run_one(sess, epochs=EPOCHS):
+    state = sess.init()
+    step = sess.step_fn()
+    state, _ = step(state, sess.data)        # compile
     jax.block_until_ready(state.z_hist)
     t0 = time.perf_counter()
     trace = []
     for t in range(epochs):
-        state = step(state)
+        state, _ = step(state, sess.data)
         if (t + 1) % EVAL_EVERY == 0:
-            z = prob.blocks.from_blocks(state.z_hist[0])
-            trace.append(float(prob.objective(z)))
+            trace.append(sess.objective(state))
     jax.block_until_ready(state.z_hist)
     dt = (time.perf_counter() - t0) / epochs
-    P = float(stationarity(prob, state, cfg.rho)["P"])
+    P = float(sess.stationarity(state)["P"])
     return dt * 1e6, trace, P
 
 
 def main(emit=print):
-    prob = build_problem()
     variants = [
         ("fig2_sync_D0", ADMMConfig(rho=2.0, gamma=0.0, max_delay=0,
                                     block_fraction=1.0, num_blocks=16)),
@@ -67,7 +65,7 @@ def main(emit=print):
                                           seed=4)),
     ]
     for name, cfg in variants:
-        us, trace, P = run_one(prob, cfg)
+        us, trace, P = run_one(build_session(cfg))
         emit(f"{name},{us:.1f},obj={trace[-1]:.4f};P={P:.3e};"
              f"trace={'|'.join(f'{x:.3f}' for x in trace)}")
 

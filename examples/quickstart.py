@@ -3,13 +3,14 @@
     PYTHONPATH=src python examples/quickstart.py
 
 Builds the paper's general-form consensus problem (eq. 4) on synthetic
-sparse data, runs the block-wise asynchronous algorithm (Alg. 1), and
-checks the KKT conditions of Theorem 1 at the solution.
+sparse data through the unified `repro.api.ConsensusSession` surface,
+runs the block-wise asynchronous algorithm (Alg. 1), and checks the KKT
+conditions of Theorem 1 at the solution.
 """
 import jax.numpy as jnp
 
+from repro.api import ConsensusSession
 from repro.configs.base import ADMMConfig
-from repro.core import kkt_violations, make_problem, run, stationarity
 from repro.data import make_sparse_logreg
 
 # ---- data: 8 workers, each touching only part of the feature space ----
@@ -22,21 +23,20 @@ def loss_fn(z, d):
     return jnp.mean(jnp.log1p(jnp.exp(-y * (X @ z))))
 
 
-problem = make_problem(
-    loss_fn, (jnp.asarray(data.X), jnp.asarray(data.y)), dim=512,
-    num_blocks=32, support=data.support,     # sparse edge set E
-    l1_coef=1e-3, clip=1e4)                  # h(z) = λ||z||₁ + box (eq. 22)
-
-print(f"edge density |E|/(N·M) = {float(jnp.mean(problem.edge)):.2f}")
-
 # ---- AsyBADMM: bounded delay 2, each worker updates half its blocks ----
 cfg = ADMMConfig(rho=2.0, gamma=0.1, max_delay=2, block_fraction=0.5,
-                 num_blocks=32)
-state, history = run(problem, cfg, num_epochs=600, eval_every=100)
+                 num_blocks=32, l1_coef=1e-3, clip=1e4)  # h(z) (eq. 22)
+session = ConsensusSession.flat(
+    loss_fn, (jnp.asarray(data.X), jnp.asarray(data.y)), dim=512, cfg=cfg,
+    support=data.support)                                # sparse edge set E
+
+print(f"edge density |E|/(N·M) = {float(jnp.mean(session.spec.edge)):.2f}")
+
+state, history = session.run(num_epochs=600, eval_every=100)
 
 for h in history:
     print(f"epoch {h['epoch']:4d}  objective {h['objective']:.4f}")
 
-print("stationarity P =", float(stationarity(problem, state, cfg.rho)["P"]))
-for k, v in kkt_violations(problem, state, cfg.rho).items():
+print("stationarity P =", float(session.stationarity(state)["P"]))
+for k, v in session.kkt_violations(state).items():
     print(f"{k:15s} = {float(v):.2e}")

@@ -11,8 +11,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.api import ConsensusSession
 from repro.configs.base import ADMMConfig
-from repro.core import make_problem, run, stationarity
 from repro.data import make_sparse_logreg
 from repro.kernels import ops, ref
 
@@ -33,9 +33,11 @@ def main():
         X, y = d
         return jnp.mean(jnp.log1p(jnp.exp(-y * (X @ z))))
 
-    problem = make_problem(
-        loss_fn, (jnp.asarray(data.X), jnp.asarray(data.y)), dim=args.dim,
-        num_blocks=16, support=data.support, l1_coef=1e-3, clip=1e4)
+    def session_for(cfg: ADMMConfig) -> ConsensusSession:
+        return ConsensusSession.flat(
+            loss_fn, (jnp.asarray(data.X), jnp.asarray(data.y)),
+            dim=args.dim, cfg=cfg, support=data.support,
+            l1_coef=1e-3, clip=1e4)
 
     # --- kernel cross-check: fused Pallas gradient == autodiff gradient ---
     X0, y0 = jnp.asarray(data.X[0]), jnp.asarray(data.y[0])
@@ -60,10 +62,11 @@ def main():
     print(f"\n{'variant':30s} {'epochs':>6s} {'objective':>10s} "
           f"{'P':>10s} {'s/epoch':>8s}")
     for name, cfg in variants.items():
+        sess = session_for(cfg)
         t0 = time.time()
-        state, hist = run(problem, cfg, args.epochs, eval_every=args.epochs)
+        state, hist = sess.run(args.epochs, eval_every=args.epochs)
         dt = (time.time() - t0) / args.epochs
-        P = float(stationarity(problem, state, cfg.rho)["P"])
+        P = float(sess.stationarity(state)["P"])
         print(f"{name:30s} {args.epochs:6d} {hist[-1]['objective']:10.4f} "
               f"{P:10.2e} {dt:8.4f}")
 

@@ -4,7 +4,9 @@ block-wise asynchronous consensus trainer for a few hundred steps.
     PYTHONPATH=src python examples/train_transformer_admm.py \
         [--steps 300] [--quick]
 
-Compares AsyBADMM against the synchronous AdamW baseline on the same
+The ADMM side goes through the unified `repro.api.ConsensusSession`
+pytree mode (the same generic Algorithm 1 step the flat driver uses);
+it is compared against the synchronous AdamW baseline on the same
 deterministic token stream (both learn a synthetic bigram language).
 """
 import argparse
@@ -13,11 +15,12 @@ import time
 
 import jax
 
+from repro.api import ConsensusSession
 from repro.configs.base import ADMMConfig, ModelConfig
 from repro.data import TokenPipeline
 from repro.models import build_model
 from repro.optim import adamw, warmup_cosine
-from repro.training import ADMMTrainer, SGDTrainer
+from repro.training import SGDTrainer
 
 
 def model_100m() -> ModelConfig:
@@ -36,6 +39,8 @@ def main():
     ap.add_argument("--workers", type=int, default=4)
     ap.add_argument("--seq", type=int, default=128)
     ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--block-selection", default="random",
+                    choices=["random", "cyclic", "gauss_southwell"])
     args = ap.parse_args()
 
     cfg = model_100m()
@@ -56,14 +61,14 @@ def main():
     pipe = TokenPipeline(vocab_size=data_vocab, seq_len=args.seq + 1,
                          global_batch=args.batch, seed=0, branch=2)
 
-    # ---- AsyBADMM consensus trainer (the paper's technique) ----
-    admm = ADMMTrainer(
-        loss_fn=model.loss,
-        admm=ADMMConfig(rho=8.0, gamma=0.01, max_delay=1,
-                        block_fraction=0.5, num_blocks=8),
+    # ---- AsyBADMM consensus session (the paper's technique) ----
+    admm = ConsensusSession.pytree(
+        model.loss, params,
+        ADMMConfig(rho=8.0, gamma=0.01, max_delay=1, block_fraction=0.5,
+                   num_blocks=8, block_selection=args.block_selection),
         num_workers=args.workers)
-    st_admm = admm.init(params)
-    admm_step = jax.jit(admm.train_step)
+    st_admm = admm.init()
+    admm_step = admm.step_fn()
 
     # ---- AdamW data-parallel baseline ----
     sgd = SGDTrainer(loss_fn=model.loss,
@@ -84,7 +89,7 @@ def main():
                 "admm_loss": round(float(info_a["loss"]), 4),
                 "adamw_loss": round(float(info_s["loss"]), 4),
                 "consensus_residual":
-                    round(float(admm.consensus_residual(st_admm)), 5),
+                    round(admm.consensus_residual(st_admm), 5),
                 "elapsed_s": round(time.time() - t0, 1),
             }), flush=True)
 

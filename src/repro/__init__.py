@@ -1,0 +1,13 @@
+"""repro — AsyBADMM (block-wise asynchronous distributed ADMM for
+general form consensus, arXiv:1802.08882) grown into a jax_pallas
+system. See API.md for the user-facing surface (`repro.api`).
+"""
+import jax as _jax
+
+# Sharding-invariant PRNG: delay sampling and block selection must draw
+# the SAME values whether the (N, M) arrays are replicated on one device
+# or sharded over a mesh — the legacy (non-partitionable) threefry
+# lowering rewrites under SPMD partitioning and diverges, which broke
+# the flat driver's sharded run vs its single-device reference
+# (tests/test_resume_and_distributed.py::test_flat_driver_runs_spmd).
+_jax.config.update("jax_threefry_partitionable", True)

@@ -5,3 +5,8 @@ from .consensus import (AsyBADMMState, ConsensusProblem, asybadmm_step,
                         init_state, make_problem, make_step_fn, run)
 from .metrics import kkt_violations, stationarity
 from .prox import Regularizer, make_prox, prox_box, prox_l1, soft_threshold
+from .space import (BLOCK_SELECTORS, ConsensusSpec, ConsensusState,
+                    ConstantDelay, DelayModel, FlatSpace, SelectorContext,
+                    TreeSpace, UniformDelay, VariableSpace, asybadmm_epoch,
+                    consensus_residual, init_consensus_state, make_spec,
+                    register_block_selector, resolve_block_selector)

@@ -1,7 +1,10 @@
 """Flat-mode AsyBADMM driver — the paper's Algorithm 1, end to end.
 
-One jitted ``step`` advances every worker and every server by one epoch
-under simulated bounded delay. Baselines fall out as config points:
+Since the `VariableSpace` refactor this module is a thin adapter: the
+problem description (``ConsensusProblem``) binds data + regularizer +
+edge set, and every step routes through the generic
+``core.space.asybadmm_epoch`` over a ``FlatSpace``. Baselines fall out
+as config points:
 
 * ``max_delay=0, block_fraction=1``  -> block-wise *synchronous* ADMM (§3.1)
 * ``num_blocks=1, max_delay>0``      -> full-vector asynchronous ADMM
@@ -12,17 +15,20 @@ under simulated bounded delay. Baselines fall out as config points:
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Callable, NamedTuple, Optional
+from typing import Any, Callable, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from ..configs.base import ADMMConfig
-from .admm import server_update, worker_update
-from .async_sim import gather_delayed, push_history, sample_delays, select_blocks
 from .blocks import FlatBlocks, make_flat_blocks
 from .prox import Regularizer, make_prox
+from .space import (ConsensusSpec, ConsensusState, FlatSpace, asybadmm_epoch,
+                    init_consensus_state, make_spec)
+
+# Back-compat alias: the flat driver's state is the generic one.
+AsyBADMMState = ConsensusState
 
 
 @dataclasses.dataclass(frozen=True)
@@ -49,6 +55,16 @@ class ConsensusProblem:
             return jnp.full((self.num_workers,), rho)
         return rho * self.rho_scale
 
+    def space(self) -> FlatSpace:
+        return FlatSpace(blocks=self.blocks, num_workers=self.num_workers)
+
+    def spec(self, cfg: ADMMConfig, **overrides) -> ConsensusSpec:
+        """The generic step spec for this problem under ``cfg``."""
+        kw = dict(edge=self.edge, rho_scale=self.rho_scale, reg=self.reg,
+                  track_x=True)
+        kw.update(overrides)
+        return make_spec(self.space(), cfg, self.loss_fn, **kw)
+
     def worker_loss(self, z_vec, i):
         di = jax.tree.map(lambda a: a[i], self.data)
         return self.loss_fn(z_vec, di)
@@ -63,10 +79,13 @@ def make_problem(loss_fn, data, dim: int, num_blocks: int,
                  support: Optional[np.ndarray] = None,
                  l1_coef: float = 0.0, clip: Optional[float] = None,
                  l2_coef: float = 0.0,
-                 rho_scale: Optional[np.ndarray] = None) -> ConsensusProblem:
+                 rho_scale: Optional[np.ndarray] = None,
+                 edge: Optional[Any] = None) -> ConsensusProblem:
     n = jax.tree.leaves(data)[0].shape[0]
     blocks = make_flat_blocks(dim, num_blocks)
-    if support is not None:
+    if edge is not None:
+        edge = jnp.asarray(edge, bool)
+    elif support is not None:
         from .blocks import edge_set_from_support
         edge = jnp.asarray(edge_set_from_support(np.asarray(support), blocks))
     else:
@@ -77,97 +96,26 @@ def make_problem(loss_fn, data, dim: int, num_blocks: int,
         rho_scale=None if rho_scale is None else jnp.asarray(rho_scale))
 
 
-class AsyBADMMState(NamedTuple):
-    z_hist: jax.Array      # (D+1, M, dblk) ring buffer, index 0 = newest
-    y: jax.Array           # (N, M, dblk) dual blocks (0 outside E)
-    w_cache: jax.Array     # (N, M, dblk) server-side stale w~ cache
-    x: jax.Array           # (N, M, dblk) last primal iterate (for metrics)
-    t: jax.Array           # () int32 epoch
-    rng: jax.Array
-
-    @property
-    def z_blocks(self):
-        return self.z_hist[0]
-
-
 def init_state(problem: ConsensusProblem, cfg: ADMMConfig,
                z0: Optional[jax.Array] = None) -> AsyBADMMState:
-    M, dblk = problem.blocks.num_blocks, problem.blocks.block_dim
-    N = problem.num_workers
-    if z0 is None:
-        z0b = jnp.zeros((M, dblk))
-    else:
-        z0b = problem.blocks.to_blocks(z0)
-    D = cfg.max_delay
-    z_hist = jnp.broadcast_to(z0b, (D + 1, M, dblk)).copy()
-    rho_i = problem.rho_vec(cfg.rho)[:, None, None]
-    return AsyBADMMState(
-        z_hist=z_hist,
-        y=jnp.zeros((N, M, dblk)),                       # Alg.1 line 2
-        w_cache=rho_i * z0b[None] + jnp.zeros((N, M, dblk)),
-        x=jnp.broadcast_to(z0b, (N, M, dblk)).copy(),    # Alg.1 line 1
-        t=jnp.zeros((), jnp.int32),
-        rng=jax.random.PRNGKey(cfg.seed),
-    )
+    return init_consensus_state(problem.spec(cfg), z0)
 
 
 def asybadmm_step(problem: ConsensusProblem, cfg: ADMMConfig,
                   state: AsyBADMMState) -> AsyBADMMState:
     """One epoch of Algorithm 1 across all workers + servers."""
-    N = problem.num_workers
-    M, dblk = problem.blocks.num_blocks, problem.blocks.block_dim
-    rng, r_delay, r_sel = jax.random.split(state.rng, 3)
-
-    # --- each worker pulls (possibly stale) z~ per block (Assumption 3) ---
-    delays = sample_delays(r_delay, N, M, cfg.max_delay)
-    z_tilde = gather_delayed(state.z_hist, delays)       # (N, M, dblk)
-
-    # --- local gradients at z~ (eq. 5 linearization point) ---
-    def gfun(zb, di):
-        zv = problem.blocks.from_blocks(zb)
-        return jax.grad(problem.loss_fn)(zv, di)
-    g = jax.vmap(gfun)(z_tilde, problem.data)            # (N, d)
-    gb = problem.blocks.to_blocks(g)                     # (N, M, dblk)
-
-    # --- block selection (Alg. 1 line 4; paper also cites Gauss-Seidel
-    #     and Gauss-Southwell alternatives [Hong et al. 2016b]) ---
-    if cfg.block_selection == "cyclic":
-        j = jnp.mod(state.t, M)
-        sel = jax.nn.one_hot(j, M, dtype=bool)[None, :] & problem.edge
-        sel = sel | (~jnp.any(sel, axis=1, keepdims=True)
-                     & select_blocks(r_sel, problem.edge, cfg.block_fraction))
-    elif cfg.block_selection == "gauss_southwell":
-        gnorm = jnp.sum(jnp.square(gb), axis=-1)          # (N, M)
-        gnorm = jnp.where(problem.edge, gnorm, -jnp.inf)
-        k = max(1, int(round(cfg.block_fraction * M)))
-        thresh = jax.lax.top_k(gnorm, k)[0][:, -1:]
-        sel = (gnorm >= thresh) & problem.edge
-    else:
-        sel = select_blocks(r_sel, problem.edge, cfg.block_fraction)
-    selm = sel[..., None]
-
-    # --- worker update (11)(12)(9), masked to selected blocks ---
-    rho_i = problem.rho_vec(cfg.rho)[:, None, None]       # (N, 1, 1)
-    x_new, y_new, w_new = worker_update(gb, state.y, z_tilde, rho_i)
-    x = jnp.where(selm, x_new, state.x)
-    y = jnp.where(selm, y_new, state.y)
-    w_cache = jnp.where(selm, w_new, state.w_cache)      # push w to server j
-
-    # --- server update (13): fresh w for pushers, stale cache otherwise ---
-    edge_m = problem.edge[..., None]
-    w_sum = jnp.sum(jnp.where(edge_m, w_cache, 0.0), axis=0)      # (M, dblk)
-    rho_sum = jnp.sum(jnp.where(problem.edge, rho_i[:, :, 0], 0.0),
-                      axis=0)[:, None]                            # (M, 1)
-    z_cur = state.z_hist[0]
-    z_new = server_update(z_cur, w_sum, rho_sum, cfg.gamma, problem.reg.prox)
-
-    return AsyBADMMState(
-        z_hist=push_history(state.z_hist, z_new),
-        y=y, w_cache=w_cache, x=x, t=state.t + 1, rng=rng)
+    new, _ = asybadmm_epoch(problem.spec(cfg), state, problem.data)
+    return new
 
 
 def make_step_fn(problem: ConsensusProblem, cfg: ADMMConfig):
-    return jax.jit(lambda s: asybadmm_step(problem, cfg, s))
+    spec = problem.spec(cfg)
+    data = problem.data
+
+    def step(state):
+        new, _ = asybadmm_epoch(spec, state, data)
+        return new
+    return jax.jit(step)
 
 
 def run(problem: ConsensusProblem, cfg: ADMMConfig, num_epochs: int,

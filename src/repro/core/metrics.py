@@ -13,9 +13,17 @@ import jax.numpy as jnp
 from .consensus import AsyBADMMState, ConsensusProblem
 
 
+def _rho_b(rho):
+    """Accept a scalar rho or a per-worker (N,) rho_i vector and return
+    it broadcastable against (N, M, dblk) worker bundles."""
+    rho = jnp.asarray(rho)
+    return rho[:, None, None] if rho.ndim == 1 else rho
+
+
 def stationarity(problem: ConsensusProblem, state: AsyBADMMState,
-                 rho: float) -> dict:
+                 rho) -> dict:
     blocks = problem.blocks
+    rho = _rho_b(rho)
     edge_m = problem.edge[..., None]                       # (N, M, 1)
     zb = state.z_hist[0]                                   # (M, dblk)
 
@@ -48,7 +56,7 @@ def stationarity(problem: ConsensusProblem, state: AsyBADMMState,
 
 
 def kkt_violations(problem: ConsensusProblem, state: AsyBADMMState,
-                   rho: float) -> dict:
+                   rho) -> dict:
     """Theorem 1.2 KKT conditions at the limit point:
     (20a) grad_j f_i(x_i*) + y_ij* = 0
     (20c) x_ij* = z_j*

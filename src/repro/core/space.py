@@ -1,0 +1,506 @@
+"""`VariableSpace` — one abstraction over flat-vector and pytree AsyBADMM.
+
+The paper's Algorithm 1 is representation-agnostic: it needs a consensus
+variable split into M blocks, a bounded-staleness history per block, a
+per-(worker, block) edge set E, and elementwise worker/server updates.
+This module owns those mechanics once, behind two interchangeable
+implementations:
+
+* ``FlatSpace``  — the decision variable is a flat vector, blocked by
+  :class:`~repro.core.blocks.FlatBlocks` (the paper's own workloads:
+  sparse logistic regression, eq. 22);
+* ``TreeSpace``  — the decision variable is a params pytree, leaves
+  assigned to logical blocks by :class:`~repro.core.blocks.TreeBlocks`
+  (consensus training of transformers).
+
+On top of the space sit two pluggable policies:
+
+* **block selection** (Alg. 1 line 4) — a registry shared by both modes:
+  ``random`` (Gumbel top-k over the edge neighborhood), ``cyclic``
+  (Gauss-Seidel sweep), ``gauss_southwell`` (largest gradient-norm
+  blocks) [Hong et al. 2016b];
+* **delay model** (Assumption 3) — how per-(i, j) staleness is drawn;
+  ``UniformDelay`` reproduces the seed's U{0..D} semantics and
+  ``ConstantDelay`` pins a worst-case lag.
+
+``asybadmm_epoch`` is the single generic implementation of one epoch of
+Algorithm 1 (all workers + all servers); the flat driver
+(``core/consensus.py``), the pytree trainer (``training/trainer.py``)
+and the user-facing ``repro.api.ConsensusSession`` are all thin
+adapters over it.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, NamedTuple, Optional, Protocol, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .admm import server_update, worker_update
+from .async_sim import gather_delayed, push_history, sample_delays, select_blocks
+from .blocks import FlatBlocks, TreeBlocks
+from .prox import Regularizer, make_prox
+
+
+# ---------------------------------------------------------------------------
+# delay models (Assumption 3 hook)
+# ---------------------------------------------------------------------------
+
+class DelayModel(Protocol):
+    """How per-(worker, block) staleness tau_ij is drawn each epoch."""
+
+    @property
+    def depth(self) -> int:
+        """Ring-buffer depth the history must keep (max delay + 1)."""
+
+    def sample(self, rng: jax.Array, n_workers: int, n_blocks: int) -> jax.Array:
+        """Return (N, M) int32 delays in [0, depth)."""
+
+
+@dataclasses.dataclass(frozen=True)
+class UniformDelay:
+    """tau_ij ~ U{0..max_delay} i.i.d. per epoch — the seed's semantics."""
+    max_delay: int
+
+    @property
+    def depth(self) -> int:
+        return self.max_delay + 1
+
+    def sample(self, rng, n_workers, n_blocks):
+        return sample_delays(rng, n_workers, n_blocks, self.max_delay)
+
+
+@dataclasses.dataclass(frozen=True)
+class ConstantDelay:
+    """Every read is exactly ``delay`` epochs stale (worst-case lag)."""
+    delay: int
+
+    @property
+    def depth(self) -> int:
+        return self.delay + 1
+
+    def sample(self, rng, n_workers, n_blocks):
+        return jnp.full((n_workers, n_blocks), self.delay, jnp.int32)
+
+
+# ---------------------------------------------------------------------------
+# block-selection policies (Alg. 1 line 4) — one registry for both modes
+# ---------------------------------------------------------------------------
+
+class SelectorContext(NamedTuple):
+    """Everything a selection policy may look at.
+
+    ``grad_sqnorm`` is a thunk returning the (N, M) per-block squared
+    gradient norms — only Gauss-Southwell forces it, and XLA dead-code
+    eliminates it otherwise.
+    """
+    rng: jax.Array
+    edge: jax.Array              # (N, M) bool
+    t: jax.Array                 # () int32 epoch counter
+    block_fraction: float
+    grad_sqnorm: Callable[[], jax.Array]
+
+
+BlockSelector = Callable[[SelectorContext], jax.Array]
+
+BLOCK_SELECTORS: Dict[str, BlockSelector] = {}
+
+
+def register_block_selector(name: str):
+    def deco(fn: BlockSelector) -> BlockSelector:
+        BLOCK_SELECTORS[name] = fn
+        return fn
+    return deco
+
+
+def resolve_block_selector(sel) -> BlockSelector:
+    if callable(sel):
+        return sel
+    try:
+        return BLOCK_SELECTORS[sel]
+    except KeyError:
+        raise ValueError(
+            f"unknown block_selection {sel!r}; "
+            f"registered: {sorted(BLOCK_SELECTORS)}") from None
+
+
+@register_block_selector("random")
+def random_selector(ctx: SelectorContext) -> jax.Array:
+    """Each worker samples ~frac*M blocks uniformly from its neighborhood."""
+    return select_blocks(ctx.rng, ctx.edge, ctx.block_fraction)
+
+
+@register_block_selector("cyclic")
+def cyclic_selector(ctx: SelectorContext) -> jax.Array:
+    """Gauss-Seidel sweep: every worker updates block (t mod M); workers
+    whose edge set misses that block fall back to a random draw."""
+    M = ctx.edge.shape[1]
+    j = jnp.mod(ctx.t, M)
+    sel = jax.nn.one_hot(j, M, dtype=bool)[None, :] & ctx.edge
+    fallback = (~jnp.any(sel, axis=1, keepdims=True)
+                & select_blocks(ctx.rng, ctx.edge, ctx.block_fraction))
+    return sel | fallback
+
+
+@register_block_selector("gauss_southwell")
+def gauss_southwell_selector(ctx: SelectorContext) -> jax.Array:
+    """Greedy: the top-k blocks by gradient norm within the edge set."""
+    M = ctx.edge.shape[1]
+    gnorm = jnp.where(ctx.edge, ctx.grad_sqnorm(), -jnp.inf)
+    k = max(1, int(round(ctx.block_fraction * M)))
+    thresh = jax.lax.top_k(gnorm, k)[0][:, -1:]
+    return (gnorm >= thresh) & ctx.edge
+
+
+# ---------------------------------------------------------------------------
+# the space protocol and its two implementations
+# ---------------------------------------------------------------------------
+
+class VariableSpace(Protocol):
+    """Owns the representation-specific mechanics of Algorithm 1.
+
+    Worker bundles (y, w, x, z~, g) carry a leading worker axis N; the
+    consensus value z and its ring-buffer history are worker-free. All
+    methods must be pure and jit-traceable.
+    """
+    num_workers: int
+
+    @property
+    def num_blocks(self) -> int: ...
+    def init_repr(self, z0: Optional[Any]) -> Any: ...
+    def to_user(self, z: Any) -> Any: ...
+    def init_history(self, z0: Any, depth: int) -> Any: ...
+    def current(self, z_hist: Any) -> Any: ...
+    def push(self, z_hist: Any, z_new: Any) -> Any: ...
+    def gather(self, z_hist: Any, delays: jax.Array) -> Any: ...
+    def worker_grads(self, loss_fn, z_tilde, data) -> Tuple[jax.Array, Any]: ...
+    def grad_sqnorm(self, g: Any) -> jax.Array: ...
+    def worker_update(self, g, y, z_tilde, rho_vec) -> Tuple[Any, Any, Any]: ...
+    def select(self, sel: jax.Array, new: Any, old: Any) -> Any: ...
+    def reduce_workers(self, w: Any, edge: jax.Array) -> Any: ...
+    def server_update(self, z_cur, w_sum, rho_sum, gamma, prox) -> Any: ...
+    def zeros_workers(self, z0: Any) -> Any: ...
+    def broadcast_workers(self, z0: Any) -> Any: ...
+    def workers_scaled(self, z0: Any, rho_vec: jax.Array) -> Any: ...
+    def worker_leaves(self, bundle: Any) -> list: ...
+
+
+@dataclasses.dataclass(frozen=True)
+class FlatSpace:
+    """Flat-vector consensus: z is (M, dblk) blocks of a padded vector;
+    worker bundles are (N, M, dblk) arrays."""
+    blocks: FlatBlocks
+    num_workers: int
+
+    @property
+    def num_blocks(self) -> int:
+        return self.blocks.num_blocks
+
+    # ---- representation -------------------------------------------------
+    def init_repr(self, z0):
+        if z0 is None:
+            return jnp.zeros((self.blocks.num_blocks, self.blocks.block_dim))
+        return self.blocks.to_blocks(z0)
+
+    def to_user(self, z):
+        return self.blocks.from_blocks(z)
+
+    # ---- history --------------------------------------------------------
+    def init_history(self, z0, depth):
+        return jnp.broadcast_to(z0, (depth,) + z0.shape).copy()
+
+    def current(self, z_hist):
+        return z_hist[0]
+
+    def push(self, z_hist, z_new):
+        return push_history(z_hist, z_new)
+
+    def gather(self, z_hist, delays):
+        return gather_delayed(z_hist, delays)
+
+    # ---- worker side ----------------------------------------------------
+    def worker_grads(self, loss_fn, z_tilde, data):
+        def vg(zb, di):
+            zv = self.blocks.from_blocks(zb)
+            return jax.value_and_grad(loss_fn)(zv, di)
+        losses, g = jax.vmap(vg)(z_tilde, data)
+        return losses, self.blocks.to_blocks(g)
+
+    def grad_sqnorm(self, g):
+        return jnp.sum(jnp.square(g), axis=-1)
+
+    def worker_update(self, g, y, z_tilde, rho_vec):
+        return worker_update(g, y, z_tilde, rho_vec[:, None, None])
+
+    def select(self, sel, new, old):
+        return jnp.where(sel[..., None], new, old)
+
+    # ---- server side ----------------------------------------------------
+    def reduce_workers(self, w, edge):
+        return jnp.sum(jnp.where(edge[..., None], w, 0.0), axis=0)
+
+    def server_update(self, z_cur, w_sum, rho_sum, gamma, prox):
+        return server_update(z_cur, w_sum, rho_sum[:, None], gamma, prox)
+
+    # ---- state construction --------------------------------------------
+    def zeros_workers(self, z0):
+        return jnp.zeros((self.num_workers,) + z0.shape)
+
+    def broadcast_workers(self, z0):
+        return jnp.broadcast_to(z0, (self.num_workers,) + z0.shape).copy()
+
+    def workers_scaled(self, z0, rho_vec):
+        return rho_vec[:, None, None] * jnp.broadcast_to(
+            z0, (self.num_workers,) + z0.shape)
+
+    def worker_leaves(self, bundle):
+        return [bundle]
+
+
+@dataclasses.dataclass(frozen=True)
+class TreeSpace:
+    """Pytree consensus: z is a params pytree; worker bundles are pytrees
+    whose leaves carry a leading worker axis N. Block j is the set of
+    leaves with ``leaf_block_ids[k] == j``. Arithmetic runs in float32
+    and is stored back in each leaf's dtype (bf16-safe under dryrun)."""
+    blocks: TreeBlocks
+    num_workers: int
+
+    @property
+    def num_blocks(self) -> int:
+        return self.blocks.num_blocks
+
+    def _bid_tree(self):
+        return self.blocks.block_id_tree()
+
+    def _wshape(self, leaf):
+        return (self.num_workers,) + (1,) * (leaf.ndim - 1)
+
+    # ---- representation -------------------------------------------------
+    def init_repr(self, z0):
+        if z0 is None:
+            raise ValueError("TreeSpace needs an initial params pytree")
+        return z0
+
+    def to_user(self, z):
+        return z
+
+    # ---- history --------------------------------------------------------
+    def init_history(self, z0, depth):
+        return jax.tree.map(
+            lambda p: jnp.broadcast_to(p, (depth,) + p.shape).copy(), z0)
+
+    def current(self, z_hist):
+        return jax.tree.map(lambda a: a[0], z_hist)
+
+    def push(self, z_hist, z_new):
+        return jax.tree.map(push_history, z_hist, z_new)
+
+    def gather(self, z_hist, delays):
+        return jax.tree.map(lambda zh, bid: zh[delays[:, bid]],
+                            z_hist, self._bid_tree())
+
+    # ---- worker side ----------------------------------------------------
+    def worker_grads(self, loss_fn, z_tilde, data):
+        return jax.vmap(jax.value_and_grad(loss_fn))(z_tilde, data)
+
+    def grad_sqnorm(self, g):
+        out = jnp.zeros((self.num_workers, self.num_blocks), jnp.float32)
+        for leaf, bid in zip(jax.tree.leaves(g), self.blocks.leaf_block_ids):
+            sq = jnp.sum(jnp.square(leaf.astype(jnp.float32)),
+                         axis=tuple(range(1, leaf.ndim)))
+            out = out.at[:, bid].add(sq)
+        return out
+
+    def worker_update(self, g, y, z_tilde, rho_vec):
+        rho32 = rho_vec.astype(jnp.float32)
+
+        def upd(g_l, y_l, zt_l):
+            rho = rho32.reshape(self._wshape(g_l))
+            return worker_update(g_l.astype(jnp.float32),
+                                 y_l.astype(jnp.float32),
+                                 zt_l.astype(jnp.float32), rho)
+        out = jax.tree.map(upd, g, y, z_tilde)
+        leaf = lambda t: isinstance(t, tuple)
+        return tuple(jax.tree.map(lambda t, i=i: t[i], out, is_leaf=leaf)
+                     for i in range(3))
+
+    def select(self, sel, new, old):
+        def f(n_l, o_l, bid):
+            m = sel[:, bid].reshape(self._wshape(o_l))
+            return jnp.where(m, n_l, o_l).astype(o_l.dtype)
+        return jax.tree.map(f, new, old, self._bid_tree())
+
+    # ---- server side ----------------------------------------------------
+    def reduce_workers(self, w, edge):
+        def f(w_l, bid):
+            m = edge[:, bid].reshape(self._wshape(w_l))
+            return jnp.sum(jnp.where(m, w_l.astype(jnp.float32), 0.0), axis=0)
+        return jax.tree.map(f, w, self._bid_tree())
+
+    def server_update(self, z_cur, w_sum, rho_sum, gamma, prox):
+        def f(z_l, ws_l, bid):
+            z_new = server_update(z_l.astype(jnp.float32), ws_l,
+                                  rho_sum[bid], gamma, prox)
+            return z_new.astype(z_l.dtype)
+        return jax.tree.map(f, z_cur, w_sum, self._bid_tree())
+
+    # ---- state construction --------------------------------------------
+    def zeros_workers(self, z0):
+        return jax.tree.map(
+            lambda p: jnp.zeros((self.num_workers,) + p.shape, p.dtype), z0)
+
+    def broadcast_workers(self, z0):
+        return jax.tree.map(
+            lambda p: jnp.broadcast_to(
+                p, (self.num_workers,) + p.shape).copy(), z0)
+
+    def workers_scaled(self, z0, rho_vec):
+        def f(p):
+            rho = rho_vec.astype(jnp.float32).reshape(self._wshape(p[None]))
+            return (rho * p[None].astype(jnp.float32)).astype(p.dtype)
+        return jax.tree.map(f, z0)
+
+    def worker_leaves(self, bundle):
+        return list(jax.tree.leaves(bundle))
+
+
+# ---------------------------------------------------------------------------
+# the generic state / spec / epoch
+# ---------------------------------------------------------------------------
+
+class ConsensusState(NamedTuple):
+    """State of Algorithm 1, shared by both spaces.
+
+    z_hist : bounded-staleness ring buffer, leading axis depth (= D+1),
+             index 0 newest;
+    y      : per-(worker, block) duals (== -last gradient, appendix 25);
+    w_cache: server-side stale w~ cache;
+    x      : last primal iterates (kept only when the spec tracks them —
+             the stationarity metric needs them; () otherwise);
+    t      : epoch counter; rng: PRNG key.
+    """
+    z_hist: Any
+    y: Any
+    w_cache: Any
+    x: Any
+    t: jax.Array
+    rng: jax.Array
+
+    @property
+    def z_blocks(self):
+        """Flat-mode convenience: newest consensus blocks (M, dblk)."""
+        return self.z_hist[0]
+
+
+@dataclasses.dataclass(frozen=True)
+class ConsensusSpec:
+    """Everything one epoch of Algorithm 1 needs besides state + data."""
+    space: Any                         # VariableSpace
+    loss_fn: Callable                  # loss_fn(z_user, worker_data) -> scalar
+    edge: jax.Array                    # (N, M) bool — the paper's E
+    rho_vec: jax.Array                 # (N,) per-worker penalties rho_i
+    reg: Regularizer
+    gamma: float
+    block_fraction: float
+    selector: BlockSelector
+    delay_model: DelayModel
+    track_x: bool = False
+    seed: int = 0
+
+
+def make_spec(space, cfg, loss_fn, *, edge=None, rho_scale=None, reg=None,
+              selector=None, delay_model=None, track_x=False) -> ConsensusSpec:
+    """Build a ConsensusSpec from an ADMMConfig plus problem structure."""
+    N, M = space.num_workers, space.num_blocks
+    if edge is None:
+        edge = jnp.ones((N, M), bool)
+    else:
+        edge = jnp.asarray(edge, bool)
+    if rho_scale is None:
+        rho_vec = jnp.full((N,), cfg.rho)
+    else:
+        rho_vec = cfg.rho * jnp.asarray(rho_scale)
+    if reg is None:
+        reg = make_prox(cfg.l1_coef, cfg.clip)
+    sel = resolve_block_selector(
+        selector if selector is not None else cfg.block_selection)
+    if delay_model is None:
+        delay_model = UniformDelay(cfg.max_delay)
+    return ConsensusSpec(space=space, loss_fn=loss_fn, edge=edge,
+                         rho_vec=rho_vec, reg=reg, gamma=cfg.gamma,
+                         block_fraction=cfg.block_fraction, selector=sel,
+                         delay_model=delay_model, track_x=track_x,
+                         seed=cfg.seed)
+
+
+def init_consensus_state(spec: ConsensusSpec, z0=None) -> ConsensusState:
+    """Algorithm 1 lines 1-2 in either space. ``z0`` is in user
+    representation (flat vector / params pytree; flat mode defaults to 0)."""
+    space = spec.space
+    z0r = space.init_repr(z0)
+    return ConsensusState(
+        z_hist=space.init_history(z0r, spec.delay_model.depth),
+        y=space.zeros_workers(z0r),                       # Alg. 1 line 2
+        # w init: w = rho_i * x + y with x = z0, y = 0  ->  rho_i * z0
+        w_cache=space.workers_scaled(z0r, spec.rho_vec),
+        x=space.broadcast_workers(z0r) if spec.track_x else (),  # line 1
+        t=jnp.zeros((), jnp.int32),
+        rng=jax.random.PRNGKey(spec.seed),
+    )
+
+
+def asybadmm_epoch(spec: ConsensusSpec, state: ConsensusState, data
+                   ) -> Tuple[ConsensusState, Dict[str, jax.Array]]:
+    """One epoch of Algorithm 1 across all workers + servers — THE single
+    implementation both the flat driver and the pytree trainer use."""
+    space = spec.space
+    N, M = spec.edge.shape
+    rng, r_delay, r_sel = jax.random.split(state.rng, 3)
+
+    # --- each worker pulls (possibly stale) z~ per block (Assumption 3) ---
+    delays = spec.delay_model.sample(r_delay, N, M)
+    z_tilde = space.gather(state.z_hist, delays)
+
+    # --- local gradients at z~ (eq. 5 linearization point) ---
+    losses, g = space.worker_grads(spec.loss_fn, z_tilde, data)
+
+    # --- block selection (Alg. 1 line 4) via the shared policy registry ---
+    ctx = SelectorContext(rng=r_sel, edge=spec.edge, t=state.t,
+                          block_fraction=spec.block_fraction,
+                          grad_sqnorm=lambda: space.grad_sqnorm(g))
+    sel = spec.selector(ctx)
+
+    # --- worker update (11)(12)(9), masked to selected blocks ---
+    x_new, y_new, w_new = space.worker_update(g, state.y, z_tilde,
+                                              spec.rho_vec)
+    y = space.select(sel, y_new, state.y)
+    w_cache = space.select(sel, w_new, state.w_cache)   # push w to server j
+    x = space.select(sel, x_new, state.x) if spec.track_x else state.x
+
+    # --- server update (13): fresh w for pushers, stale cache otherwise ---
+    w_sum = space.reduce_workers(w_cache, spec.edge)
+    rho_sum = jnp.sum(jnp.where(spec.edge, spec.rho_vec[:, None], 0.0),
+                      axis=0)                                       # (M,)
+    z_new = space.server_update(space.current(state.z_hist), w_sum, rho_sum,
+                                spec.gamma, spec.reg.prox)
+
+    info = {"loss": jnp.mean(losses),
+            "selected_fraction": jnp.mean(sel.astype(jnp.float32))}
+    return ConsensusState(z_hist=space.push(state.z_hist, z_new), y=y,
+                          w_cache=w_cache, x=x, t=state.t + 1, rng=rng), info
+
+
+def consensus_residual(spec: ConsensusSpec, state: ConsensusState) -> jax.Array:
+    """Cross-worker dispersion of the w cache (0 at consensus) — the
+    space-generic analogue of ``ADMMTrainer.consensus_residual``."""
+    num = jnp.zeros((), jnp.float32)
+    den = jnp.zeros((), jnp.float32)
+    for leaf in spec.space.worker_leaves(state.w_cache):
+        w32 = leaf.astype(jnp.float32)
+        mean = jnp.mean(w32, axis=0, keepdims=True)
+        num = num + jnp.sum(jnp.square(w32 - mean))
+        den = den + jnp.sum(jnp.square(mean)) * leaf.shape[0]
+    return jnp.sqrt(num / jnp.maximum(den, 1e-12))

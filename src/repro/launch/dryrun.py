@@ -245,6 +245,8 @@ def analyze(arch: str, shape_name: str, mesh_name: str, mesh, lowered,
     chips = int(np.prod(list(mesh.shape.values())))
 
     cost = compiled.cost_analysis() or {}
+    if isinstance(cost, (list, tuple)):          # pre-0.4.3x jax returned
+        cost = cost[0] if cost else {}           # a one-element list
     xla_flops = float(cost.get("flops", 0.0))
     xla_bytes = float(cost.get("bytes accessed", 0.0))
 

@@ -14,13 +14,14 @@ import time
 import jax
 import jax.numpy as jnp
 
+from ..api import ConsensusSession
 from ..checkpoint import save
 from ..configs import get_config, get_smoke, list_archs
 from ..configs.base import ADMMConfig
 from ..data import TokenPipeline
 from ..models import build_model
 from ..optim import adamw, warmup_cosine
-from ..training import ADMMTrainer, SGDTrainer
+from ..training import SGDTrainer
 
 
 def main() -> None:
@@ -38,6 +39,8 @@ def main() -> None:
     ap.add_argument("--max-delay", type=int, default=1)
     ap.add_argument("--block-fraction", type=float, default=1.0)
     ap.add_argument("--num-blocks", type=int, default=8)
+    ap.add_argument("--block-selection", default="random",
+                    choices=["random", "cyclic", "gauss_southwell"])
     ap.add_argument("--lr", type=float, default=1e-3)
     ap.add_argument("--ckpt", default=None)
     ap.add_argument("--log-every", type=int, default=10)
@@ -61,18 +64,22 @@ def main() -> None:
         acfg = ADMMConfig(rho=args.rho, gamma=args.gamma,
                           max_delay=args.max_delay,
                           block_fraction=args.block_fraction,
-                          num_blocks=args.num_blocks, seed=args.seed)
-        trainer = ADMMTrainer(loss_fn=model.loss, admm=acfg,
-                              num_workers=args.workers)
-        state = trainer.init(params)
+                          num_blocks=args.num_blocks,
+                          block_selection=args.block_selection,
+                          seed=args.seed)
+        session = ConsensusSession.pytree(model.loss, params, acfg,
+                                          num_workers=args.workers)
+        state = session.init()
+        step_fn = session.step_fn()
+        get_params = session.z
         batch_kw = dict(num_workers=args.workers, **enc_kw)
     else:
         sched = warmup_cosine(args.lr, args.steps // 10, args.steps)
         trainer = SGDTrainer(loss_fn=model.loss, optimizer=adamw(sched))
         state = trainer.init(params)
+        step_fn = jax.jit(trainer.train_step)
+        get_params = lambda st: st.params
         batch_kw = dict(**enc_kw)
-
-    step_fn = jax.jit(trainer.train_step)
     t0 = time.time()
     for step in range(args.steps):
         batch = pipe.batch(step, **batch_kw)
@@ -84,8 +91,7 @@ def main() -> None:
                   flush=True)
 
     if args.ckpt:
-        tree = state.params if args.trainer == "admm" else state.params
-        save(args.ckpt, tree, step=args.steps)
+        save(args.ckpt, get_params(state), step=args.steps)
         print(f"checkpoint saved to {args.ckpt}.npz")
 
 

@@ -1,8 +1,16 @@
 """Trainers.
 
 ``ADMMTrainer`` — AsyBADMM as a distributed-training feature (pytree
-mode). The mapping from the paper's parameter-server picture to the
-SPMD pod is in DESIGN.md §3:
+mode). Since the `VariableSpace` refactor the trainer is a thin adapter:
+delay gather, block selection, worker update, and server prox all route
+through ``core.space.TreeSpace`` + the shared generic
+``core.space.asybadmm_epoch`` — the same implementation the flat driver
+uses — so the pytree path honors every ``ADMMConfig`` policy
+(``block_selection`` random/cyclic/gauss_southwell), heterogeneous
+per-worker ``rho_scale``, and an optional general-form ``edge`` set.
+
+The mapping from the paper's parameter-server picture to the SPMD pod
+is in DESIGN.md §3:
 
   worker i      = data-parallel slice i (leading worker axis N, sharded
                   over the ``data``/``pod`` mesh axes)
@@ -28,9 +36,12 @@ import jax
 import jax.numpy as jnp
 
 from ..configs.base import ADMMConfig
-from ..core.admm import worker_update
+from ..core.admm import server_update, worker_update
+from ..core.async_sim import push_history
 from ..core.blocks import TreeBlocks, make_tree_blocks
-from ..core.prox import make_prox
+from ..core.space import (ConsensusSpec, ConsensusState, TreeSpace,
+                          asybadmm_epoch, consensus_residual,
+                          init_consensus_state, make_spec)
 from ..optim.optimizers import Optimizer, apply_updates
 from .train_state import ADMMTrainState, SGDTrainState
 
@@ -59,7 +70,7 @@ class SGDTrainer:
 
 
 # ===========================================================================
-# AsyBADMM consensus trainer
+# AsyBADMM consensus trainer — thin adapter over core.space
 # ===========================================================================
 
 @dataclasses.dataclass(frozen=True)
@@ -68,118 +79,65 @@ class ADMMTrainer:
 
     loss_fn(params, worker_batch) -> scalar — per-worker loss; batches
     carry a leading worker axis N.
+
+    edge      : optional (N, M) bool — the paper's general-form edge set
+                E; worker i only touches blocks j with edge[i, j].
+    rho_scale : optional (N,) — heterogeneous per-worker penalties,
+                effective rho_i = admm.rho * rho_scale[i].
     """
     loss_fn: Callable
     admm: ADMMConfig
     num_workers: int
     blocks: Optional[TreeBlocks] = None
+    edge: Optional[Any] = None
+    rho_scale: Optional[Any] = None
 
     def _blocks(self, params) -> TreeBlocks:
         if self.blocks is not None:
             return self.blocks
         return make_tree_blocks(params, self.admm.num_blocks)
 
+    def _space(self, params) -> TreeSpace:
+        return TreeSpace(blocks=self._blocks(params),
+                         num_workers=self.num_workers)
+
+    def _spec(self, params) -> ConsensusSpec:
+        return make_spec(self._space(params), self.admm, self.loss_fn,
+                         edge=self.edge, rho_scale=self.rho_scale,
+                         track_x=False)
+
     def init(self, params, *, cyclic: bool = False) -> ADMMTrainState:
-        D = self.admm.max_delay
-        N = self.num_workers
-        z_hist = jax.tree.map(
-            lambda p: jnp.broadcast_to(p, (D + 1,) + p.shape).copy(), params)
-        y = jax.tree.map(
-            lambda p: jnp.zeros((N,) + p.shape, p.dtype), params)
+        g = init_consensus_state(self._spec(params), params)
         if cyclic:
-            # Gauss-Seidel rounds never read the stale-w cache (every
-            # worker pushes the active block fresh) — don't carry it.
-            w_cache = ()
-        else:
-            # w_cache init: w = rho*x + y with x = z0, y = 0  ->  rho * z0
-            w_cache = jax.tree.map(
-                lambda p: jnp.broadcast_to(self.admm.rho * p, (N,) + p.shape)
-                .astype(p.dtype).copy(), params)
-        return ADMMTrainState(z_hist=z_hist, y=y, w_cache=w_cache,
-                              step=jnp.zeros((), jnp.int32),
-                              rng=jax.random.PRNGKey(self.admm.seed))
+            # Static Gauss-Seidel rounds (train_step_block) never read the
+            # stale-w cache (every worker pushes the active block fresh) —
+            # don't carry it.
+            g = g._replace(w_cache=())
+        return ADMMTrainState(z_hist=g.z_hist, y=g.y, w_cache=g.w_cache,
+                              step=g.t, rng=g.rng)
 
     # -----------------------------------------------------------------
     def train_step(self, state: ADMMTrainState, batch
                    ) -> Tuple[ADMMTrainState, Dict]:
-        """One AsyBADMM epoch across all N workers (Alg. 1, both roles).
+        """One AsyBADMM epoch across all N workers (Alg. 1, both roles),
+        delegated to the shared generic step.
 
         batch: pytree with leading axes (N, per_worker_batch, ...).
         """
-        cfg = self.admm
-        N, M = self.num_workers, cfg.num_blocks
+        if isinstance(state.w_cache, tuple) and state.w_cache == ():
+            raise ValueError(
+                "state was built with init(cyclic=True), which drops the "
+                "w cache and only supports train_step_block; for the "
+                "dynamic block_selection='cyclic' policy use a plain "
+                "init(params)")
         params0 = jax.tree.map(lambda a: a[0], state.z_hist)
-        blocks = self._blocks(params0)
-        rng, r_delay, r_sel = jax.random.split(state.rng, 3)
-
-        # --- bounded-staleness pull: per-(worker, block) delays ---
-        if cfg.max_delay > 0:
-            delays = jax.random.randint(r_delay, (N, M), 0, cfg.max_delay + 1)
-        else:
-            delays = jnp.zeros((N, M), jnp.int32)
-        bid_tree = blocks.block_id_tree()
-        z_tilde = jax.tree.map(
-            lambda zh, bid: zh[delays[:, bid]], state.z_hist, bid_tree)
-
-        # --- per-worker gradients at z~ (eq. 5 linearization) ---
-        def per_worker_loss(p, b):
-            return self.loss_fn(p, b)
-        losses, grads = jax.vmap(jax.value_and_grad(per_worker_loss))(
-            z_tilde, batch)                                   # leaves (N, ...)
-
-        # --- block selection (Alg. 1 line 4) ---
-        if cfg.block_fraction >= 1.0:
-            sel = jnp.ones((N, M), bool)
-        else:
-            k = max(1, int(round(cfg.block_fraction * M)))
-            gumbel = jax.random.gumbel(r_sel, (N, M))
-            thresh = jax.lax.top_k(gumbel, k)[0][:, -1:]
-            sel = gumbel >= thresh
-
-        def mask_leaf(leaf_val, bid):
-            m = sel[:, bid].astype(leaf_val.dtype)
-            return m.reshape((N,) + (1,) * (leaf_val.ndim - 1))
-
-        # --- worker update (11)(12)(9), masked to selected blocks ---
-        def upd(g, y, zt, w_old, bid):
-            g32 = g.astype(jnp.float32)
-            y32 = y.astype(jnp.float32)
-            zt32 = zt.astype(jnp.float32)
-            _, y_new, w_new = worker_update(g32, y32, zt32, cfg.rho)
-            m = mask_leaf(g, bid).astype(jnp.float32)
-            y_out = (m * y_new + (1 - m) * y32).astype(y.dtype)
-            w_out = (m * w_new + (1 - m) * w_old.astype(jnp.float32)).astype(w_old.dtype)
-            return y_out, w_out
-
-        yw = jax.tree.map(upd, grads, state.y, z_tilde, state.w_cache,
-                          bid_tree)
-        # unzip the (y, w) tuples
-        y_new = jax.tree.map(lambda t: t[0], yw,
-                             is_leaf=lambda t: isinstance(t, tuple))
-        w_new = jax.tree.map(lambda t: t[1], yw,
-                             is_leaf=lambda t: isinstance(t, tuple))
-
-        # --- server update (13): one collective reduction per block ---
-        prox = make_prox(cfg.l1_coef, cfg.clip).prox
-        mu = cfg.gamma + cfg.rho * N
-
-        def server(zh, w):
-            z_cur = zh[0].astype(jnp.float32)
-            w_sum = jnp.sum(w.astype(jnp.float32), axis=0)    # over workers
-            z_new = prox((cfg.gamma * z_cur + w_sum) / mu, mu).astype(zh.dtype)
-            if zh.shape[0] == 1:
-                return z_new[None]
-            return jnp.concatenate([z_new[None], zh[:-1]], axis=0)
-
-        z_hist = jax.tree.map(server, state.z_hist, w_new)
-
-        # --- diagnostics ---
-        info = {
-            "loss": jnp.mean(losses),
-            "selected_fraction": jnp.mean(sel.astype(jnp.float32)),
-        }
-        return (ADMMTrainState(z_hist=z_hist, y=y_new, w_cache=w_new,
-                               step=state.step + 1, rng=rng), info)
+        spec = self._spec(params0)
+        g = ConsensusState(z_hist=state.z_hist, y=state.y,
+                           w_cache=state.w_cache, x=(), t=state.step,
+                           rng=state.rng)
+        g, info = asybadmm_epoch(spec, g, batch)
+        return (ADMMTrainState(z_hist=g.z_hist, y=g.y, w_cache=g.w_cache,
+                               step=g.t, rng=g.rng), info)
 
     # -----------------------------------------------------------------
     def train_step_block(self, state: ADMMTrainState, batch, block_id: int
@@ -188,35 +146,34 @@ class ADMMTrainer:
         ``block_id`` this step (the paper's §3.2 alternative block
         selection, the TPU-natural one — see EXPERIMENTS.md §Perf).
 
-        ``block_id`` must be static (jit with static_argnums=2); drive it
-        with ``step % num_blocks``. Because the block set is known at
-        trace time:
+        This is the statically-specialized sibling of
+        ``block_selection="cyclic"``: because ``block_id`` is known at
+        trace time (jit with static_argnums=2; drive it with
+        ``step % num_blocks``):
           * gradients are taken w.r.t. the active leaves only — the
             parameter-gradient matmuls of frozen leaves are never built;
           * the cross-worker reduction (the paper's w push) covers only
             the active block — collective volume drops by ~1/M;
           * the server-side stale-w cache is never read (every worker
             pushes the active block fresh), so it is not carried at all.
+        The delay gather, update equations, and server prox are the
+        shared core.space / core.admm primitives.
         """
         cfg = self.admm
-        N = self.num_workers
+        N, M = self.num_workers, cfg.num_blocks
         params0 = jax.tree.map(lambda a: a[0], state.z_hist)
-        blocks = self._blocks(params0)
+        spec = self._spec(params0)
+        space = spec.space
+        blocks = space.blocks
         rng, r_delay = jax.random.split(state.rng)
 
         leaves_ids = blocks.leaf_block_ids
         active_idx = [i for i, b in enumerate(leaves_ids) if b == block_id]
         treedef = blocks.treedef
 
-        # --- bounded-staleness pull (全 leaves — forward needs them all)
-        M = cfg.num_blocks
-        if cfg.max_delay > 0:
-            delays = jax.random.randint(r_delay, (N, M), 0, cfg.max_delay + 1)
-        else:
-            delays = jnp.zeros((N, M), jnp.int32)
-        bid_tree = blocks.block_id_tree()
-        z_tilde = jax.tree.map(
-            lambda zh, bid: zh[delays[:, bid]], state.z_hist, bid_tree)
+        # --- bounded-staleness pull (all leaves — forward needs them) ---
+        delays = spec.delay_model.sample(r_delay, N, M)
+        z_tilde = space.gather(state.z_hist, delays)
 
         zt_leaves = jax.tree.leaves(z_tilde)
         active_zt = [zt_leaves[i] for i in active_idx]
@@ -231,28 +188,32 @@ class ADMMTrainer:
             jax.value_and_grad(loss_from_active))(active_zt, zt_leaves, batch)
 
         # --- worker + server update on the active leaves only ---
+        rho32 = spec.rho_vec.astype(jnp.float32)
+        e_blk = spec.edge[:, block_id]                       # (N,) bool
         y_leaves = list(jax.tree.leaves(state.y))
         w_sum_active = []
         y_new_leaves = list(y_leaves)
-        for j, (i, g) in enumerate(zip(active_idx, g_active)):
+        for i, g in zip(active_idx, g_active):
             g32 = g.astype(jnp.float32)
             zt32 = zt_leaves[i].astype(jnp.float32)
             y32 = y_leaves[i].astype(jnp.float32)
-            _, y_new, w_new = worker_update(g32, y32, zt32, cfg.rho)
-            y_new_leaves[i] = y_new.astype(y_leaves[i].dtype)
-            w_sum_active.append(jnp.sum(w_new, axis=0))   # reduce over N
+            wshape = (N,) + (1,) * (g32.ndim - 1)
+            _, y_new, w_new = worker_update(g32, y32, zt32,
+                                            rho32.reshape(wshape))
+            em = e_blk.reshape(wshape)
+            y_new_leaves[i] = jnp.where(em, y_new, y32).astype(
+                y_leaves[i].dtype)
+            w_sum_active.append(
+                jnp.sum(jnp.where(em, w_new, 0.0), axis=0))  # reduce over N
 
-        prox = make_prox(cfg.l1_coef, cfg.clip).prox
-        mu = cfg.gamma + cfg.rho * N
+        rho_sum = jnp.sum(jnp.where(e_blk, rho32, 0.0))
+        prox = spec.reg.prox
         zh_leaves = list(jax.tree.leaves(state.z_hist))
         for i, w_sum in zip(active_idx, w_sum_active):
             zh = zh_leaves[i]
-            z_cur = zh[0].astype(jnp.float32)
-            z_new = prox((cfg.gamma * z_cur + w_sum) / mu, mu).astype(zh.dtype)
-            if zh.shape[0] == 1:
-                zh_leaves[i] = z_new[None]
-            else:
-                zh_leaves[i] = jnp.concatenate([z_new[None], zh[:-1]], axis=0)
+            z_new = server_update(zh[0].astype(jnp.float32), w_sum, rho_sum,
+                                  spec.gamma, prox).astype(zh.dtype)
+            zh_leaves[i] = push_history(zh, z_new)
 
         y_def = jax.tree.structure(state.y)
         zh_def = jax.tree.structure(state.z_hist)
@@ -270,12 +231,9 @@ class ADMMTrainer:
         """||x_i - z||/||z|| proxy: since x = z~-(g+y')/rho and y' = -g at
         update time, the dual drift ||y_i + g_i|| collapses; we report the
         w-cache dispersion across workers instead (0 at consensus)."""
-        def disp(w):
-            w32 = w.astype(jnp.float32)
-            mean = jnp.mean(w32, axis=0, keepdims=True)
-            return jnp.sum(jnp.square(w32 - mean)), jnp.sum(jnp.square(mean)) * w.shape[0]
-        num, den = 0.0, 0.0
-        for leaf in jax.tree.leaves(state.w_cache):
-            n, d = disp(leaf)
-            num, den = num + n, den + d
-        return jnp.sqrt(num / jnp.maximum(den, 1e-12))
+        params0 = jax.tree.map(lambda a: a[0], state.z_hist)
+        spec = self._spec(params0)
+        g = ConsensusState(z_hist=state.z_hist, y=state.y,
+                           w_cache=state.w_cache, x=(), t=state.step,
+                           rng=state.rng)
+        return consensus_residual(spec, g)

@@ -2,6 +2,9 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")  # collection degrades to skip without the test extra
 from hypothesis import given, settings, strategies as st
 
 from repro.core.blocks import (edge_set_from_support, make_flat_blocks,

@@ -1,6 +1,9 @@
 """Data pipeline tests."""
 import jax.numpy as jnp
 import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")  # collection degrades to skip without the test extra
 from hypothesis import given, settings, strategies as st
 
 from repro.data import TokenPipeline, make_sparse_logreg

@@ -2,6 +2,8 @@
 import jax.numpy as jnp
 import numpy as np
 import pytest
+
+pytest.importorskip("hypothesis")  # collection degrades to skip without the test extra
 from hypothesis import given, settings, strategies as st
 
 from repro.core.prox import (make_prox, prox_box, prox_group_lasso, prox_l1,

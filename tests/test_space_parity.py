@@ -1,0 +1,140 @@
+"""Flat <-> pytree parity: the same quadratic consensus problem driven
+through ``FlatSpace`` and ``TreeSpace`` must produce the SAME z
+trajectory (same seed, same config) — for all three block-selection
+policies, under bounded delay, heterogeneous rho_i, and a sparse
+general-form edge set.
+
+Construction: dim = M * DBLK coordinates; flat block j is the
+coordinate slice [j*DBLK, (j+1)*DBLK); the pytree has one leaf per
+block ("w0".."w{M-1}", each (DBLK,)) pinned to block j via an explicit
+TreeBlocks assignment. Both spaces then draw identical (N, M) delay and
+selection randomness from the same key, so every update is elementwise
+identical.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.api import ConsensusSession
+from repro.configs.base import ADMMConfig
+from repro.core.blocks import TreeBlocks
+
+N, M, DBLK = 3, 4, 5
+DIM = M * DBLK
+
+# every worker keeps >= 1 block; block 0 is shared by all
+EDGE = np.array([[1, 1, 0, 1],
+                 [1, 0, 1, 0],
+                 [1, 1, 1, 1]], bool)
+RHO_SCALE = np.array([0.5, 1.0, 2.0], np.float32)
+
+
+def _centers():
+    rng = np.random.RandomState(7)
+    return jnp.asarray(rng.randn(N, DIM).astype(np.float32))
+
+
+def _flat_loss(z, c):
+    return 0.5 * jnp.sum(jnp.square(z - c))
+
+
+def _tree_params():
+    return {f"w{j}": jnp.zeros((DBLK,), jnp.float32) for j in range(M)}
+
+
+def _tree_loss(p, c):
+    z = jnp.concatenate([p[f"w{j}"] for j in range(M)])
+    return 0.5 * jnp.sum(jnp.square(z - c))
+
+
+def _tree_z(sess, state):
+    zt = sess.z(state)
+    return jnp.concatenate([zt[f"w{j}"] for j in range(M)])
+
+
+@pytest.mark.parametrize("scheme", ["random", "cyclic", "gauss_southwell"])
+def test_flat_tree_same_z_trajectory(scheme):
+    cfg = ADMMConfig(rho=2.0, gamma=0.1, max_delay=1, block_fraction=0.5,
+                     num_blocks=M, block_selection=scheme, l1_coef=1e-3,
+                     seed=0)
+    centers = _centers()
+
+    flat = ConsensusSession.flat(_flat_loss, centers, dim=DIM, cfg=cfg,
+                                 edge=EDGE, rho_scale=RHO_SCALE)
+
+    params = _tree_params()
+    # leaf k of the sorted dict IS flat block k
+    tblocks = TreeBlocks(num_blocks=M, leaf_block_ids=tuple(range(M)),
+                         treedef=jax.tree.structure(params))
+    tree = ConsensusSession.pytree(_tree_loss, params, cfg, num_workers=N,
+                                   blocks=tblocks, edge=EDGE,
+                                   rho_scale=RHO_SCALE)
+
+    sf = flat.init()
+    st = tree.init()
+    step_f = flat.step_fn()
+    step_t = tree.step_fn()
+    traj_err = []
+    for t in range(25):
+        sf, info_f = step_f(sf, centers)
+        st, info_t = step_t(st, centers)
+        zf = np.asarray(flat.z(sf))
+        zt = np.asarray(_tree_z(tree, st))
+        traj_err.append(float(np.max(np.abs(zf - zt))))
+        np.testing.assert_allclose(zf, zt, rtol=1e-6, atol=1e-6,
+                                   err_msg=f"{scheme} diverged at epoch {t}")
+        np.testing.assert_allclose(float(info_f["selected_fraction"]),
+                                   float(info_t["selected_fraction"]),
+                                   atol=1e-7)
+    # and the run actually moved somewhere
+    assert float(np.max(np.abs(zf))) > 0.0, traj_err
+
+
+def test_pytree_edge_set_respected():
+    """Workers never touch blocks outside their edge neighborhood: the
+    duals y of a (worker, block) pair outside E stay exactly zero."""
+    cfg = ADMMConfig(rho=2.0, gamma=0.1, max_delay=1, block_fraction=1.0,
+                     num_blocks=M, seed=1)
+    params = _tree_params()
+    tblocks = TreeBlocks(num_blocks=M, leaf_block_ids=tuple(range(M)),
+                         treedef=jax.tree.structure(params))
+    sess = ConsensusSession.pytree(_tree_loss, params, cfg, num_workers=N,
+                                   blocks=tblocks, edge=EDGE)
+    state = sess.init()
+    step = sess.step_fn()
+    centers = _centers()
+    for _ in range(5):
+        state, _ = step(state, centers)
+    for j in range(M):
+        y_j = np.asarray(state.y[f"w{j}"])                 # (N, DBLK)
+        outside = ~EDGE[:, j]
+        assert np.all(y_j[outside] == 0.0), (j, y_j)
+        inside = EDGE[:, j]
+        assert np.any(y_j[inside] != 0.0), (j, y_j)
+
+
+def test_pytree_heterogeneous_rho_changes_trajectory():
+    """rho_scale is actually honored in pytree mode (not silently
+    ignored as before the VariableSpace refactor)."""
+    cfg = ADMMConfig(rho=2.0, gamma=0.1, max_delay=0, block_fraction=1.0,
+                     num_blocks=M, seed=0)
+    params = _tree_params()
+    tblocks = TreeBlocks(num_blocks=M, leaf_block_ids=tuple(range(M)),
+                         treedef=jax.tree.structure(params))
+    centers = _centers()
+
+    def final_z(rho_scale):
+        sess = ConsensusSession.pytree(_tree_loss, params, cfg,
+                                       num_workers=N, blocks=tblocks,
+                                       rho_scale=rho_scale)
+        state = sess.init()
+        step = sess.step_fn()
+        for _ in range(10):
+            state, _ = step(state, centers)
+        return np.asarray(_tree_z(sess, state))
+
+    z_homog = final_z(None)
+    z_heterog = final_z(RHO_SCALE)
+    assert np.isfinite(z_homog).all() and np.isfinite(z_heterog).all()
+    assert float(np.max(np.abs(z_homog - z_heterog))) > 1e-4
