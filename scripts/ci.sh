@@ -11,5 +11,11 @@ if ! python -c "import hypothesis" >/dev/null 2>&1; then
         || echo "[ci] install failed (offline?); continuing — hypothesis modules will skip"
 fi
 
+# kernel benchmark smoke: numeric pallas<->jnp parity + NaN check and
+# fused-epoch HBM-byte regression gate vs benchmarks/kernels_baseline.json
+echo "[ci] kernels bench (smoke)"
+env PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" \
+    python benchmarks/kernels_bench.py --smoke
+
 exec env PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" \
     python -m pytest -x -q "$@"

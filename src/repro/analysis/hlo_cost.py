@@ -86,9 +86,34 @@ class Cost:
             self.coll[k] += mult * v
 
 
-_INSTR_RE = re.compile(r"^\s+(?:ROOT )?%([^\s=]+) = ")
+_INSTR_RE = re.compile(r"^\s+(?:ROOT )?%?([^\s=]+) = ")
 _COMP_RE = re.compile(r"^(ENTRY )?%?([^\s(]+)[^{]*\{\s*$")
 _TRIP_RE = re.compile(r'known_trip_count":\{"n":"(\d+)"')
+
+
+def _operand_names(text: str) -> List[str]:
+    """Operand instruction names, with or without ``%`` sigils.
+
+    Optimized HLO writes ``fusion(%a, %b)``; the pre-optimization dump
+    (``lower().compiler_ir(dialect="hlo")``) writes ``add(a.1, b.2)``,
+    optionally with leading shape tokens. Commas inside ``[]``/``{}``/
+    ``()`` (shape dims, layouts, nested tuples) are not separators."""
+    names: List[str] = []
+    depth = 0
+    tok: List[str] = []
+    for ch in text + ",":
+        if ch == "," and depth == 0:
+            t = "".join(tok).strip()
+            tok = []
+            if t:
+                names.append(t.split()[-1].lstrip("%"))
+            continue
+        if ch in "([{":
+            depth += 1
+        elif ch in ")]}":
+            depth -= 1
+        tok.append(ch)
+    return names
 
 
 def _balanced(text: str, start: int) -> int:
@@ -111,7 +136,9 @@ def parse_module(hlo: str):
     for line in hlo.splitlines():
         if cur is None:
             m = _COMP_RE.match(line)
-            if m and "->" in line:
+            # optimized headers carry a `(params) -> result` signature;
+            # the pre-optimization dump is just `name {`
+            if m and not line.startswith("HloModule"):
                 cur = m.group(2)
                 comps[cur] = []
                 if m.group(1):
@@ -141,7 +168,7 @@ def parse_module(hlo: str):
         aclose = _balanced(rest2, par)
         operand_text = rest2[par + 1 : aclose]
         attrs = rest2[aclose + 1:]
-        operands = re.findall(r"%([^\s,()]+)", operand_text)
+        operands = _operand_names(operand_text)
         comps[cur].append(Instr(name, op, type_text, operands, attrs))
         shapes[name] = type_text
     return comps, entry, shapes

@@ -75,10 +75,13 @@ class ConsensusSession:
              l1_coef: Optional[float] = None,
              clip: Optional[float] = None,
              l2_coef: float = 0.0,
-             selector=None, delay_model=None) -> "ConsensusSession":
+             selector=None, delay_model=None,
+             backend: Optional[str] = None) -> "ConsensusSession":
         """Flat-vector consensus over ``dim`` coordinates split into
         ``cfg.num_blocks`` blocks. Regularizer terms default to the
-        config's (``cfg.l1_coef`` / ``cfg.clip``); kwargs override."""
+        config's (``cfg.l1_coef`` / ``cfg.clip``); kwargs override.
+        ``backend`` (jnp | pallas | auto) overrides ``cfg.backend`` —
+        the fused-Pallas vs pure-jnp hot-path switch."""
         cfg = cfg if cfg is not None else ADMMConfig()
         problem = make_problem(
             loss_fn, data, dim=dim, num_blocks=cfg.num_blocks,
@@ -86,7 +89,8 @@ class ConsensusSession:
             l1_coef=cfg.l1_coef if l1_coef is None else l1_coef,
             clip=cfg.clip if clip is None else clip,
             l2_coef=l2_coef, rho_scale=rho_scale)
-        spec = problem.spec(cfg, selector=selector, delay_model=delay_model)
+        spec = problem.spec(cfg, selector=selector, delay_model=delay_model,
+                            backend=backend)
         return ConsensusSession(spec=spec, cfg=cfg, data=problem.data,
                                 problem=problem)
 
@@ -96,17 +100,19 @@ class ConsensusSession:
                blocks: Optional[TreeBlocks] = None,
                edge: Optional[Any] = None,
                rho_scale: Optional[Any] = None,
-               selector=None, delay_model=None) -> "ConsensusSession":
+               selector=None, delay_model=None,
+               backend: Optional[str] = None) -> "ConsensusSession":
         """Params-pytree consensus: leaves are balanced into
         ``cfg.num_blocks`` logical blocks (or pass explicit ``blocks``);
-        per-worker batches stream in through ``step``/``run``."""
+        per-worker batches stream in through ``step``/``run``.
+        ``backend`` (jnp | pallas | auto) overrides ``cfg.backend``."""
         cfg = cfg if cfg is not None else ADMMConfig()
         if blocks is None:
             blocks = make_tree_blocks(params, cfg.num_blocks)
         space = TreeSpace(blocks=blocks, num_workers=num_workers)
         spec = make_spec(space, cfg, loss_fn, edge=edge, rho_scale=rho_scale,
                          selector=selector, delay_model=delay_model,
-                         track_x=False)
+                         track_x=False, backend=backend)
         return ConsensusSession(spec=spec, cfg=cfg, z0=params)
 
     # ------------------------------------------------------------------

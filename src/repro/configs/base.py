@@ -169,6 +169,9 @@ class ADMMConfig:
     clip: Optional[float] = None  # box constraint ||z||_inf <= C
     num_blocks: int = 16        # M logical blocks (== model-axis size on pod)
     block_selection: str = "random"  # random | cyclic | gauss_southwell
+    # compute backend for the epoch's fused worker/server hot path:
+    # jnp | pallas | auto (auto = pallas on TPU, jnp elsewhere)
+    backend: str = "auto"
     seed: int = 0
 
 

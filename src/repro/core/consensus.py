@@ -56,6 +56,7 @@ class ConsensusProblem:
         return rho * self.rho_scale
 
     def space(self) -> FlatSpace:
+        # backend resolution happens in make_spec (cfg.backend / override)
         return FlatSpace(blocks=self.blocks, num_workers=self.num_workers)
 
     def spec(self, cfg: ADMMConfig, **overrides) -> ConsensusSpec:

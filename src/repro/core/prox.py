@@ -47,11 +47,18 @@ def prox_group_lasso(v, lam, mu, group_size: int):
 
 class Regularizer(NamedTuple):
     """h(z) and its prox. ``prox(v, mu)`` solves
-    argmin_u h(u) + mu/2 ||v - u||^2 subject to the box constraint."""
+    argmin_u h(u) + mu/2 ||v - u||^2 subject to the box constraint.
+
+    ``fusable`` marks the prox as belonging to the l1+box family the
+    fused Pallas server kernel implements natively; anything else
+    (l2 shrinkage, group lasso, custom callables) makes the pallas
+    backend fall back to the jnp server path for the prox step.
+    """
     prox: Callable
     value: Callable
     l1_coef: float
     clip: Optional[float]
+    fusable: bool = False
 
 
 def make_prox(l1_coef: float = 0.0, clip: Optional[float] = None,
@@ -74,4 +81,8 @@ def make_prox(l1_coef: float = 0.0, clip: Optional[float] = None,
             h = h + 0.5 * l2_coef * jnp.sum(jnp.square(z))
         return h
 
-    return Regularizer(prox=prox, value=value, l1_coef=l1_coef, clip=clip)
+    # clip=0.0 means the degenerate box {0} here, but the kernel's
+    # clip-parameter encodes 0.0 as "no box" — keep that case on jnp
+    return Regularizer(prox=prox, value=value, l1_coef=l1_coef, clip=clip,
+                       fusable=(l2_coef == 0.0
+                                and (clip is None or clip > 0.0)))

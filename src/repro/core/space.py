@@ -28,6 +28,19 @@ Algorithm 1 (all workers + all servers); the flat driver
 (``core/consensus.py``), the pytree trainer (``training/trainer.py``)
 and the user-facing ``repro.api.ConsensusSession`` are all thin
 adapters over it.
+
+Each space carries a **compute backend** for the epoch's elementwise
+hot path (``backend="jnp" | "pallas"``, resolved from ``"auto"`` by
+:func:`resolve_backend`):
+
+* ``jnp``    — the pure-jnp reference composition (worker update, three
+  sel-masked merges, edge-masked reduce, prox);
+* ``pallas`` — the fused kernels in ``kernels/admm_update.py`` /
+  ``kernels/prox_update.py``: ONE pass over the (N, M, dblk) worker
+  bundles for update (11)(12)(9) + the select writes, and a server
+  kernel that reduces over workers inside the grid so ``w_sum`` never
+  materializes in HBM. Off-TPU the kernels run in interpret mode
+  (validation); proxes outside the l1+box family fall back to jnp.
 """
 from __future__ import annotations
 
@@ -38,10 +51,37 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from ..kernels import ops as kernel_ops
 from .admm import server_update, worker_update
 from .async_sim import gather_delayed, push_history, sample_delays, select_blocks
 from .blocks import FlatBlocks, TreeBlocks
 from .prox import Regularizer, make_prox
+
+
+# ---------------------------------------------------------------------------
+# compute backends (the epoch's elementwise hot path)
+# ---------------------------------------------------------------------------
+
+BACKENDS = ("jnp", "pallas", "pallas_stub")
+
+
+def resolve_backend(backend: Optional[str] = None) -> str:
+    """Resolve a space compute backend name.
+
+    ``"auto"``/None picks ``pallas`` on TPU (compiled Mosaic kernels)
+    and ``jnp`` everywhere else. An explicit ``"pallas"`` off-TPU runs
+    the same kernels in interpret mode (jnp-parity validation — pinned
+    by tests/test_backend_parity.py). ``"pallas_stub"`` is internal:
+    the fused ops lower as single opaque boundary ops so
+    ``analysis/hlo_cost.py`` can charge them exactly their
+    operand+result HBM traffic (used by benchmarks/kernels_bench.py).
+    """
+    if backend in (None, "auto"):
+        return "pallas" if jax.default_backend() == "tpu" else "jnp"
+    if backend not in BACKENDS:
+        raise ValueError(f"unknown backend {backend!r}; "
+                         f"expected one of jnp | pallas | auto")
+    return backend
 
 
 # ---------------------------------------------------------------------------
@@ -146,12 +186,17 @@ def cyclic_selector(ctx: SelectorContext) -> jax.Array:
 
 @register_block_selector("gauss_southwell")
 def gauss_southwell_selector(ctx: SelectorContext) -> jax.Array:
-    """Greedy: the top-k blocks by gradient norm within the edge set."""
+    """Greedy: exactly the top-k blocks by gradient norm within the edge
+    set. Ties are broken deterministically toward the lower block index
+    (``top_k`` is stable), so the selected count per worker is always
+    min(k, |edge row|) — a ``gnorm >= thresh`` test would over-select
+    whole tie groups."""
     M = ctx.edge.shape[1]
     gnorm = jnp.where(ctx.edge, ctx.grad_sqnorm(), -jnp.inf)
-    k = max(1, int(round(ctx.block_fraction * M)))
-    thresh = jax.lax.top_k(gnorm, k)[0][:, -1:]
-    return (gnorm >= thresh) & ctx.edge
+    k = max(1, min(M, int(round(ctx.block_fraction * M))))
+    _, idx = jax.lax.top_k(gnorm, k)
+    sel = jnp.any(jax.nn.one_hot(idx, M, dtype=bool), axis=-2)
+    return sel & ctx.edge
 
 
 # ---------------------------------------------------------------------------
@@ -179,8 +224,12 @@ class VariableSpace(Protocol):
     def grad_sqnorm(self, g: Any) -> jax.Array: ...
     def worker_update(self, g, y, z_tilde, rho_vec) -> Tuple[Any, Any, Any]: ...
     def select(self, sel: jax.Array, new: Any, old: Any) -> Any: ...
+    def worker_select_update(self, g, y, z_tilde, w_cache, x, sel, rho_vec,
+                             track_x: bool) -> Tuple[Any, Any, Any]: ...
     def reduce_workers(self, w: Any, edge: jax.Array) -> Any: ...
     def server_update(self, z_cur, w_sum, rho_sum, gamma, prox) -> Any: ...
+    def server_consensus_update(self, z_cur, w_cache, edge, rho_sum, gamma,
+                                reg) -> Any: ...
     def zeros_workers(self, z0: Any) -> Any: ...
     def broadcast_workers(self, z0: Any) -> Any: ...
     def workers_scaled(self, z0: Any, rho_vec: jax.Array) -> Any: ...
@@ -190,13 +239,21 @@ class VariableSpace(Protocol):
 @dataclasses.dataclass(frozen=True)
 class FlatSpace:
     """Flat-vector consensus: z is (M, dblk) blocks of a padded vector;
-    worker bundles are (N, M, dblk) arrays."""
+    worker bundles are (N, M, dblk) arrays — the Pallas kernels' native
+    layout, so the ``pallas`` backend dispatches without reshapes."""
     blocks: FlatBlocks
     num_workers: int
+    backend: str = "jnp"
 
     @property
     def num_blocks(self) -> int:
         return self.blocks.num_blocks
+
+    def _use_kernels(self) -> bool:
+        return self.backend != "jnp"
+
+    def _stub(self) -> bool:
+        return self.backend == "pallas_stub"
 
     # ---- representation -------------------------------------------------
     def init_repr(self, z0):
@@ -237,12 +294,34 @@ class FlatSpace:
     def select(self, sel, new, old):
         return jnp.where(sel[..., None], new, old)
 
+    def worker_select_update(self, g, y, z_tilde, w_cache, x, sel, rho_vec,
+                             track_x):
+        if self._use_kernels():
+            out = kernel_ops.admm_worker_select_update(
+                g, y, z_tilde, w_cache, sel, rho_vec,
+                x if track_x else None, boundary_stub=self._stub())
+            return out if track_x else (out[0], out[1], x)
+        x_new, y_new, w_new = self.worker_update(g, y, z_tilde, rho_vec)
+        return (self.select(sel, y_new, y),
+                self.select(sel, w_new, w_cache),
+                self.select(sel, x_new, x) if track_x else x)
+
     # ---- server side ----------------------------------------------------
     def reduce_workers(self, w, edge):
         return jnp.sum(jnp.where(edge[..., None], w, 0.0), axis=0)
 
     def server_update(self, z_cur, w_sum, rho_sum, gamma, prox):
         return server_update(z_cur, w_sum, rho_sum[:, None], gamma, prox)
+
+    def server_consensus_update(self, z_cur, w_cache, edge, rho_sum, gamma,
+                                reg):
+        if self._use_kernels() and getattr(reg, "fusable", False):
+            return kernel_ops.server_prox_update(
+                z_cur, w_cache, edge, rho_sum, gamma, reg.l1_coef,
+                0.0 if reg.clip is None else reg.clip,
+                boundary_stub=self._stub())
+        w_sum = self.reduce_workers(w_cache, edge)
+        return self.server_update(z_cur, w_sum, rho_sum, gamma, reg.prox)
 
     # ---- state construction --------------------------------------------
     def zeros_workers(self, z0):
@@ -264,13 +343,24 @@ class TreeSpace:
     """Pytree consensus: z is a params pytree; worker bundles are pytrees
     whose leaves carry a leading worker axis N. Block j is the set of
     leaves with ``leaf_block_ids[k] == j``. Arithmetic runs in float32
-    and is stored back in each leaf's dtype (bf16-safe under dryrun)."""
+    and is stored back in each leaf's dtype (bf16-safe under dryrun).
+
+    The ``pallas`` backend routes each leaf through the batched kernels
+    as an (N, 1, leaf_size) view — block masks become the single-row
+    select mask, so the same fused ops serve both spaces."""
     blocks: TreeBlocks
     num_workers: int
+    backend: str = "jnp"
 
     @property
     def num_blocks(self) -> int:
         return self.blocks.num_blocks
+
+    def _use_kernels(self) -> bool:
+        return self.backend != "jnp"
+
+    def _stub(self) -> bool:
+        return self.backend == "pallas_stub"
 
     def _bid_tree(self):
         return self.blocks.block_id_tree()
@@ -333,6 +423,37 @@ class TreeSpace:
             return jnp.where(m, n_l, o_l).astype(o_l.dtype)
         return jax.tree.map(f, new, old, self._bid_tree())
 
+    def worker_select_update(self, g, y, z_tilde, w_cache, x, sel, rho_vec,
+                             track_x):
+        if not self._use_kernels():
+            x_new, y_new, w_new = self.worker_update(g, y, z_tilde, rho_vec)
+            return (self.select(sel, y_new, y),
+                    self.select(sel, w_new, w_cache),
+                    self.select(sel, x_new, x) if track_x else x)
+        N = self.num_workers
+        rho32 = rho_vec.astype(jnp.float32)
+        stub = self._stub()
+        to3 = lambda a: a.astype(jnp.float32).reshape(N, 1, -1)
+        back = lambda o, like: o.reshape(like.shape).astype(like.dtype)
+
+        def upd(g_l, y_l, zt_l, w_l, *rest):
+            (x_l, bid) = rest if track_x else (None, rest[0])
+            out = kernel_ops.admm_worker_select_update(
+                to3(g_l), to3(y_l), to3(zt_l), to3(w_l), sel[:, bid][:, None],
+                rho32, None if x_l is None else to3(x_l),
+                boundary_stub=stub)
+            outs = (back(out[0], y_l), back(out[1], w_l))
+            return outs + ((back(out[2], x_l),) if track_x else ())
+
+        args = (g, y, z_tilde, w_cache) + ((x,) if track_x else ())
+        out = jax.tree.map(upd, *args, self._bid_tree())
+        leaf = lambda t: isinstance(t, tuple)
+        y_new, w_new = (jax.tree.map(lambda t, i=i: t[i], out, is_leaf=leaf)
+                        for i in range(2))
+        x_new = (jax.tree.map(lambda t: t[2], out, is_leaf=leaf)
+                 if track_x else x)
+        return y_new, w_new, x_new
+
     # ---- server side ----------------------------------------------------
     def reduce_workers(self, w, edge):
         def f(w_l, bid):
@@ -346,6 +467,25 @@ class TreeSpace:
                                   rho_sum[bid], gamma, prox)
             return z_new.astype(z_l.dtype)
         return jax.tree.map(f, z_cur, w_sum, self._bid_tree())
+
+    def server_consensus_update(self, z_cur, w_cache, edge, rho_sum, gamma,
+                                reg):
+        if self._use_kernels() and getattr(reg, "fusable", False):
+            N = self.num_workers
+            stub = self._stub()
+            l1 = reg.l1_coef
+            clip = 0.0 if reg.clip is None else reg.clip
+
+            def f(z_l, w_l, bid):
+                out = kernel_ops.server_prox_update(
+                    z_l.astype(jnp.float32).reshape(1, -1),
+                    w_l.astype(jnp.float32).reshape(N, 1, -1),
+                    edge[:, bid][:, None], rho_sum[bid].reshape(1),
+                    gamma, l1, clip, boundary_stub=stub)
+                return out.reshape(z_l.shape).astype(z_l.dtype)
+            return jax.tree.map(f, z_cur, w_cache, self._bid_tree())
+        w_sum = self.reduce_workers(w_cache, edge)
+        return self.server_update(z_cur, w_sum, rho_sum, gamma, reg.prox)
 
     # ---- state construction --------------------------------------------
     def zeros_workers(self, z0):
@@ -412,8 +552,19 @@ class ConsensusSpec:
 
 
 def make_spec(space, cfg, loss_fn, *, edge=None, rho_scale=None, reg=None,
-              selector=None, delay_model=None, track_x=False) -> ConsensusSpec:
-    """Build a ConsensusSpec from an ADMMConfig plus problem structure."""
+              selector=None, delay_model=None, track_x=False,
+              backend=None) -> ConsensusSpec:
+    """Build a ConsensusSpec from an ADMMConfig plus problem structure.
+
+    ``backend`` (jnp | pallas | auto) overrides ``cfg.backend`` and is
+    resolved onto the space — the one switch that swaps the epoch's
+    elementwise hot path between the jnp composition and the fused
+    Pallas kernels."""
+    resolved = resolve_backend(
+        backend if backend is not None else getattr(cfg, "backend", "auto"))
+    if (dataclasses.is_dataclass(space)
+            and getattr(space, "backend", None) != resolved):
+        space = dataclasses.replace(space, backend=resolved)
     N, M = space.num_workers, space.num_blocks
     if edge is None:
         edge = jnp.ones((N, M), bool)
@@ -473,19 +624,19 @@ def asybadmm_epoch(spec: ConsensusSpec, state: ConsensusState, data
                           grad_sqnorm=lambda: space.grad_sqnorm(g))
     sel = spec.selector(ctx)
 
-    # --- worker update (11)(12)(9), masked to selected blocks ---
-    x_new, y_new, w_new = space.worker_update(g, state.y, z_tilde,
-                                              spec.rho_vec)
-    y = space.select(sel, y_new, state.y)
-    w_cache = space.select(sel, w_new, state.w_cache)   # push w to server j
-    x = space.select(sel, x_new, state.x) if spec.track_x else state.x
+    # --- worker update (11)(12)(9) + the sel-masked merges, one fused
+    #     pass over the worker bundles on the pallas backend ---
+    y, w_cache, x = space.worker_select_update(
+        g, state.y, z_tilde, state.w_cache, state.x, sel, spec.rho_vec,
+        spec.track_x)
 
-    # --- server update (13): fresh w for pushers, stale cache otherwise ---
-    w_sum = space.reduce_workers(w_cache, spec.edge)
+    # --- server update (13): fresh w for pushers, stale cache otherwise;
+    #     pallas fuses the edge-masked reduce into the prox grid ---
     rho_sum = jnp.sum(jnp.where(spec.edge, spec.rho_vec[:, None], 0.0),
                       axis=0)                                       # (M,)
-    z_new = space.server_update(space.current(state.z_hist), w_sum, rho_sum,
-                                spec.gamma, spec.reg.prox)
+    z_new = space.server_consensus_update(
+        space.current(state.z_hist), w_cache, spec.edge, rho_sum,
+        spec.gamma, spec.reg)
 
     info = {"loss": jnp.mean(losses),
             "selected_fraction": jnp.mean(sel.astype(jnp.float32))}

@@ -1,2 +1,3 @@
 from . import ops, ref
-from .ops import admm_worker_update, logreg_grad, matmul, prox_consensus
+from .ops import (admm_worker_select_update, admm_worker_update, logreg_grad,
+                  matmul, prox_consensus, server_prox_update)

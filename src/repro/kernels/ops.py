@@ -1,10 +1,23 @@
 """Public jit'd wrappers around the Pallas kernels.
 
 Handle arbitrary shapes/dtypes: flatten to 2D, pad to (8,128) vreg /
-(128,128) MXU alignment, dispatch, slice back. ``interpret`` defaults to
+(128,128) MXU alignment (skipping the pad-copy entirely when the buffer
+is already aligned), dispatch, slice back. ``interpret`` defaults to
 True off-TPU (this container is CPU-only: interpret mode executes the
 kernel body in Python for validation; on TPU the same code compiles to
 Mosaic).
+
+``rho`` enters every ADMM op as a *traced array operand* — never a jit
+static — so rho sweeps and heterogeneous per-worker rho_vec share one
+compilation.
+
+The two epoch-native fused ops (``admm_worker_select_update`` /
+``server_prox_update``) also accept ``boundary_stub=True``, which lowers
+the op as a single opaque callback custom-call instead of a Pallas
+kernel. The stub is never executed for real work — it exists so
+``analysis/hlo_cost.py`` can charge the fused op exactly its
+operand+result HBM traffic (the same boundary model it applies to XLA
+fusions) when the benchmark costs the kernel-backed epoch.
 """
 from __future__ import annotations
 
@@ -13,27 +26,37 @@ from typing import Optional
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from . import admm_update as _admm
 from . import logreg_grad as _lg
 from . import prox_update as _prox
+from . import ref as _ref
 
 LANE = 128
+SUBLANE = 8
 
 
 def _default_interpret() -> bool:
     return jax.default_backend() != "tpu"
 
 
-def _to_2d(v, lane=LANE, sublane=8):
-    """Flatten to (R, lane) with R % sublane == 0; returns (arr2d, orig)."""
+def _round_up(n: int, m: int) -> int:
+    return -(-n // m) * m
+
+
+def _to_2d(v, lane=LANE, sublane=SUBLANE):
+    """Flatten to (R, lane) with R % sublane == 0; returns (arr2d, orig).
+
+    When the element count is already (sublane*lane)-aligned this is a
+    pure reshape — no zero-fill + scatter copy."""
     flat = v.reshape(-1)
     n = flat.shape[0]
-    row = lane
-    rows = -(-n // row)
-    rows = -(-rows // sublane) * sublane
-    padded = jnp.zeros((rows * row,), v.dtype).at[:n].set(flat)
-    return padded.reshape(rows, row), (v.shape, n)
+    rows = _round_up(-(-n // lane), sublane)
+    total = rows * lane
+    if total == n:
+        return flat.reshape(rows, lane), (v.shape, n)
+    return jnp.pad(flat, (0, total - n)).reshape(rows, lane), (v.shape, n)
 
 
 def _from_2d(a2d, orig):
@@ -41,15 +64,22 @@ def _from_2d(a2d, orig):
     return a2d.reshape(-1)[:n].reshape(shape)
 
 
-@functools.partial(jax.jit, static_argnames=("rho", "interpret"))
-def admm_worker_update(g, y, z_tilde, rho: float,
+def _rho_operand(rho):
+    """Scalar or () / (1,) array rho -> (1, 1) f32 traced operand."""
+    return jnp.asarray(rho, jnp.float32).reshape(1, 1)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def admm_worker_update(g, y, z_tilde, rho,
                        interpret: Optional[bool] = None):
-    """Fused eqs. (11)+(12)+(9) on arbitrarily-shaped buffers."""
+    """Fused eqs. (11)+(12)+(9) on arbitrarily-shaped buffers. ``rho`` is
+    a traced operand (python float or 0-d array) — distinct rho values
+    share one compilation."""
     interpret = _default_interpret() if interpret is None else interpret
     g2, orig = _to_2d(g)
     y2, _ = _to_2d(y)
     z2, _ = _to_2d(z_tilde)
-    x2, yn2, w2 = _admm.admm_worker_update_2d(g2, y2, z2, rho,
+    x2, yn2, w2 = _admm.admm_worker_update_2d(g2, y2, z2, _rho_operand(rho),
                                               interpret=interpret)
     return (_from_2d(x2, orig), _from_2d(yn2, orig), _from_2d(w2, orig))
 
@@ -62,22 +92,137 @@ def prox_consensus(z_tilde, w_sum, rho_sum, gamma: float, l1: float = 0.0,
     interpret = _default_interpret() if interpret is None else interpret
     M, d = z_tilde.shape
     rho_sum = rho_sum.reshape(M, 1).astype(z_tilde.dtype)
-    dp = -(-d // LANE) * LANE
-    Mp = -(-M // _prox.BLK_M) * _prox.BLK_M
-    zt = jnp.zeros((Mp, dp), z_tilde.dtype).at[:M, :d].set(z_tilde)
-    ws = jnp.zeros((Mp, dp), w_sum.dtype).at[:M, :d].set(w_sum)
-    rs = jnp.ones((Mp, 1), z_tilde.dtype).at[:M].set(rho_sum)
+    dp = _round_up(d, LANE)
+    Mp = _round_up(M, _prox.BLK_M)
+    if (Mp, dp) == (M, d):                 # aligned: no pad copies
+        zt, ws, rs = z_tilde, w_sum, rho_sum
+    else:
+        zt = jnp.pad(z_tilde, ((0, Mp - M), (0, dp - d)))
+        ws = jnp.pad(w_sum, ((0, Mp - M), (0, dp - d)))
+        rs = jnp.ones((Mp, 1), z_tilde.dtype).at[:M].set(rho_sum)
     out = _prox.prox_consensus_2d(zt, ws, rs, gamma, l1, clip,
                                   interpret=interpret)
-    return out[:M, :d]
+    return out[:M, :d] if (Mp, dp) != (M, d) else out
 
+
+# ---------------------------------------------------------------------------
+# epoch-native fused ops (the VariableSpace pallas backend)
+# ---------------------------------------------------------------------------
+
+def _blk_m(M: int) -> int:
+    return M if M <= _admm.BLK_M else _admm.BLK_M
+
+
+def _pad3(a, Mp: int, dp: int):
+    N, M, d = a.shape
+    if (Mp, dp) == (M, d):
+        return a
+    return jnp.pad(a, ((0, 0), (0, Mp - M), (0, dp - d)))
+
+
+def _worker_stub(g, y, zt, w_old, smask, rho2, x_old):
+    out = _ref.admm_worker_select_update_ref(
+        jnp.asarray(g), jnp.asarray(y), jnp.asarray(zt), jnp.asarray(w_old),
+        jnp.asarray(smask)[..., 0] > 0, jnp.asarray(rho2).reshape(-1),
+        None if x_old is None else jnp.asarray(x_old))
+    return tuple(np.asarray(o) for o in out)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("interpret", "boundary_stub"))
+def admm_worker_select_update(g, y, z_tilde, w_old, sel, rho_vec,
+                              x_old=None, *,
+                              interpret: Optional[bool] = None,
+                              boundary_stub: bool = False):
+    """Worker side of one epoch of Algorithm 1, fused: eqs. (11)+(12)+(9)
+    plus the sel-masked merge of y / w_cache [/ x] in one HBM pass.
+
+    g, y, z_tilde, w_old [, x_old] : (N, M, dblk);
+    sel     : (N, M) bool — the selected (worker, block) pairs;
+    rho_vec : (N,) per-worker penalties (traced — heterogeneous rho_i).
+
+    Returns (y', w'[, x']).
+    """
+    interpret = _default_interpret() if interpret is None else interpret
+    N, M, d = g.shape
+    smask = sel.astype(g.dtype)[..., None]
+    rho2 = rho_vec.astype(jnp.float32).reshape(N, 1)
+    if boundary_stub:
+        shapes = [jax.ShapeDtypeStruct(g.shape, g.dtype)] * (
+            2 if x_old is None else 3)
+        args = (g, y, z_tilde, w_old, smask, rho2)
+        if x_old is None:
+            cb = lambda *a: _worker_stub(*a, x_old=None)
+        else:
+            cb = lambda *a: _worker_stub(*a[:-1], x_old=a[-1])
+            args = args + (x_old,)
+        return jax.pure_callback(cb, tuple(shapes), *args)
+    bm = _blk_m(M)
+    Mp, dp = _round_up(M, bm), _round_up(d, LANE)
+    pads = (Mp, dp) != (M, d)
+    gp, yp, zp, wp = (_pad3(a, Mp, dp) for a in (g, y, z_tilde, w_old))
+    xp = None if x_old is None else _pad3(x_old, Mp, dp)
+    # padded blocks carry mask 0 -> they keep the (zero) old values
+    mp = _pad3(smask, Mp, 1)
+    out = _admm.admm_worker_select_update_3d(gp, yp, zp, wp, mp, rho2, xp,
+                                             interpret=interpret)
+    if pads:
+        out = tuple(o[:, :M, :d] for o in out)
+    return tuple(out)
+
+
+def _server_stub(z_cur, w_cache, emask, rs, gamma, l1, clip):
+    return np.asarray(_ref.server_prox_update_ref(
+        jnp.asarray(z_cur), jnp.asarray(w_cache),
+        jnp.asarray(emask)[..., 0] > 0, jnp.asarray(rs).reshape(-1),
+        gamma, l1, clip))
+
+
+@functools.partial(jax.jit, static_argnames=("gamma", "l1", "clip",
+                                             "interpret", "boundary_stub"))
+def server_prox_update(z_cur, w_cache, edge, rho_sum, gamma: float,
+                       l1: float = 0.0, clip: float = 0.0, *,
+                       interpret: Optional[bool] = None,
+                       boundary_stub: bool = False):
+    """Server side of one epoch of Algorithm 1, fused: the edge-masked
+    reduction of the stale-w cache over workers AND the prox step (13)
+    in one kernel — the (M, d) w_sum intermediate never touches HBM.
+
+    z_cur: (M, d); w_cache: (N, M, d); edge: (N, M) bool;
+    rho_sum: (M,) traced per-block penalty sums. Returns z_new (M, d).
+    """
+    interpret = _default_interpret() if interpret is None else interpret
+    N, M, d = w_cache.shape
+    emask = edge.astype(z_cur.dtype)[..., None]
+    rs = rho_sum.astype(jnp.float32).reshape(M, 1)
+    if boundary_stub:
+        return jax.pure_callback(
+            functools.partial(_server_stub, gamma=gamma, l1=l1, clip=clip),
+            jax.ShapeDtypeStruct(z_cur.shape, z_cur.dtype),
+            z_cur, w_cache, emask, rs)
+    bm = _blk_m(M)
+    Mp, dp = _round_up(M, bm), _round_up(d, LANE)
+    pads = (Mp, dp) != (M, d)
+    if pads:
+        z_cur = jnp.pad(z_cur, ((0, Mp - M), (0, dp - d)))
+        # padded rho_sum rows are 1.0 so mu stays nonzero off the slice
+        rs = jnp.ones((Mp, 1), jnp.float32).at[:M].set(rs)
+    out = _prox.server_prox_fused_2d(
+        z_cur, _pad3(w_cache, Mp, dp), _pad3(emask, Mp, 1), rs,
+        gamma, l1, clip, interpret=interpret)
+    return out[:M, :d] if pads else out
+
+
+# ---------------------------------------------------------------------------
+# matmul / logistic-regression gradient
+# ---------------------------------------------------------------------------
 
 def _pad2(a, rm, cm):
     r, c = a.shape
-    rp, cp = -(-r // rm) * rm, -(-c // cm) * cm
+    rp, cp = _round_up(r, rm), _round_up(c, cm)
     if (rp, cp) == (r, c):
         return a
-    return jnp.zeros((rp, cp), a.dtype).at[:r, :c].set(a)
+    return jnp.pad(a, ((0, rp - r), (0, cp - c)))
 
 
 @functools.partial(jax.jit, static_argnames=("transpose_a", "interpret"))

@@ -9,12 +9,29 @@ import jax
 import jax.numpy as jnp
 
 
-def admm_worker_update_ref(g, y, z_tilde, rho: float):
-    """Fused eqs. (11)+(12)+(9): returns (x, y_new, w)."""
+def admm_worker_update_ref(g, y, z_tilde, rho):
+    """Fused eqs. (11)+(12)+(9): returns (x, y_new, w). ``rho`` is a
+    scalar or any array broadcastable against the buffers."""
     x = z_tilde - (g + y) / rho
     y_new = y + rho * (x - z_tilde)      # == -g
     w = rho * x + y_new
     return x, y_new, w
+
+
+def admm_worker_select_update_ref(g, y, z_tilde, w_old, sel, rho_vec,
+                                  x_old=None):
+    """Worker update + Alg. 1 sel-masked merges in one op.
+
+    g, y, z_tilde, w_old [, x_old]: (N, M, dblk); sel: (N, M) bool;
+    rho_vec: (N,). Returns (y', w'[, x'])."""
+    rho = rho_vec.reshape(-1, 1, 1)
+    x, y_new, w = admm_worker_update_ref(g, y, z_tilde, rho)
+    keep = sel[..., None]
+    y_out = jnp.where(keep, y_new, y)
+    w_out = jnp.where(keep, w, w_old)
+    if x_old is None:
+        return y_out, w_out
+    return y_out, w_out, jnp.where(keep, x, x_old)
 
 
 def prox_consensus_ref(z_tilde, w_sum, rho_sum, gamma: float,
@@ -27,6 +44,16 @@ def prox_consensus_ref(z_tilde, w_sum, rho_sum, gamma: float,
     if clip > 0:
         u = jnp.clip(u, -clip, clip)
     return u
+
+
+def server_prox_update_ref(z_cur, w_cache, edge, rho_sum, gamma: float,
+                           l1: float, clip: float):
+    """Edge-masked worker reduction + eq. (13) in one op.
+
+    z_cur: (M, d); w_cache: (N, M, d); edge: (N, M) bool; rho_sum: (M,)."""
+    w_sum = jnp.sum(jnp.where(edge[..., None], w_cache, 0.0), axis=0)
+    return prox_consensus_ref(z_cur, w_sum, rho_sum.reshape(-1, 1),
+                              gamma, l1, clip)
 
 
 def logreg_margin_ref(X, y, w):

@@ -41,6 +41,11 @@ def main() -> None:
     ap.add_argument("--num-blocks", type=int, default=8)
     ap.add_argument("--block-selection", default="random",
                     choices=["random", "cyclic", "gauss_southwell"])
+    ap.add_argument("--backend", default="auto",
+                    choices=["auto", "jnp", "pallas"],
+                    help="epoch hot-path backend: fused Pallas kernels "
+                         "(native on TPU, interpret mode elsewhere) or "
+                         "the pure-jnp composition")
     ap.add_argument("--lr", type=float, default=1e-3)
     ap.add_argument("--ckpt", default=None)
     ap.add_argument("--log-every", type=int, default=10)
@@ -66,6 +71,7 @@ def main() -> None:
                           block_fraction=args.block_fraction,
                           num_blocks=args.num_blocks,
                           block_selection=args.block_selection,
+                          backend=args.backend,
                           seed=args.seed)
         session = ConsensusSession.pytree(model.loss, params, acfg,
                                           num_workers=args.workers)

@@ -7,6 +7,7 @@ import pytest
 
 from repro.configs.base import ADMMConfig
 from repro.core import init_state, make_problem, make_step_fn, run
+from repro.core.space import BLOCK_SELECTORS, SelectorContext
 
 
 def _problem(rho_scale=None, seed=0):
@@ -59,6 +60,28 @@ def test_gauss_southwell_selects_max_gradient_block():
     moved = np.asarray(jnp.any(new.y != 0, axis=-1))        # (N, M)
     assert (moved.argmax(axis=1) == expect).all()
     assert (moved.sum(axis=1) == 1).all()
+
+
+def test_gauss_southwell_exact_count_under_ties():
+    """Tied gradient norms must not over-select: GS picks EXACTLY
+    min(k, |edge row|) blocks per worker, ties broken deterministically
+    toward the lower block index."""
+    N, M, k = 3, 8, 2
+    edge = jnp.ones((N, M), bool).at[2, 4:].set(False)   # worker 2: 4 blocks
+    # all-equal gradient norms — the worst tie case (old `gnorm >= thresh`
+    # selected the whole edge neighborhood here)
+    gnorm = jnp.ones((N, M), jnp.float32)
+    ctx = SelectorContext(rng=jax.random.PRNGKey(0), edge=edge,
+                          t=jnp.zeros((), jnp.int32),
+                          block_fraction=k / M, grad_sqnorm=lambda: gnorm)
+    sel = np.asarray(BLOCK_SELECTORS["gauss_southwell"](ctx))
+    assert (sel.sum(axis=1) == k).all(), sel
+    # deterministic: lowest-index blocks win the tie, inside the edge set
+    assert sel[0, :k].all() and not sel[0, k:].any()
+    assert (sel & ~np.asarray(edge)).sum() == 0
+    # and the draw is reproducible
+    sel2 = np.asarray(BLOCK_SELECTORS["gauss_southwell"](ctx))
+    assert (sel == sel2).all()
 
 
 def test_heterogeneous_rho_converges():
