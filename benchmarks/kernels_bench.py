@@ -1,10 +1,11 @@
 """Kernel-level benchmark: measured HBM bytes for the kernel-backed
-(pallas) epoch vs the unfused jnp epoch, plus the seed's analytic
+(pallas) epoch vs the unfused jnp epoch vs the SPMD-sharded per-shard
+program, measured wall-clock per epoch, plus the seed's analytic
 roofline projections.
 
-On this CPU container, interpret-mode wall time is meaningless; what is
-meaningful and machine-independent is the HBM traffic each formulation
-implies. We measure it from real lowered programs:
+On this CPU container, interpret-mode wall time is not TPU-predictive;
+what is meaningful and machine-independent is the HBM traffic each
+formulation implies. We measure it from real lowered programs:
 
 * both epochs are lowered through ``asybadmm_epoch`` (the single
   Algorithm 1 implementation) and costed by
@@ -14,7 +15,18 @@ implies. We measure it from real lowered programs:
 * the pallas epoch is lowered with ``backend="pallas_stub"``: each
   fused kernel appears as a single opaque boundary op charged exactly
   its operand+result bytes — the same boundary model ``hlo_cost``
-  applies to XLA fusions, and exactly the kernels' VMEM DMA contract.
+  applies to XLA fusions, and exactly the kernels' VMEM DMA contract;
+* the SPMD epoch is costed *per shard*: ``core.sharded``'s
+  ``per_shard_cost_program`` lowers one (data=4, model=2) shard of the
+  sharded epoch (collectives replaced by shape-faithful single-device
+  stand-ins, state shrunk to its local tile) — the gate checks the
+  per-shard bytes shrink toward 1/(data*model) of the fused epoch.
+
+Wall-clock is additionally *executed* at the smoke shape (jit + warmup,
+then median of 5 ``block_until_ready`` epochs) for jnp vs
+pallas(interpret) vs sharded-pallas on an 8-host-device mesh, so
+BENCH_kernels.json carries a real measured trajectory next to the cost
+model (CPU-relative numbers; the byte counts are the portable claim).
 
 Sizes follow the paper's kddA workload (~20.2M features; here split
 into M=64 lane-aligned blocks over N=8 workers) plus a small smoke
@@ -29,8 +41,20 @@ CSV columns: name, us_per_call (projected TPU v5e us), derived.
 """
 import argparse
 import json
+import os
 import sys
+import time
 from pathlib import Path
+
+# The sharded wall-clock run needs a (data=4, model=2) host-device mesh,
+# and the device count must be pinned before jax first initializes.
+# No-op when jax is already imported (this module imported from
+# elsewhere) — the sharded timing then degrades to a skip note.
+if "jax" not in sys.modules:
+    _flags = os.environ.get("XLA_FLAGS", "")
+    if "xla_force_host_platform_device_count" not in _flags:
+        os.environ["XLA_FLAGS"] = (
+            _flags + " --xla_force_host_platform_device_count=8").strip()
 
 import jax
 import jax.numpy as jnp
@@ -39,6 +63,7 @@ import numpy as np
 from repro.analysis.hlo_cost import analyze_hlo
 from repro.api import ConsensusSession
 from repro.configs.base import ADMMConfig
+from repro.core.sharded import per_shard_cost_program
 from repro.core.space import asybadmm_epoch, init_consensus_state
 
 REPO = Path(__file__).resolve().parent.parent
@@ -54,6 +79,9 @@ CASES = [
     ("smoke", 4, 8, 256),
     ("kdda_like", 8, 64, 315904),
 ]
+
+# (data, model) shards for the per-shard / sharded-wall-clock rows
+MESH_SHAPE = (4, 2)
 
 
 # ---------------------------------------------------------------------------
@@ -99,12 +127,20 @@ def _quad_loss(z, c):
     return 0.5 * jnp.sum(jnp.square(z - c))
 
 
-def _session(backend, N, M, dblk):
+def _session(backend, N, M, dblk, mesh=None, data=None):
     dim = M * dblk
     cfg = ADMMConfig(rho=2.0, gamma=0.1, max_delay=1, block_fraction=0.5,
                      num_blocks=M, l1_coef=1e-3, clip=1.0, backend=backend)
-    data = jax.ShapeDtypeStruct((N, dim), jnp.float32)
-    return ConsensusSession.flat(_quad_loss, data, dim=dim, cfg=cfg)
+    if data is None:
+        data = jax.ShapeDtypeStruct((N, dim), jnp.float32)
+    return ConsensusSession.flat(_quad_loss, data, dim=dim, cfg=cfg,
+                                 mesh=mesh)
+
+
+def _abstract_mesh():
+    """Shape-only (data, model) mesh — per-shard costing needs no devices."""
+    from jax.sharding import AbstractMesh
+    return AbstractMesh((("data", MESH_SHAPE[0]), ("model", MESH_SHAPE[1])))
 
 
 def _epoch_cost(backend, N, M, dblk):
@@ -119,12 +155,25 @@ def _epoch_cost(backend, N, M, dblk):
     return analyze_hlo(hlo)
 
 
+def _shard_epoch_cost(N, M, dblk):
+    """HLO cost of ONE shard of the SPMD epoch (kernels at their DMA
+    boundary, collectives as shape-faithful stand-ins)."""
+    sess = _session("pallas_stub", N, M, dblk, mesh=_abstract_mesh())
+    fn, args = per_shard_cost_program(sess.spec, sess.data)
+    hlo = (jax.jit(fn).lower(*args)
+           .compiler_ir(dialect="hlo").as_hlo_text())
+    return analyze_hlo(hlo)
+
+
 def measure_cases(emit):
     out = []
+    shards = MESH_SHAPE[0] * MESH_SHAPE[1]
     for name, N, M, dblk in CASES:
         jnp_cost = _epoch_cost("jnp", N, M, dblk)
         pl_cost = _epoch_cost("pallas_stub", N, M, dblk)
+        sh_cost = _shard_epoch_cost(N, M, dblk)
         saving = 1.0 - pl_cost.hbm_bytes / jnp_cost.hbm_bytes
+        shard_frac = sh_cost.hbm_bytes / pl_cost.hbm_bytes
         rec = {
             "name": name, "N": N, "M": M, "dblk": dblk, "dim": M * dblk,
             "jnp": {"hbm_bytes": int(jnp_cost.hbm_bytes),
@@ -133,13 +182,74 @@ def measure_cases(emit):
             "pallas": {"hbm_bytes": int(pl_cost.hbm_bytes),
                        "flops": int(pl_cost.flops),
                        "v5e_us": pl_cost.hbm_bytes / HBM_BW * 1e6},
+            "pallas_sharded": {
+                "hbm_bytes_per_shard": int(sh_cost.hbm_bytes),
+                "flops_per_shard": int(sh_cost.flops),
+                "v5e_us": sh_cost.hbm_bytes / HBM_BW * 1e6,
+                "mesh": f"data={MESH_SHAPE[0]},model={MESH_SHAPE[1]}",
+                "shard_bytes_frac": shard_frac,
+                "ideal_frac": 1.0 / shards,
+            },
             "bytes_saving_frac": saving,
         }
         out.append(rec)
         emit(f"epoch_{name}_N{N}_M{M},{rec['pallas']['v5e_us']:.1f},"
              f"jnp_us={rec['jnp']['v5e_us']:.1f};"
              f"bytes_saving={saving:.2%}")
+        emit(f"epoch_{name}_shard_d{MESH_SHAPE[0]}m{MESH_SHAPE[1]},"
+             f"{rec['pallas_sharded']['v5e_us']:.1f},"
+             f"shard_bytes_frac={shard_frac:.3f};ideal={1.0/shards:.3f}")
     return out
+
+
+# ---------------------------------------------------------------------------
+# measured wall-clock per epoch (real execution, smoke shape)
+# ---------------------------------------------------------------------------
+
+def _median_epoch_ms(sess, data, epochs=5):
+    state = sess.init()
+    step = sess.step_fn()
+    state, _ = step(state, data)                # compile + warm the caches
+    jax.block_until_ready(state)
+    times = []
+    for _ in range(epochs):
+        t0 = time.perf_counter()
+        state, _ = step(state, data)
+        jax.block_until_ready(state)
+        times.append((time.perf_counter() - t0) * 1e3)
+    return float(np.median(times)), len(times)
+
+
+def measure_walltime(emit):
+    """jit + block_until_ready, median of 5 — jnp vs pallas(interpret)
+    vs sharded-pallas at the smoke shape. CPU-relative numbers (pallas
+    runs in interpret mode here); recorded so the perf trajectory of the
+    epoch is measured, not only modeled."""
+    name, N, M, dblk = CASES[0]
+    dim = M * dblk
+    rng = np.random.RandomState(0)
+    data = jnp.asarray(rng.randn(N, dim), jnp.float32)
+    variants = [("jnp", "jnp", None), ("pallas", "pallas", None)]
+    need = MESH_SHAPE[0] * MESH_SHAPE[1]
+    mesh = None
+    if jax.device_count() >= need:
+        from repro.launch.mesh import make_test_mesh
+        mesh = make_test_mesh(need, model=MESH_SHAPE[1])
+        variants.append(("pallas_sharded", "pallas", mesh))
+    entries = []
+    for label, backend, m in variants:
+        ms, n = _median_epoch_ms(_session(backend, N, M, dblk, mesh=m,
+                                          data=data), data)
+        entries.append({"variant": label, "median_ms": ms, "n": n})
+        emit(f"wallclock_{name}_{label},{ms * 1e3:.0f},median_of_{n};ms={ms:.3f}")
+    if mesh is None:
+        emit(f"wallclock_{name}_pallas_sharded,0,skipped;"
+             f"need_{need}_devices_have_{jax.device_count()}")
+    return {"case": name, "shape": {"N": N, "M": M, "dblk": dblk},
+            "device_count": jax.device_count(),
+            "method": "jit + block_until_ready, median of 5 epochs "
+                      "(pallas in interpret mode on CPU)",
+            "entries": entries}
 
 
 def parity_check(epochs=5):
@@ -172,8 +282,11 @@ def main(emit=print, smoke: bool = False) -> None:
         "hbm_bw_gbps": HBM_BW / 1e9,
         "method": ("op-level (pre-optimization) HLO costed by "
                    "analysis.hlo_cost; pallas kernels charged at their "
-                   "operand+result DMA boundary via backend=pallas_stub"),
+                   "operand+result DMA boundary via backend=pallas_stub; "
+                   "pallas_sharded = ONE (data=4, model=2) shard of the "
+                   "SPMD epoch (core.sharded.per_shard_cost_program)"),
         "cases": cases,
+        "walltime": measure_walltime(emit),
     }
     failures = []
     if smoke:
@@ -182,6 +295,7 @@ def main(emit=print, smoke: bool = False) -> None:
         emit(f"epoch_backend_parity,0,max_err={err:.2e};finite={finite}")
         baseline = json.loads(BASELINE_JSON.read_text())
         min_saving = baseline["min_bytes_saving_frac"]
+        max_shard_frac = baseline["max_shard_bytes_frac"]
         if not finite:
             failures.append("NaN/Inf in epoch outputs")
         if err > baseline["max_parity_err"]:
@@ -192,6 +306,16 @@ def main(emit=print, smoke: bool = False) -> None:
                 failures.append(
                     f"{rec['name']}: bytes saving "
                     f"{rec['bytes_saving_frac']:.2%} < {min_saving:.0%}")
+        # sharding gate: per-shard bytes of the SPMD epoch must shrink
+        # toward 1/(data*model) of the fused single-device epoch at the
+        # paper-scale shape (the small smoke case is padding-dominated)
+        kdda = next(r for r in cases if r["name"] == "kdda_like")
+        frac = kdda["pallas_sharded"]["shard_bytes_frac"]
+        if frac > max_shard_frac:
+            failures.append(
+                f"kdda_like: per-shard bytes frac {frac:.3f} > "
+                f"{max_shard_frac} (ideal 1/{MESH_SHAPE[0] * MESH_SHAPE[1]}"
+                f" = {1.0 / (MESH_SHAPE[0] * MESH_SHAPE[1]):.3f})")
     OUT_JSON.write_text(json.dumps(report, indent=2) + "\n")
     emit(f"bench_json,0,written={OUT_JSON.name}")
     if failures:

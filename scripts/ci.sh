@@ -11,11 +11,22 @@ if ! python -c "import hypothesis" >/dev/null 2>&1; then
         || echo "[ci] install failed (offline?); continuing — hypothesis modules will skip"
 fi
 
-# kernel benchmark smoke: numeric pallas<->jnp parity + NaN check and
-# fused-epoch HBM-byte regression gate vs benchmarks/kernels_baseline.json
+# kernel benchmark smoke: numeric pallas<->jnp parity + NaN check,
+# fused-epoch HBM-byte regression gate, and the per-shard byte-shrink
+# gate of the SPMD epoch, all vs benchmarks/kernels_baseline.json
+# (the bench forces 8 host devices itself for the sharded wall-clock)
 echo "[ci] kernels bench (smoke)"
 env PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" \
     python benchmarks/kernels_bench.py --smoke
+
+# SPMD parity smoke: the sharded epoch needs an 8-host-device mesh, so
+# the parity suite runs in its own process with the device count forced
+# (inside the main tier-1 run below it skips) — single-device-only
+# regressions of the mesh path cannot land
+echo "[ci] SPMD parity (8 host devices, data=4 x model=2)"
+env PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" \
+    XLA_FLAGS="--xla_force_host_platform_device_count=8" \
+    python -m pytest -x -q tests/test_spmd_parity.py
 
 exec env PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" \
     python -m pytest -x -q "$@"

@@ -76,12 +76,17 @@ class ConsensusSession:
              clip: Optional[float] = None,
              l2_coef: float = 0.0,
              selector=None, delay_model=None,
-             backend: Optional[str] = None) -> "ConsensusSession":
+             backend: Optional[str] = None,
+             mesh: Any = None) -> "ConsensusSession":
         """Flat-vector consensus over ``dim`` coordinates split into
         ``cfg.num_blocks`` blocks. Regularizer terms default to the
         config's (``cfg.l1_coef`` / ``cfg.clip``); kwargs override.
         ``backend`` (jnp | pallas | auto) overrides ``cfg.backend`` —
-        the fused-Pallas vs pure-jnp hot-path switch."""
+        the fused-Pallas vs pure-jnp hot-path switch. ``mesh`` (a jax
+        Mesh or a ``launch.mesh.resolve_mesh`` preset name) overrides
+        ``cfg.mesh`` — when set, every epoch runs SPMD with workers
+        sharded over the ``data`` axes and block servers over ``model``
+        (see API.md's support matrix)."""
         cfg = cfg if cfg is not None else ADMMConfig()
         problem = make_problem(
             loss_fn, data, dim=dim, num_blocks=cfg.num_blocks,
@@ -90,7 +95,7 @@ class ConsensusSession:
             clip=cfg.clip if clip is None else clip,
             l2_coef=l2_coef, rho_scale=rho_scale)
         spec = problem.spec(cfg, selector=selector, delay_model=delay_model,
-                            backend=backend)
+                            backend=backend, mesh=mesh)
         return ConsensusSession(spec=spec, cfg=cfg, data=problem.data,
                                 problem=problem)
 
@@ -101,18 +106,21 @@ class ConsensusSession:
                edge: Optional[Any] = None,
                rho_scale: Optional[Any] = None,
                selector=None, delay_model=None,
-               backend: Optional[str] = None) -> "ConsensusSession":
+               backend: Optional[str] = None,
+               mesh: Any = None) -> "ConsensusSession":
         """Params-pytree consensus: leaves are balanced into
         ``cfg.num_blocks`` logical blocks (or pass explicit ``blocks``);
         per-worker batches stream in through ``step``/``run``.
-        ``backend`` (jnp | pallas | auto) overrides ``cfg.backend``."""
+        ``backend`` (jnp | pallas | auto) overrides ``cfg.backend``;
+        ``mesh`` overrides ``cfg.mesh`` (SPMD epoch: workers over the
+        ``data`` axes; z replicated over ``model`` in pytree mode)."""
         cfg = cfg if cfg is not None else ADMMConfig()
         if blocks is None:
             blocks = make_tree_blocks(params, cfg.num_blocks)
         space = TreeSpace(blocks=blocks, num_workers=num_workers)
         spec = make_spec(space, cfg, loss_fn, edge=edge, rho_scale=rho_scale,
                          selector=selector, delay_model=delay_model,
-                         track_x=False, backend=backend)
+                         track_x=False, backend=backend, mesh=mesh)
         return ConsensusSession(spec=spec, cfg=cfg, z0=params)
 
     # ------------------------------------------------------------------

@@ -7,7 +7,7 @@ d_model <= 512, <= 4 experts) used in CPU tests.
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional, Tuple
+from typing import Any, Optional, Tuple
 
 import jax.numpy as jnp
 
@@ -172,6 +172,11 @@ class ADMMConfig:
     # compute backend for the epoch's fused worker/server hot path:
     # jnp | pallas | auto (auto = pallas on TPU, jnp elsewhere)
     backend: str = "auto"
+    # SPMD mesh for the sharded epoch: None/"none" (single device), a jax
+    # Mesh, or a preset name resolved by repro.launch.mesh.resolve_mesh
+    # ("test" | "pod" | "multipod"). Workers shard over the data axes,
+    # FlatSpace block servers over the model axis (core/sharded.py).
+    mesh: Any = None
     seed: int = 0
 
 

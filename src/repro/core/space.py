@@ -41,6 +41,14 @@ hot path (``backend="jnp" | "pallas"``, resolved from ``"auto"`` by
   kernel that reduces over workers inside the grid so ``w_sum`` never
   materializes in HBM. Off-TPU the kernels run in interpret mode
   (validation); proxes outside the l1+box family fall back to jnp.
+
+Each space also optionally carries a **mesh** (``mesh=`` on
+``ADMMConfig`` / ``ConsensusSession`` / :func:`make_spec`): when set,
+``asybadmm_epoch`` dispatches to the SPMD-sharded implementation in
+``core/sharded.py`` — worker state sharded over the ``data`` axes,
+FlatSpace block servers sharded over ``model``, the paper's w push
+lowered to a ``psum`` that lands in each block server's local shard.
+See ``core/sharded.py`` and API.md's support matrix.
 """
 from __future__ import annotations
 
@@ -123,6 +131,38 @@ class ConstantDelay:
 
     def sample(self, rng, n_workers, n_blocks):
         return jnp.full((n_workers, n_blocks), self.delay, jnp.int32)
+
+
+@dataclasses.dataclass(frozen=True)
+class ParetoDelay:
+    """Heavy-tailed straggler staleness, clipped at the history depth:
+
+        tau_ij = clip(floor(Pareto(alpha, x_m=1)) - 1, 0, max_delay)
+
+    Most reads are fresh, but a Pareto tail of (worker, block) pairs
+    lags by the full bounded-delay window — the realistic cluster
+    profile behind the paper's Table-1 speedup story (a few stragglers
+    must not stall the block servers). Smaller ``alpha`` = heavier tail
+    (alpha <= 1 has infinite mean before clipping); ``alpha ~ 1.1-1.5``
+    matches the straggler measurements in the AD-ADMM line of work."""
+    max_delay: int
+    alpha: float = 1.2
+
+    @property
+    def depth(self) -> int:
+        return self.max_delay + 1
+
+    def sample(self, rng, n_workers, n_blocks):
+        if self.max_delay == 0:
+            return jnp.zeros((n_workers, n_blocks), jnp.int32)
+        u = jax.random.uniform(rng, (n_workers, n_blocks),
+                               minval=jnp.finfo(jnp.float32).tiny, maxval=1.0)
+        tau = jnp.floor(u ** (-1.0 / self.alpha)) - 1.0
+        return jnp.clip(tau, 0, self.max_delay).astype(jnp.int32)
+
+
+DELAY_MODELS = {"uniform": UniformDelay, "constant": ConstantDelay,
+                "pareto": ParetoDelay}
 
 
 # ---------------------------------------------------------------------------
@@ -240,10 +280,16 @@ class VariableSpace(Protocol):
 class FlatSpace:
     """Flat-vector consensus: z is (M, dblk) blocks of a padded vector;
     worker bundles are (N, M, dblk) arrays — the Pallas kernels' native
-    layout, so the ``pallas`` backend dispatches without reshapes."""
+    layout, so the ``pallas`` backend dispatches without reshapes.
+
+    With ``mesh`` set the epoch runs SPMD: worker bundles shard
+    ``(data, model)`` over their leading (N, M) axes, z_hist shards
+    ``model`` over M — the kernels then see local (N/data, M/model,
+    dblk) tiles (see core/sharded.py)."""
     blocks: FlatBlocks
     num_workers: int
     backend: str = "jnp"
+    mesh: Any = None
 
     @property
     def num_blocks(self) -> int:
@@ -323,6 +369,17 @@ class FlatSpace:
         w_sum = self.reduce_workers(w_cache, edge)
         return self.server_update(z_cur, w_sum, rho_sum, gamma, reg.prox)
 
+    def server_prox(self, z_cur, w_sum, rho_sum, gamma, reg):
+        """Prox step (13) from an already-reduced w_sum — the SPMD path,
+        where the worker reduction is a partial sum + psum over ``data``
+        and only the prox remains local to the block-server shard."""
+        if self._use_kernels() and getattr(reg, "fusable", False):
+            return kernel_ops.prox_consensus(
+                z_cur, w_sum, rho_sum, gamma, reg.l1_coef,
+                0.0 if reg.clip is None else reg.clip,
+                boundary_stub=self._stub())
+        return self.server_update(z_cur, w_sum, rho_sum, gamma, reg.prox)
+
     # ---- state construction --------------------------------------------
     def zeros_workers(self, z0):
         return jnp.zeros((self.num_workers,) + z0.shape)
@@ -347,10 +404,16 @@ class TreeSpace:
 
     The ``pallas`` backend routes each leaf through the batched kernels
     as an (N, 1, leaf_size) view — block masks become the single-row
-    select mask, so the same fused ops serve both spaces."""
+    select mask, so the same fused ops serve both spaces.
+
+    With ``mesh`` set the epoch runs SPMD with the worker axis of every
+    bundle leaf sharded over the ``data`` axes; whole leaves cannot be
+    split across block servers, so z stays replicated over ``model``
+    (documented fallback — see API.md's support matrix)."""
     blocks: TreeBlocks
     num_workers: int
     backend: str = "jnp"
+    mesh: Any = None
 
     @property
     def num_blocks(self) -> int:
@@ -487,6 +550,12 @@ class TreeSpace:
         w_sum = self.reduce_workers(w_cache, edge)
         return self.server_update(z_cur, w_sum, rho_sum, gamma, reg.prox)
 
+    def server_prox(self, z_cur, w_sum, rho_sum, gamma, reg):
+        """Prox step (13) from an already-reduced w_sum (SPMD path; the
+        per-leaf prox is elementwise, so the jnp composition is used —
+        the fused reduce+prox kernel has nothing left to fuse here)."""
+        return self.server_update(z_cur, w_sum, rho_sum, gamma, reg.prox)
+
     # ---- state construction --------------------------------------------
     def zeros_workers(self, z0):
         return jax.tree.map(
@@ -553,18 +622,35 @@ class ConsensusSpec:
 
 def make_spec(space, cfg, loss_fn, *, edge=None, rho_scale=None, reg=None,
               selector=None, delay_model=None, track_x=False,
-              backend=None) -> ConsensusSpec:
+              backend=None, mesh=None) -> ConsensusSpec:
     """Build a ConsensusSpec from an ADMMConfig plus problem structure.
 
     ``backend`` (jnp | pallas | auto) overrides ``cfg.backend`` and is
     resolved onto the space — the one switch that swaps the epoch's
     elementwise hot path between the jnp composition and the fused
-    Pallas kernels."""
+    Pallas kernels.
+
+    ``mesh`` (a jax Mesh, or a preset name for
+    ``repro.launch.mesh.resolve_mesh``) overrides ``cfg.mesh`` and is
+    resolved onto the space — when set, ``asybadmm_epoch`` runs the
+    SPMD-sharded implementation (core/sharded.py) over it."""
     resolved = resolve_backend(
         backend if backend is not None else getattr(cfg, "backend", "auto"))
-    if (dataclasses.is_dataclass(space)
-            and getattr(space, "backend", None) != resolved):
-        space = dataclasses.replace(space, backend=resolved)
+    from ..launch.mesh import resolve_mesh           # no cycle: mesh.py is leaf
+    resolved_mesh = resolve_mesh(
+        mesh if mesh is not None else getattr(cfg, "mesh", None))
+    if dataclasses.is_dataclass(space):
+        updates = {}
+        if getattr(space, "backend", None) != resolved:
+            updates["backend"] = resolved
+        if getattr(space, "mesh", None) is not resolved_mesh \
+                and resolved_mesh is not None:
+            updates["mesh"] = resolved_mesh
+        if updates:
+            space = dataclasses.replace(space, **updates)
+    if getattr(space, "mesh", None) is not None:
+        from .sharded import validate_space_mesh
+        validate_space_mesh(space)
     N, M = space.num_workers, space.num_blocks
     if edge is None:
         edge = jnp.ones((N, M), bool)
@@ -592,7 +678,7 @@ def init_consensus_state(spec: ConsensusSpec, z0=None) -> ConsensusState:
     representation (flat vector / params pytree; flat mode defaults to 0)."""
     space = spec.space
     z0r = space.init_repr(z0)
-    return ConsensusState(
+    state = ConsensusState(
         z_hist=space.init_history(z0r, spec.delay_model.depth),
         y=space.zeros_workers(z0r),                       # Alg. 1 line 2
         # w init: w = rho_i * x + y with x = z0, y = 0  ->  rho_i * z0
@@ -601,13 +687,28 @@ def init_consensus_state(spec: ConsensusSpec, z0=None) -> ConsensusState:
         t=jnp.zeros((), jnp.int32),
         rng=jax.random.PRNGKey(spec.seed),
     )
+    mesh = getattr(space, "mesh", None)
+    if isinstance(mesh, jax.sharding.Mesh):
+        # place every state tensor on its NamedSharding up front so the
+        # first sharded epoch starts from the right layout (an
+        # AbstractMesh — shape-only analysis — has no devices to put to)
+        from .sharded import consensus_state_shardings
+        state = jax.device_put(state, consensus_state_shardings(spec, state))
+    return state
 
 
 def asybadmm_epoch(spec: ConsensusSpec, state: ConsensusState, data
                    ) -> Tuple[ConsensusState, Dict[str, jax.Array]]:
     """One epoch of Algorithm 1 across all workers + servers — THE single
-    implementation both the flat driver and the pytree trainer use."""
+    implementation both the flat driver and the pytree trainer use.
+
+    With a mesh on the space, the same epoch runs SPMD (shard_map over
+    (data..., model); see core/sharded.py) — the z trajectory is pinned
+    equal to this single-device path by tests/test_spmd_parity.py."""
     space = spec.space
+    if getattr(space, "mesh", None) is not None:
+        from .sharded import sharded_epoch
+        return sharded_epoch(spec, state, data)
     N, M = spec.edge.shape
     rng, r_delay, r_sel = jax.random.split(state.rng, 3)
 

@@ -84,14 +84,26 @@ def admm_worker_update(g, y, z_tilde, rho,
     return (_from_2d(x2, orig), _from_2d(yn2, orig), _from_2d(w2, orig))
 
 
+def _prox_stub(zt, ws, rs, gamma, l1, clip):
+    return np.asarray(_ref.prox_consensus_ref(
+        jnp.asarray(zt), jnp.asarray(ws), jnp.asarray(rs), gamma, l1, clip))
+
+
 @functools.partial(jax.jit,
-                   static_argnames=("gamma", "l1", "clip", "interpret"))
+                   static_argnames=("gamma", "l1", "clip", "interpret",
+                                    "boundary_stub"))
 def prox_consensus(z_tilde, w_sum, rho_sum, gamma: float, l1: float = 0.0,
-                   clip: float = 0.0, interpret: Optional[bool] = None):
+                   clip: float = 0.0, interpret: Optional[bool] = None, *,
+                   boundary_stub: bool = False):
     """Fused eq. (13). z_tilde, w_sum: (M, d); rho_sum: (M,) or (M, 1)."""
     interpret = _default_interpret() if interpret is None else interpret
     M, d = z_tilde.shape
     rho_sum = rho_sum.reshape(M, 1).astype(z_tilde.dtype)
+    if boundary_stub:
+        return jax.pure_callback(
+            functools.partial(_prox_stub, gamma=gamma, l1=l1, clip=clip),
+            jax.ShapeDtypeStruct(z_tilde.shape, z_tilde.dtype),
+            z_tilde, w_sum, rho_sum)
     dp = _round_up(d, LANE)
     Mp = _round_up(M, _prox.BLK_M)
     if (Mp, dp) == (M, d):                 # aligned: no pad copies

@@ -1,8 +1,14 @@
-"""Production mesh construction.
+"""Production mesh construction + mesh-shape helpers.
 
 Defined as functions (never module-level constants) so importing this
 module never touches jax device state — smoke tests must keep seeing the
 single real CPU device; only dryrun.py forces 512 host devices.
+
+Axis convention (consumed by the SPMD epoch in ``core/sharded.py``):
+``data`` (+ optional outer ``pod``) shards the *worker* axis of the
+consensus state — each worker's duals/w-cache live with its data shard —
+and ``model`` shards the *block-server* axis (FlatSpace blocks; the
+dryrun's tensor-parallel param dims in pytree mode).
 
 Production target: TPU v5e, 256 chips/pod (16x16), optionally 2 pods.
   single pod : (data=16, model=16)            axes ("data", "model")
@@ -26,12 +32,53 @@ def make_production_mesh(*, multi_pod: bool = False):
     return jax.make_mesh(shape, axes, devices=devs[:n])
 
 
-def make_test_mesh(devices: int = 8):
-    """Small host-device mesh for CPU integration tests (requires the
-    test to have set xla_force_host_platform_device_count)."""
-    model = 2
-    data = devices // model
-    return jax.make_mesh((data, model), ("data", "model"))
+def make_test_mesh(devices: int = 8, model: int = 2):
+    """Small (data, model) host-device mesh for CPU integration tests.
+
+    Requires the test process to have forced enough host devices
+    (``XLA_FLAGS=--xla_force_host_platform_device_count=<devices>``
+    before jax is first imported) and ``devices`` to split evenly into
+    ``model`` columns — both are validated eagerly so a bad count fails
+    with an actionable message instead of an opaque reshape error."""
+    if model <= 0 or devices <= 0:
+        raise ValueError(f"devices={devices} and model={model} must be >= 1")
+    if devices % model != 0:
+        raise ValueError(
+            f"make_test_mesh: devices={devices} does not divide into "
+            f"model={model} columns (devices % model == {devices % model}); "
+            f"pick devices as a multiple of the model axis")
+    have = len(jax.devices())
+    if have < devices:
+        raise RuntimeError(
+            f"make_test_mesh: need {devices} devices but jax sees {have}; "
+            f"set XLA_FLAGS=--xla_force_host_platform_device_count="
+            f"{devices} before importing jax")
+    return jax.make_mesh((devices // model, model), ("data", "model"))
+
+
+MESH_PRESETS = ("none", "test", "pod", "multipod")
+
+
+def resolve_mesh(mesh):
+    """Resolve an ``ADMMConfig.mesh`` / CLI value to a Mesh or None.
+
+    Accepts None / "none" (single-device epoch), an already-built mesh
+    (anything with ``axis_names`` — ``jax.sharding.Mesh`` or an
+    ``AbstractMesh`` for shape-only analysis), or a preset name:
+    ``test`` (8 host devices, data=4 x model=2), ``pod``, ``multipod``.
+    """
+    if mesh is None or mesh == "none":
+        return None
+    if hasattr(mesh, "axis_names"):
+        return mesh
+    if mesh == "test":
+        return make_test_mesh()
+    if mesh == "pod":
+        return make_production_mesh()
+    if mesh == "multipod":
+        return make_production_mesh(multi_pod=True)
+    raise ValueError(f"unknown mesh {mesh!r}; expected None, a jax Mesh, "
+                     f"or one of {MESH_PRESETS}")
 
 
 def data_axes(mesh) -> tuple:

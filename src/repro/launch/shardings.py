@@ -7,10 +7,12 @@ Parameter rule (tensor parallelism over the ``model`` axis):
     largest; replicate if nothing divides (tiny norms/biases).
 
 ADMM state rule:
-  * z_hist leaves: leading (D+1,) ring axis skipped, then the param rule;
-  * y / w_cache leaves: leading (N,) worker axis sharded over the data
-    axes (each worker's duals live with its data shard), then the param
-    rule on the rest — per-device cost 2P/model_size (DESIGN.md §4).
+  * the BASE layout (z_hist ring replicated, y / w_cache worker axis
+    over the data axes) is owned by ``core.sharded`` — the same
+    canonical specs the SPMD epoch's shard_map uses; this module only
+    *overlays* the tensor-parallel ``model``-axis param dims on top for
+    the dryrun's GSPMD-partitioned trainer — per-device cost
+    2P/model_size (DESIGN.md §4).
 
 Input rule:
   * worker-batched train inputs (N, b, ...): N over the data axes;
@@ -27,6 +29,7 @@ import jax
 import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
+from ..core.sharded import ring_spec, worker_bundle_spec
 from .mesh import data_axes, model_axis_size
 
 
@@ -84,9 +87,20 @@ def param_specs(params_shape, mesh, *, mode: str = "tp",
     return jax.tree_util.tree_map_with_path(spec_for, params_shape)
 
 
+def _overlay(base: P, dims) -> P:
+    """Overlay model-axis dims onto a base spec (None entries keep the
+    base's assignment — in practice the lead worker/ring axis)."""
+    out = list(base) + [None] * (len(dims) - len(base))
+    for i, d in enumerate(dims):
+        if d is not None:
+            out[i] = d
+    return P(*out)
+
+
 def admm_state_specs(state_shape, mesh, *, mode: str = "tp",
                      expert_parallel: bool = False) -> Any:
-    """Specs for ADMMTrainState(z_hist, y, w_cache, step, rng)."""
+    """Specs for ADMMTrainState(z_hist, y, w_cache, step, rng): the
+    canonical ``core.sharded`` base layout + this module's TP overlay."""
     ms = model_axis_size(mesh)
     daxes = data_axes(mesh)
 
@@ -100,29 +114,24 @@ def admm_state_specs(state_shape, mesh, *, mode: str = "tp",
                 return spec
         return None
 
-    def z_spec(path, leaf):
+    def _model_dims(path, leaf):
+        """The TP overlay: which (non-lead) dim carries ``model``."""
         ep = _ep_spec(path, leaf, 1)
         if ep is not None:
-            return P(*ep)
+            return ep
         stacked = _is_stacked(path)
         if mode == "fsdp" and stacked and len(leaf.shape) > 1 \
                 and leaf.shape[1] % ms == 0:
-            return P(*([None, "model"] + [None] * (len(leaf.shape) - 2)))
-        skip = 2 if stacked else 1                 # (D+1, [L], ...)
-        return P(*([None] + _shard_param_dims(leaf.shape, ms, skip)[1:]))
+            return [None, "model"] + [None] * (len(leaf.shape) - 2)
+        skip = 2 if stacked else 1                 # (lead, [L], ...)
+        return [None] + _shard_param_dims(leaf.shape, ms, skip)[1:]
+
+    def z_spec(path, leaf):
+        return _overlay(ring_spec(leaf.ndim), _model_dims(path, leaf))
 
     def worker_spec(path, leaf):
-        ep = _ep_spec(path, leaf, 1)
-        if ep is not None:
-            ep[0] = daxes
-            return P(*ep)
-        stacked = _is_stacked(path)
-        if mode == "fsdp" and stacked and len(leaf.shape) > 1 \
-                and leaf.shape[1] % ms == 0:
-            return P(*([daxes, "model"] + [None] * (len(leaf.shape) - 2)))
-        skip = 2 if stacked else 1                 # (N, [L], ...)
-        inner = _shard_param_dims(leaf.shape, ms, skip)[1:]
-        return P(*([daxes] + inner))
+        return _overlay(worker_bundle_spec(leaf.ndim, daxes),
+                        _model_dims(path, leaf))
 
     from ..training.train_state import ADMMTrainState
     return ADMMTrainState(

@@ -18,10 +18,12 @@ from ..api import ConsensusSession
 from ..checkpoint import save
 from ..configs import get_config, get_smoke, list_archs
 from ..configs.base import ADMMConfig
+from ..core.space import DELAY_MODELS, ConstantDelay, ParetoDelay
 from ..data import TokenPipeline
 from ..models import build_model
 from ..optim import adamw, warmup_cosine
 from ..training import SGDTrainer
+from .mesh import MESH_PRESETS
 
 
 def main() -> None:
@@ -46,6 +48,20 @@ def main() -> None:
                     help="epoch hot-path backend: fused Pallas kernels "
                          "(native on TPU, interpret mode elsewhere) or "
                          "the pure-jnp composition")
+    ap.add_argument("--mesh", default="none",
+                    choices=list(MESH_PRESETS),
+                    help="SPMD mesh for the sharded epoch: none (single "
+                         "device), test (8 host devices, data=4 x "
+                         "model=2), pod (data=16 x model=16), multipod; "
+                         "workers shard over the data axes")
+    ap.add_argument("--delay-model", default="uniform",
+                    choices=sorted(DELAY_MODELS),
+                    help="Assumption-3 staleness: uniform U{0..D}, "
+                         "constant worst-case lag D, or pareto "
+                         "heavy-tailed stragglers clipped at D")
+    ap.add_argument("--pareto-alpha", type=float, default=1.2,
+                    help="tail exponent for --delay-model pareto "
+                         "(smaller = heavier straggler tail)")
     ap.add_argument("--lr", type=float, default=1e-3)
     ap.add_argument("--ckpt", default=None)
     ap.add_argument("--log-every", type=int, default=10)
@@ -72,9 +88,16 @@ def main() -> None:
                           num_blocks=args.num_blocks,
                           block_selection=args.block_selection,
                           backend=args.backend,
+                          mesh=args.mesh,
                           seed=args.seed)
+        delay_model = None                       # uniform == config default
+        if args.delay_model == "constant":
+            delay_model = ConstantDelay(args.max_delay)
+        elif args.delay_model == "pareto":
+            delay_model = ParetoDelay(args.max_delay, alpha=args.pareto_alpha)
         session = ConsensusSession.pytree(model.loss, params, acfg,
-                                          num_workers=args.workers)
+                                          num_workers=args.workers,
+                                          delay_model=delay_model)
         state = session.init()
         step_fn = session.step_fn()
         get_params = session.z

@@ -84,6 +84,12 @@ class ADMMTrainer:
                 E; worker i only touches blocks j with edge[i, j].
     rho_scale : optional (N,) — heterogeneous per-worker penalties,
                 effective rho_i = admm.rho * rho_scale[i].
+    mesh      : optional jax Mesh (or ``launch.mesh.resolve_mesh``
+                preset) overriding ``admm.mesh`` — ``train_step`` then
+                runs the SPMD-sharded epoch with the worker axis of
+                every state/batch leaf sharded over the data axes
+                (``train_step_block``'s static Gauss-Seidel round stays
+                GSPMD-partitioned via launch/shardings.py instead).
     """
     loss_fn: Callable
     admm: ADMMConfig
@@ -91,6 +97,7 @@ class ADMMTrainer:
     blocks: Optional[TreeBlocks] = None
     edge: Optional[Any] = None
     rho_scale: Optional[Any] = None
+    mesh: Optional[Any] = None
 
     def _blocks(self, params) -> TreeBlocks:
         if self.blocks is not None:
@@ -104,7 +111,7 @@ class ADMMTrainer:
     def _spec(self, params) -> ConsensusSpec:
         return make_spec(self._space(params), self.admm, self.loss_fn,
                          edge=self.edge, rho_scale=self.rho_scale,
-                         track_x=False)
+                         track_x=False, mesh=self.mesh)
 
     def init(self, params, *, cyclic: bool = False) -> ADMMTrainState:
         g = init_consensus_state(self._spec(params), params)

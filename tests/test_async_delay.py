@@ -11,6 +11,7 @@ from repro.configs.base import ADMMConfig
 from repro.core import init_state, make_problem, make_step_fn
 from repro.core.async_sim import (gather_delayed, push_history,
                                   sample_delays, select_blocks)
+from repro.core.space import ParetoDelay
 
 
 def test_push_history_ring():
@@ -52,6 +53,19 @@ def test_select_blocks_full_fraction_is_edge():
     edge = jnp.asarray(np.random.RandomState(0).rand(3, 5) < 0.6)
     sel = select_blocks(jax.random.PRNGKey(0), edge, 1.0)
     np.testing.assert_array_equal(sel, edge)
+
+
+@given(st.integers(0, 5), st.floats(0.6, 3.0))
+@settings(max_examples=20, deadline=None)
+def test_pareto_delay_bounded(max_delay, alpha):
+    """Clipped heavy-tail stays inside the ring depth for any alpha.
+    (The distribution-shape tests live in test_spmd_parity.py, which
+    runs without the hypothesis extra.)"""
+    dm = ParetoDelay(max_delay, alpha=alpha)
+    assert dm.depth == max_delay + 1
+    d = dm.sample(jax.random.PRNGKey(0), 7, 5)
+    assert d.shape == (7, 5) and d.dtype == jnp.int32
+    assert int(d.min()) >= 0 and int(d.max()) <= max_delay
 
 
 def test_sync_equals_zero_delay():

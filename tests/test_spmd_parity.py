@@ -1,0 +1,188 @@
+"""SPMD <-> single-device parity of the sharded epoch (core/sharded.py).
+
+On an 8-host-device CPU mesh (data=4, model=2) the shard_map'd epoch
+must reproduce the single-device ``asybadmm_epoch`` z trajectory for
+both spaces and all three block selectors. Selection/delay draws are
+computed at full (N, M) shape from the replicated key and sliced per
+shard (``jax_threefry_partitionable`` is on globally), so the ONLY
+float-order difference is the worker reduction's partial-sum + psum —
+hence allclose at fp32 tolerance rather than bit equality.
+
+Requires 8 host devices: run under
+``XLA_FLAGS=--xla_force_host_platform_device_count=8`` (scripts/ci.sh
+has a dedicated step); skips otherwise.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.api import ConsensusSession
+from repro.configs.base import ADMMConfig
+from repro.core.blocks import TreeBlocks
+from repro.core.space import DELAY_MODELS, ParetoDelay, UniformDelay
+
+needs8 = pytest.mark.skipif(
+    jax.device_count() < 8,
+    reason="needs XLA_FLAGS=--xla_force_host_platform_device_count=8 "
+           "(scripts/ci.sh runs this file under it)")
+
+N, M, DBLK = 4, 8, 5
+DIM = M * DBLK
+EPOCHS = 6
+TOL = 1e-5
+
+_r = np.random.RandomState(7)
+CENTERS = _r.randn(N, DIM).astype(np.float32)
+EDGE = _r.rand(N, M) < 0.8
+EDGE[:, 0] = True                       # every worker touches block 0
+RHO_SCALE = np.array([0.5, 1.0, 2.0, 1.5], np.float32)
+
+
+def _mesh():
+    from repro.launch.mesh import make_test_mesh
+    return make_test_mesh(8)            # (data=4, model=2)
+
+
+def _cfg(scheme, num_blocks=M, max_delay=1):
+    return ADMMConfig(rho=2.0, gamma=0.1, max_delay=max_delay,
+                      block_fraction=0.5, num_blocks=num_blocks,
+                      block_selection=scheme, l1_coef=1e-3, clip=0.8, seed=0)
+
+
+def _flat_loss(z, c):
+    return 0.5 * jnp.sum(jnp.square(z - c))
+
+
+def _assert_parity(make_session, to_vec, data):
+    ref = make_session(None)
+    sh = make_session(_mesh())
+    states = {"ref": ref.init(), "sh": sh.init()}
+    steps = {"ref": ref.step_fn(), "sh": sh.step_fn()}
+    for t in range(EPOCHS):
+        states["ref"], i_ref = steps["ref"](states["ref"], data)
+        states["sh"], i_sh = steps["sh"](states["sh"], data)
+        np.testing.assert_allclose(
+            to_vec(sh, states["sh"]), to_vec(ref, states["ref"]),
+            rtol=TOL, atol=TOL,
+            err_msg=f"SPMD diverged from single device at epoch {t}")
+        np.testing.assert_allclose(float(i_sh["loss"]), float(i_ref["loss"]),
+                                   rtol=1e-5)
+        assert float(i_sh["selected_fraction"]) == pytest.approx(
+            float(i_ref["selected_fraction"]))
+    assert np.max(np.abs(to_vec(ref, states["ref"]))) > 0.0   # run moved
+    return states["sh"]
+
+
+@needs8
+@pytest.mark.parametrize("scheme", ["random", "cyclic", "gauss_southwell"])
+def test_flat_spmd_parity(scheme):
+    centers = jnp.asarray(CENTERS)
+
+    def make(mesh):
+        return ConsensusSession.flat(
+            _flat_loss, centers, dim=DIM, cfg=_cfg(scheme), edge=EDGE,
+            rho_scale=RHO_SCALE, delay_model=UniformDelay(1), mesh=mesh)
+
+    state = _assert_parity(make, lambda s, st: np.asarray(s.z(st)), centers)
+    # the state really is sharded: workers over data, blocks over model
+    yspec = state.y.sharding.spec
+    assert yspec[0] in ("data", ("data",)) and yspec[1] == "model"
+    assert state.z_hist.sharding.spec[1] == "model"
+    assert state.y.addressable_shards[0].data.shape == (1, M // 2, DBLK)
+
+
+@needs8
+@pytest.mark.parametrize("scheme", ["random", "cyclic", "gauss_southwell"])
+def test_tree_spmd_parity(scheme):
+    centers = jnp.asarray(CENTERS)
+    params = {f"w{j}": jnp.zeros((DBLK,), jnp.float32) for j in range(4)}
+    tblocks = TreeBlocks(num_blocks=4, leaf_block_ids=(0, 1, 2, 3),
+                         treedef=jax.tree.structure(params))
+
+    def tree_loss(p, c):
+        z = jnp.concatenate([p[f"w{j}"] for j in range(4)])
+        return 0.5 * jnp.sum(jnp.square(z - c[: 4 * DBLK]))
+
+    def make(mesh):
+        return ConsensusSession.pytree(
+            tree_loss, params, _cfg(scheme, num_blocks=4), num_workers=N,
+            blocks=tblocks, edge=EDGE[:, :4], rho_scale=RHO_SCALE, mesh=mesh)
+
+    def to_vec(sess, state):
+        z = sess.z(state)
+        return np.asarray(jnp.concatenate([z[f"w{j}"] for j in range(4)]))
+
+    state = _assert_parity(make, to_vec, centers)
+    # worker axis sharded over data; z replicated over model (tree fallback)
+    yspec = jax.tree.leaves(state.y)[0].sharding.spec
+    assert yspec[0] in ("data", ("data",))
+
+
+@needs8
+def test_flat_spmd_parity_pallas_backend():
+    """The PR-2 kernels run per shard on local (N/4, M/2, dblk) tiles."""
+    centers = jnp.asarray(CENTERS)
+
+    def make(mesh):
+        return ConsensusSession.flat(
+            _flat_loss, centers, dim=DIM, cfg=_cfg("random"), edge=EDGE,
+            rho_scale=RHO_SCALE, backend="pallas", mesh=mesh)
+
+    _assert_parity(make, lambda s, st: np.asarray(s.z(st)), centers)
+
+
+@needs8
+def test_flat_spmd_parity_pareto_stragglers():
+    """Heavy-tailed worker-asymmetric delays exercise the sharded
+    history gather: each data shard pulls different ring rows."""
+    centers = jnp.asarray(CENTERS)
+
+    def make(mesh):
+        return ConsensusSession.flat(
+            _flat_loss, centers, dim=DIM, cfg=_cfg("random", max_delay=3),
+            edge=EDGE, delay_model=ParetoDelay(3, alpha=1.2), mesh=mesh)
+
+    _assert_parity(make, lambda s, st: np.asarray(s.z(st)), centers)
+
+
+@needs8
+def test_mesh_divisibility_validation():
+    """Bad (mesh, problem) pairings fail eagerly with a clear message."""
+    mesh = _mesh()
+    with pytest.raises(ValueError, match="num_workers"):
+        ConsensusSession.flat(_flat_loss, jnp.asarray(CENTERS[:3]), dim=DIM,
+                              cfg=_cfg("random"), mesh=mesh)
+    with pytest.raises(ValueError, match="num_blocks"):
+        ConsensusSession.flat(
+            _flat_loss, jnp.asarray(CENTERS), dim=DIM,
+            cfg=_cfg("random", num_blocks=7), mesh=mesh)
+
+
+# ---------------------------------------------------------------------------
+# ParetoDelay distribution shape — device-count independent, lives here
+# because test_async_delay.py needs the hypothesis extra to even collect
+# ---------------------------------------------------------------------------
+
+def test_pareto_delay_heavy_tail():
+    """Most reads fresh, but the tail reaches the full delay window —
+    unlike uniform, the delay histogram is front-loaded AND clipped
+    mass accumulates at max_delay (the straggler profile)."""
+    dm = ParetoDelay(max_delay=4, alpha=1.2)
+    assert dm.depth == 5
+    d = np.asarray(dm.sample(jax.random.PRNGKey(1), 64, 64)).ravel()
+    assert d.min() >= 0 and d.max() <= 4
+    frac0 = (d == 0).mean()
+    assert frac0 > 0.4                      # P[tau=0] = 1 - 2^-alpha ~ 0.56
+    assert (d == 4).sum() > 0               # stragglers hit the clip
+    assert frac0 > (d == 1).mean() > (d == 2).mean()   # decreasing pmf
+
+
+def test_pareto_delay_zero_window_is_sync():
+    d = ParetoDelay(max_delay=0).sample(jax.random.PRNGKey(0), 3, 5)
+    assert int(jnp.max(d)) == 0
+
+
+def test_delay_model_registry():
+    assert set(DELAY_MODELS) >= {"uniform", "constant", "pareto"}
+    assert DELAY_MODELS["pareto"] is ParetoDelay
