@@ -1,106 +1,141 @@
 """Paper Table 1 analogue: speedup of p workers performing k iterations.
 
 We cannot rent 36 EC2 cores, so we reproduce the quantity Table 1
-actually measures — the scalability of the *coordination scheme* — with
-a discrete-event simulation driven by measured per-iteration costs:
+actually measures — the scalability of the *coordination scheme* —
+with the event-driven Parameter Server runtime (``repro.ps``). This
+module is now a thin client of that subsystem: the lock domains, push
+queues, bounded-staleness stalls and makespan accounting all live in
+``repro.ps``; here we only
 
-* worker compute time  : measured from the real jitted AsyBADMM worker
-  gradient update on this host, with lognormal jitter (the EC2
-  stragglers the paper's bounded-delay assumption exists for);
-* server service time  : measured from the real jitted prox z-update.
+* measure the real per-event costs — one worker iteration and one
+  block-server commit of the REAL jitted ``VariableSpace`` hot path
+  (``repro.ps.timing.measure_costs``; the hand-rolled loss_fn /
+  server_update measurement this file used to carry is gone);
+* feed them to the scheduler as service times (lognormal jitter, the
+  EC2 stragglers Assumption 3 exists for) and sweep workers x
+  {lockfree, locked} through ONE code path (``PSRuntime`` in
+  timing-only mode);
+* report ``T_k(p)`` = makespan until k total iterations commit,
+  work-shared by p workers, and ``Speedup_p = T_k(1) / T_k(p)``.
 
-Two coordination disciplines:
-  locked    — full-vector consensus: one global lock serializes every
-              worker's z-update (all prior async ADMM, per paper §1);
-  lockfree  — AsyBADMM: M block servers; a push occupies only its own
-              block's server; different blocks commit in parallel.
-
-T_k(p) = makespan until k total iterations commit, work-shared by p
-workers; Speedup_p = T_k(1)/T_k(p) (the paper's metric).
+``--smoke`` (CI, via scripts/ci.sh) additionally runs a DETERMINISTIC
+locked-vs-lockfree comparison at 8 workers — constant service times in
+a coordination-bound regime (worker compute pinned to 4 block-serve
+units, M=16, so the full-vector lock's M-serial commit dominates) —
+and gates the lockfree/locked makespan ratio against
+``min_lockfree_speedup_x8`` in benchmarks/kernels_baseline.json.
 
 CSV columns: name, us_per_call (simulated makespan), derived (speedup).
 """
-import heapq
-import time
+import argparse
+import json
+import pathlib
 
-import jax
-import jax.numpy as jnp
-import numpy as np
-
+from repro.api import ConsensusSession
+from repro.configs.base import ADMMConfig
 from repro.data import make_sparse_logreg
+from repro.ps import (ConstantService, CostProfile, LognormalService,
+                      PSRuntime, measure_costs)
 
 K_ITERS = 320
 WORKERS = [1, 4, 8, 16, 32]
 M_BLOCKS = 16
+GATE_WORKERS = 8
+GATE_ROUNDS = 12
+BASELINE = pathlib.Path(__file__).parent / "kernels_baseline.json"
 
 
-def measure_costs(dim=2048, samples=64):
-    """Real measured costs of one worker iteration and one z-block update."""
-    data = make_sparse_logreg(num_workers=1, samples_per_worker=samples,
-                              dim=dim, density=0.1, seed=0)
+def build_session(num_workers: int, dim: int = 2048, samples: int = 64,
+                  seed: int = 0) -> ConsensusSession:
+    """The paper's sparse-logreg workload (eq. 22) on the unified API."""
+    import jax.numpy as jnp
+
+    data = make_sparse_logreg(num_workers=num_workers,
+                              samples_per_worker=samples, dim=dim,
+                              density=0.1, seed=seed)
 
     def loss_fn(z, d):
         X, y = d
         return jnp.mean(jnp.log1p(jnp.exp(-y * (X @ z))))
 
-    X = jnp.asarray(data.X[0])
-    yv = jnp.asarray(data.y[0])
-    z = jnp.zeros(dim)
-    gfn = jax.jit(jax.grad(lambda w: loss_fn(w, (X, yv))))
-    gfn(z).block_until_ready()
-    t0 = time.perf_counter()
-    for _ in range(20):
-        gfn(z).block_until_ready()
-    t_comp = (time.perf_counter() - t0) / 20
-
-    from repro.core.admm import server_update
-    from repro.core.prox import make_prox
-    reg = make_prox(l1_coef=1e-3, clip=1e4)
-    blk = jnp.zeros(dim // M_BLOCKS)
-    sfn = jax.jit(lambda zt, ws: server_update(zt, ws, 8.0, 0.1, reg.prox))
-    sfn(blk, blk).block_until_ready()
-    t0 = time.perf_counter()
-    for _ in range(50):
-        sfn(blk, blk).block_until_ready()
-    t_serve_block = (time.perf_counter() - t0) / 50
-    return t_comp, t_serve_block
+    cfg = ADMMConfig(rho=2.0, gamma=0.1, max_delay=2, block_fraction=0.5,
+                     num_blocks=M_BLOCKS, l1_coef=1e-3, clip=1e4, seed=seed)
+    return ConsensusSession.flat(
+        loss_fn, (jnp.asarray(data.X), jnp.asarray(data.y)), dim=dim,
+        cfg=cfg)
 
 
-def simulate(p, k_total, t_comp, t_serve_block, discipline,
-             m_blocks=M_BLOCKS, seed=0, jitter=0.3):
-    """Event-driven makespan until k_total iterations commit."""
-    rng = np.random.RandomState(seed + p)
-    t_serve = t_serve_block * (m_blocks if discipline == "locked" else 1.0)
-    n_servers = 1 if discipline == "locked" else m_blocks
-    server_free = np.zeros(n_servers)
-    committed = 0
-    q = [(t_comp * rng.lognormal(0, jitter), i) for i in range(p)]
-    heapq.heapify(q)
-    t_end = 0.0
-    while committed < k_total and q:
-        t, i = heapq.heappop(q)
-        j = rng.randint(n_servers)          # block j_t ~ U (Alg. 1 line 4)
-        start = max(t, server_free[j])
-        finish = start + t_serve * rng.lognormal(0, jitter / 2)
-        server_free[j] = finish
-        t_end = max(t_end, finish)
-        committed += 1
-        if committed + len(q) < k_total:
-            heapq.heappush(q, (finish + t_comp * rng.lognormal(0, jitter), i))
-    return t_end
+def measured_costs(dim: int = 2048, samples: int = 64) -> dict:
+    """Real measured costs of one worker iteration and one z-block
+    commit, timed on the unified jitted hot path."""
+    sess = build_session(1, dim=dim, samples=samples)
+    return measure_costs(sess.spec, sess.data)
 
 
-def main(emit=print):
-    t_comp, t_serve_block = measure_costs()
-    emit(f"speedup_measured_costs,{t_comp*1e6:.1f},"
-         f"t_serve_block_us={t_serve_block*1e6:.1f}")
+def makespan(p: int, k_total: int, timing: CostProfile,
+             discipline: str) -> float:
+    """Event-driven makespan until k_total iterations commit, the work
+    shared by p workers (ceil-split like the paper's fixed-k runs)."""
+    rounds = -(-k_total // p)
+    sess = build_session(p, dim=M_BLOCKS * 16, samples=4)
+    rt = PSRuntime(sess.spec, discipline=discipline, timing=timing,
+                   compute="timing")
+    return rt.run(rounds).makespan
+
+
+def table1(emit, costs: dict, workers=WORKERS, k_iters=K_ITERS,
+           jitter: float = 0.3) -> None:
     for discipline in ("lockfree", "locked"):
-        base = simulate(1, K_ITERS, t_comp, t_serve_block, discipline)
-        for p in WORKERS:
-            tk = simulate(p, K_ITERS, t_comp, t_serve_block, discipline)
+        timing = CostProfile(
+            t_worker=LognormalService(costs["t_worker"], jitter),
+            t_server_block=LognormalService(costs["t_server_block"],
+                                            jitter / 2))
+        base = makespan(1, k_iters, timing, discipline)
+        for p in workers:
+            tk = base if p == 1 else makespan(p, k_iters, timing, discipline)
             emit(f"table1_{discipline}_p{p},{tk*1e6:.0f},"
                  f"speedup={base / tk:.2f}")
 
 
+def smoke_gate(emit, costs: dict) -> bool:
+    """Deterministic coordination-bound comparison at 8 workers:
+    constant service, worker compute = 4 block-serve units. The only
+    difference between the two runs is the lock discipline, so the
+    makespan ratio isolates exactly the paper's §1 claim (block-wise
+    servers beat the full-vector lock). Gated vs the baseline."""
+    ts = costs["t_server_block"]
+    timing = CostProfile(t_worker=ConstantService(4.0 * ts),
+                         t_server_block=ConstantService(ts))
+    spans = {d: makespan(GATE_WORKERS, GATE_WORKERS * GATE_ROUNDS, timing, d)
+             for d in ("lockfree", "locked")}
+    ratio = spans["locked"] / spans["lockfree"]
+    min_ratio = json.loads(BASELINE.read_text())["min_lockfree_speedup_x8"]
+    ok = ratio >= min_ratio
+    emit(f"speedup_gate_lockfree_x{GATE_WORKERS},"
+         f"{spans['lockfree']*1e6:.0f},ratio={ratio:.2f}")
+    emit(f"speedup_gate_locked_x{GATE_WORKERS},"
+         f"{spans['locked']*1e6:.0f},min_ratio={min_ratio}")
+    if not ok:
+        emit(f"speedup_gate_FAILED,0,locked/lockfree ratio {ratio:.2f} < "
+             f"{min_ratio}")
+    return ok
+
+
+def main(emit=print, smoke: bool = False) -> None:
+    costs = measured_costs()
+    emit(f"speedup_measured_costs,{costs['t_worker']*1e6:.1f},"
+         f"t_serve_block_us={costs['t_server_block']*1e6:.1f}")
+    if smoke:
+        if not smoke_gate(emit, costs):
+            raise SystemExit(1)
+        table1(emit, costs, workers=[1, GATE_WORKERS], k_iters=64)
+    else:
+        table1(emit, costs)
+
+
 if __name__ == "__main__":
-    main()
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI mode: deterministic locked-vs-lockfree gate "
+                         "at 8 workers + a reduced Table-1 sweep")
+    main(smoke=ap.parse_args().smoke)

@@ -19,6 +19,15 @@ echo "[ci] kernels bench (smoke)"
 env PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" \
     python benchmarks/kernels_bench.py --smoke
 
+# PS-runtime coordination gate: a deterministic locked-vs-lockfree
+# comparison at 8 workers (benchmarks/speedup.py --smoke, service times
+# measured from the real jitted hot path) must show the paper's block-
+# wise lock-free servers beating the full-vector lock by at least
+# min_lockfree_speedup_x8 from benchmarks/kernels_baseline.json
+echo "[ci] PS-runtime speedup gate (smoke)"
+env PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" \
+    python benchmarks/speedup.py --smoke
+
 # SPMD parity smoke: the sharded epoch needs an 8-host-device mesh, so
 # the parity suite runs in its own process with the device count forced
 # (inside the main tier-1 run below it skips) — single-device-only
@@ -27,6 +36,10 @@ echo "[ci] SPMD parity (8 host devices, data=4 x model=2)"
 env PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" \
     XLA_FLAGS="--xla_force_host_platform_device_count=8" \
     python -m pytest -x -q tests/test_spmd_parity.py
+echo "[ci] PS-trace -> SPMD-epoch replay parity (8 host devices)"
+env PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" \
+    XLA_FLAGS="--xla_force_host_platform_device_count=8" \
+    python -m pytest -x -q tests/test_ps_runtime.py -k spmd
 
 exec env PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" \
     python -m pytest -x -q "$@"

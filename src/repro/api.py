@@ -142,6 +142,37 @@ class ConsensusSession:
         spec = self.spec
         return jax.jit(lambda s, b: asybadmm_epoch(spec, s, b))
 
+    def run_ps(self, num_rounds: int, z0: Any = None, *,
+               discipline: str = "lockfree",
+               timing: Any = None,
+               batches: Optional[Callable[[int], Any]] = None,
+               compute: str = "real",
+               seed: Optional[int] = None,
+               record_z: bool = True):
+        """Drive ``num_rounds`` rounds under the event-driven Parameter
+        Server runtime (``repro.ps``) instead of the vectorized epoch:
+        per-block ``lockfree`` servers (or the ``locked`` full-vector
+        baseline), workers running the real jitted space ops, bounded
+        staleness enforced by stalling (Assumption 3's T comes from the
+        session's delay model), and every pull recorded into a
+        :class:`~repro.ps.trace.DelayTrace`.
+
+        ``timing`` is a :class:`~repro.ps.timing.CostProfile` (service
+        times; defaults to unit worker cost). ``compute="timing"``
+        skips the numerics for pure coordination studies;
+        ``record_z=False`` keeps only the live staleness window of
+        committed versions (long-training memory mode — ``z_final``
+        still returned, ``z_versions`` not). Returns a
+        :class:`~repro.ps.runtime.PSRunResult` (``z_final`` /
+        ``z_versions`` in user representation) — replay its trace
+        through the fast epoch with
+        ``delay_model=result.to_delay_model()``."""
+        from .ps import PSRuntime
+        rt = PSRuntime(self.spec, data=self.data, batches=batches,
+                       discipline=discipline, timing=timing,
+                       compute=compute, seed=seed, record_z=record_z)
+        return rt.run(num_rounds, z0=z0 if z0 is not None else self.z0)
+
     def run(self, num_epochs: int, z0: Any = None, *,
             batches: Optional[Callable[[int], Any]] = None,
             eval_every: int = 0,

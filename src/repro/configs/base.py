@@ -169,6 +169,9 @@ class ADMMConfig:
     clip: Optional[float] = None  # box constraint ||z||_inf <= C
     num_blocks: int = 16        # M logical blocks (== model-axis size on pod)
     block_selection: str = "random"  # random | cyclic | gauss_southwell
+    # incremental/stochastic workers (Hong 2014): fraction of each
+    # worker's samples drawn fresh per epoch; None/1.0 = full batch
+    minibatch: Optional[float] = None
     # compute backend for the epoch's fused worker/server hot path:
     # jnp | pallas | auto (auto = pallas on TPU, jnp elsewhere)
     backend: str = "auto"

@@ -38,6 +38,53 @@ def gather_delayed(z_hist, delays):
     return z_hist[delays, jnp.arange(z_hist.shape[1])[None, :]]
 
 
+def minibatch_rows(rng, n_workers: int, n_samples: int, fraction: float):
+    """Per-worker without-replacement subsample indices (N, k) with
+    k = max(1, round(fraction * n_samples)) — a uniform random-subset
+    draw realized as an argsort of i.i.d. uniforms so it stays
+    jit-traceable and, with ``jax_threefry_partitionable``, identical
+    whether evaluated at full (N, S) shape or row-sliced per shard
+    (the SPMD epoch and the PS runtime both rely on that)."""
+    k = max(1, min(n_samples, int(round(fraction * n_samples))))
+    u = jax.random.uniform(rng, (n_workers, n_samples))
+    return jnp.argsort(u, axis=1)[:, :k]
+
+
+def validate_minibatch_data(data):
+    """Check every data leaf is (num_workers, samples, ...) with one
+    shared sample axis; returns (num_workers, num_samples). Shared by
+    the single-device and SPMD epochs so both fail identically on
+    malformed pytrees (instead of JAX silently clamping gather
+    indices)."""
+    leaves = jax.tree.leaves(data)
+    if not leaves:
+        return None
+    n_samples = leaves[0].shape[1] if leaves[0].ndim >= 2 else None
+    for leaf in leaves:
+        if leaf.ndim < 2 or leaf.shape[1] != n_samples:
+            raise ValueError(
+                f"minibatch subsampling needs every data leaf shaped "
+                f"(num_workers, samples, ...); got {leaf.shape} vs "
+                f"samples={n_samples}")
+    return leaves[0].shape[0], n_samples
+
+
+def subsample_worker_data(rng, data, fraction):
+    """Incremental/stochastic worker gradients (Hong 2014): subsample a
+    ``fraction`` of every worker's samples along axis 1 of each data
+    leaf, using the SAME per-worker row indices across leaves (X and y
+    stay aligned). ``fraction`` of None / >= 1 is a no-op."""
+    if fraction is None or fraction >= 1.0:
+        return data
+    shape = validate_minibatch_data(data)
+    if shape is None:
+        return data
+    n_workers, n_samples = shape
+    idx = minibatch_rows(rng, n_workers, n_samples, fraction)
+    rows = jnp.arange(n_workers)[:, None]
+    return jax.tree.map(lambda a: a[rows, idx], data)
+
+
 def select_blocks(rng, edge, block_fraction: float):
     """Per-worker random block selection (Alg. 1 line 4).
 

@@ -50,8 +50,9 @@ from jax.experimental.shard_map import shard_map
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from ..launch.mesh import data_axes, model_axis_size, num_workers
+from .async_sim import minibatch_rows, validate_minibatch_data
 from .space import (ConsensusSpec, ConsensusState, FlatSpace,
-                    SelectorContext)
+                    SelectorContext, epoch_keys, sample_delay_model)
 
 
 def _is_flat(space) -> bool:
@@ -203,7 +204,7 @@ def _epoch_body(spec: ConsensusSpec, space_l, coll, Nl: int, Ml: int,
     arrive replicated at full (N, M) / (N,) shape."""
     N, M = edge.shape
     split_model = Ml < M
-    rng, r_delay, r_sel = jax.random.split(state.rng, 3)
+    rng, r_delay, r_sel, r_batch = epoch_keys(state.rng, spec.minibatch)
     wi = coll.worker_shard_index()
     mi = coll.model_index() if split_model else None
 
@@ -216,8 +217,18 @@ def _epoch_body(spec: ConsensusSpec, space_l, coll, Nl: int, Ml: int,
         return lax.dynamic_slice_in_dim(a, mi * Ml, Ml, axis)
 
     # --- stale pull: FULL (N, M) replicated draw, sliced to the shard ---
-    delays = spec.delay_model.sample(r_delay, N, M)
+    delays = sample_delay_model(spec.delay_model, r_delay, N, M, state.t)
     z_tilde = space_l.gather(state.z_hist, cols(rows(delays)))
+
+    # --- minibatch draw, like delay/selection: FULL (N, S) replicated,
+    #     sliced to the local worker rows (== the single-device draw) ---
+    if spec.minibatch is not None and spec.minibatch < 1.0:
+        shape = validate_minibatch_data(data)
+        if shape is not None:              # leafless data: no-op, like
+            S = shape[1]                   # subsample_worker_data
+            idx_l = rows(minibatch_rows(r_batch, N, S, spec.minibatch))
+            data = jax.tree.map(
+                lambda a: a[jnp.arange(Nl)[:, None], idx_l], data)
 
     # --- grads need every block of z~ for the local workers: gather the
     #     block shards back (FlatSpace only; TreeSpace z is whole) ---

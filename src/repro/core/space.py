@@ -61,7 +61,8 @@ import numpy as np
 
 from ..kernels import ops as kernel_ops
 from .admm import server_update, worker_update
-from .async_sim import gather_delayed, push_history, sample_delays, select_blocks
+from .async_sim import (gather_delayed, push_history, sample_delays,
+                        select_blocks, subsample_worker_data)
 from .blocks import FlatBlocks, TreeBlocks
 from .prox import Regularizer, make_prox
 
@@ -103,8 +104,29 @@ class DelayModel(Protocol):
     def depth(self) -> int:
         """Ring-buffer depth the history must keep (max delay + 1)."""
 
-    def sample(self, rng: jax.Array, n_workers: int, n_blocks: int) -> jax.Array:
-        """Return (N, M) int32 delays in [0, depth)."""
+    def sample(self, rng: jax.Array, n_workers: int, n_blocks: int,
+               *, t=None) -> jax.Array:
+        """Return (N, M) int32 delays in [0, depth). ``t`` is the epoch
+        counter — stochastic models ignore it, :class:`TraceDelay`
+        indexes its recorded trace with it."""
+
+
+def sample_delay_model(dm, rng, n_workers: int, n_blocks: int, t):
+    """Call ``dm.sample`` passing the epoch counter, tolerating older
+    custom models whose ``sample`` signature predates the ``t=``
+    keyword (detected by signature inspection, so a TypeError raised
+    INSIDE a t-aware model still surfaces)."""
+    import inspect
+    try:
+        params = inspect.signature(dm.sample).parameters
+        has_t = "t" in params or any(
+            p.kind is inspect.Parameter.VAR_KEYWORD
+            for p in params.values())
+    except (TypeError, ValueError):        # builtins/partials: assume new
+        has_t = True
+    if has_t:
+        return dm.sample(rng, n_workers, n_blocks, t=t)
+    return dm.sample(rng, n_workers, n_blocks)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -116,7 +138,7 @@ class UniformDelay:
     def depth(self) -> int:
         return self.max_delay + 1
 
-    def sample(self, rng, n_workers, n_blocks):
+    def sample(self, rng, n_workers, n_blocks, *, t=None):
         return sample_delays(rng, n_workers, n_blocks, self.max_delay)
 
 
@@ -129,7 +151,7 @@ class ConstantDelay:
     def depth(self) -> int:
         return self.delay + 1
 
-    def sample(self, rng, n_workers, n_blocks):
+    def sample(self, rng, n_workers, n_blocks, *, t=None):
         return jnp.full((n_workers, n_blocks), self.delay, jnp.int32)
 
 
@@ -152,7 +174,7 @@ class ParetoDelay:
     def depth(self) -> int:
         return self.max_delay + 1
 
-    def sample(self, rng, n_workers, n_blocks):
+    def sample(self, rng, n_workers, n_blocks, *, t=None):
         if self.max_delay == 0:
             return jnp.zeros((n_workers, n_blocks), jnp.int32)
         u = jax.random.uniform(rng, (n_workers, n_blocks),
@@ -161,8 +183,60 @@ class ParetoDelay:
         return jnp.clip(tau, 0, self.max_delay).astype(jnp.int32)
 
 
+@dataclasses.dataclass(frozen=True, eq=False)
+class TraceDelay:
+    """Replay the exact (rounds, N, M) staleness matrix a PS-runtime run
+    recorded (``repro.ps.trace.DelayTrace``) through the fast vectorized
+    epoch: ``sample`` ignores the rng draw (the key split still happens,
+    so the selection chain is untouched) and returns ``delays[t]``.
+
+    Replaying a trace through ``asybadmm_epoch`` reproduces the
+    runtime's z trajectory exactly — pinned by tests/test_ps_runtime.py
+    for both spaces, both backends, and the SPMD epoch. Epochs past the
+    end of the trace clamp to its final round (replays are meant to run
+    exactly ``num_rounds`` epochs)."""
+    delays: Any                       # (rounds, N, M) int array
+    max_delay: int = dataclasses.field(init=False)
+
+    def __post_init__(self):
+        d = np.asarray(self.delays, np.int32)
+        if d.ndim != 3 or d.shape[0] < 1:
+            raise ValueError(f"trace delays must be (rounds, N, M); "
+                             f"got shape {d.shape}")
+        if d.min() < 0:
+            raise ValueError("trace contains negative delays")
+        object.__setattr__(self, "delays", d)
+        object.__setattr__(self, "max_delay", int(d.max()))
+
+    @property
+    def num_rounds(self) -> int:
+        return self.delays.shape[0]
+
+    @property
+    def depth(self) -> int:
+        return self.max_delay + 1
+
+    @classmethod
+    def load(cls, path) -> "TraceDelay":
+        from ..ps.trace import DelayTrace      # lazy: ps imports core.space
+        return cls(DelayTrace.load(path).delays)
+
+    def sample(self, rng, n_workers, n_blocks, *, t=None):
+        if t is None:
+            raise ValueError(
+                "TraceDelay needs the epoch counter; drive it through "
+                "asybadmm_epoch (which passes t=state.t), not directly")
+        R, N, M = self.delays.shape
+        if (N, M) != (n_workers, n_blocks):
+            raise ValueError(
+                f"trace was recorded for (N={N}, M={M}) but the epoch "
+                f"asks for (N={n_workers}, M={n_blocks})")
+        idx = jnp.clip(jnp.asarray(t, jnp.int32), 0, R - 1)
+        return jnp.asarray(self.delays)[idx]
+
+
 DELAY_MODELS = {"uniform": UniformDelay, "constant": ConstantDelay,
-                "pareto": ParetoDelay}
+                "pareto": ParetoDelay, "trace": TraceDelay}
 
 
 # ---------------------------------------------------------------------------
@@ -260,7 +334,8 @@ class VariableSpace(Protocol):
     def current(self, z_hist: Any) -> Any: ...
     def push(self, z_hist: Any, z_new: Any) -> Any: ...
     def gather(self, z_hist: Any, delays: jax.Array) -> Any: ...
-    def worker_grads(self, loss_fn, z_tilde, data) -> Tuple[jax.Array, Any]: ...
+    def worker_grads(self, loss_fn, z_tilde, data, minibatch=None,
+                     rng=None) -> Tuple[jax.Array, Any]: ...
     def grad_sqnorm(self, g: Any) -> jax.Array: ...
     def worker_update(self, g, y, z_tilde, rho_vec) -> Tuple[Any, Any, Any]: ...
     def select(self, sel: jax.Array, new: Any, old: Any) -> Any: ...
@@ -324,7 +399,9 @@ class FlatSpace:
         return gather_delayed(z_hist, delays)
 
     # ---- worker side ----------------------------------------------------
-    def worker_grads(self, loss_fn, z_tilde, data):
+    def worker_grads(self, loss_fn, z_tilde, data, minibatch=None, rng=None):
+        data = subsample_worker_data(rng, data, minibatch)
+
         def vg(zb, di):
             zv = self.blocks.from_blocks(zb)
             return jax.value_and_grad(loss_fn)(zv, di)
@@ -456,7 +533,8 @@ class TreeSpace:
                             z_hist, self._bid_tree())
 
     # ---- worker side ----------------------------------------------------
-    def worker_grads(self, loss_fn, z_tilde, data):
+    def worker_grads(self, loss_fn, z_tilde, data, minibatch=None, rng=None):
+        data = subsample_worker_data(rng, data, minibatch)
         return jax.vmap(jax.value_and_grad(loss_fn))(z_tilde, data)
 
     def grad_sqnorm(self, g):
@@ -618,11 +696,24 @@ class ConsensusSpec:
     delay_model: DelayModel
     track_x: bool = False
     seed: int = 0
+    # incremental/stochastic workers (Hong 2014): fraction of each
+    # worker's samples drawn fresh per epoch (None/1.0 = full batch)
+    minibatch: Optional[float] = None
+
+
+def epoch_keys(rng, minibatch):
+    """The per-epoch key split shared by ``asybadmm_epoch``, the SPMD
+    body, and the PS runtime: (next_rng, r_delay, r_sel[, r_batch]).
+    The split widens to 4 only when minibatching, so full-batch runs
+    keep the pre-minibatch rng chain bit-for-bit."""
+    if minibatch is not None:
+        return jax.random.split(rng, 4)
+    return tuple(jax.random.split(rng, 3)) + (None,)
 
 
 def make_spec(space, cfg, loss_fn, *, edge=None, rho_scale=None, reg=None,
               selector=None, delay_model=None, track_x=False,
-              backend=None, mesh=None) -> ConsensusSpec:
+              backend=None, mesh=None, minibatch=None) -> ConsensusSpec:
     """Build a ConsensusSpec from an ADMMConfig plus problem structure.
 
     ``backend`` (jnp | pallas | auto) overrides ``cfg.backend`` and is
@@ -666,11 +757,19 @@ def make_spec(space, cfg, loss_fn, *, edge=None, rho_scale=None, reg=None,
         selector if selector is not None else cfg.block_selection)
     if delay_model is None:
         delay_model = UniformDelay(cfg.max_delay)
+    if minibatch is None:
+        minibatch = getattr(cfg, "minibatch", None)
+    if minibatch is not None:
+        if not 0.0 < minibatch <= 1.0:
+            raise ValueError(f"minibatch fraction must be in (0, 1]; "
+                             f"got {minibatch}")
+        if minibatch == 1.0:
+            minibatch = None               # full batch — keep the 3-way split
     return ConsensusSpec(space=space, loss_fn=loss_fn, edge=edge,
                          rho_vec=rho_vec, reg=reg, gamma=cfg.gamma,
                          block_fraction=cfg.block_fraction, selector=sel,
                          delay_model=delay_model, track_x=track_x,
-                         seed=cfg.seed)
+                         seed=cfg.seed, minibatch=minibatch)
 
 
 def init_consensus_state(spec: ConsensusSpec, z0=None) -> ConsensusState:
@@ -710,14 +809,16 @@ def asybadmm_epoch(spec: ConsensusSpec, state: ConsensusState, data
         from .sharded import sharded_epoch
         return sharded_epoch(spec, state, data)
     N, M = spec.edge.shape
-    rng, r_delay, r_sel = jax.random.split(state.rng, 3)
+    rng, r_delay, r_sel, r_batch = epoch_keys(state.rng, spec.minibatch)
 
     # --- each worker pulls (possibly stale) z~ per block (Assumption 3) ---
-    delays = spec.delay_model.sample(r_delay, N, M)
+    delays = sample_delay_model(spec.delay_model, r_delay, N, M, state.t)
     z_tilde = space.gather(state.z_hist, delays)
 
-    # --- local gradients at z~ (eq. 5 linearization point) ---
-    losses, g = space.worker_grads(spec.loss_fn, z_tilde, data)
+    # --- local gradients at z~ (eq. 5 linearization point), optionally on
+    #     a fresh per-worker minibatch (incremental workers, Hong 2014) ---
+    losses, g = space.worker_grads(spec.loss_fn, z_tilde, data,
+                                   minibatch=spec.minibatch, rng=r_batch)
 
     # --- block selection (Alg. 1 line 4) via the shared policy registry ---
     ctx = SelectorContext(rng=r_sel, edge=spec.edge, t=state.t,

@@ -18,12 +18,45 @@ from ..api import ConsensusSession
 from ..checkpoint import save
 from ..configs import get_config, get_smoke, list_archs
 from ..configs.base import ADMMConfig
-from ..core.space import DELAY_MODELS, ConstantDelay, ParetoDelay
+from ..core.space import (DELAY_MODELS, ConstantDelay, ParetoDelay,
+                          TraceDelay)
 from ..data import TokenPipeline
 from ..models import build_model
 from ..optim import adamw, warmup_cosine
 from ..training import SGDTrainer
 from .mesh import MESH_PRESETS
+
+
+def run_ps_training(session, args, pipe, enc_kw) -> None:
+    """--runtime ps: drive the event-driven Parameter Server runtime
+    (repro.ps) instead of the vectorized epoch — real jitted numerics
+    under lock-free (or locked) block servers, bounded staleness
+    enforced by stalling, and a replayable DelayTrace out."""
+    t0 = time.time()
+    result = session.run_ps(
+        args.steps, discipline=args.discipline, record_z=False,
+        batches=lambda t: pipe.batch(t, num_workers=args.workers, **enc_kw))
+    for step in range(0, args.steps, max(args.log_every, 1)):
+        print(json.dumps({"round": step,
+                          "loss": round(result.losses[step], 4)}),
+              flush=True)
+    m = result.metrics
+    print(json.dumps({
+        "runtime": "ps", "discipline": args.discipline,
+        "rounds": args.steps, "makespan": round(result.makespan, 3),
+        "final_loss": round(result.losses[-1], 4),
+        "stall_count": m["stall_count"],
+        "stall_time": round(m["stall_time"], 3),
+        "max_served_tau": m["max_served_tau"],
+        "commits": m["commits"], "pushes": m["pushes"],
+        "elapsed_s": round(time.time() - t0, 1)}), flush=True)
+    if args.save_trace:
+        path = result.trace.save(args.save_trace)
+        print(f"delay trace saved to {path} "
+              f"(replay: --delay-model trace --trace-path {path})")
+    if args.ckpt:
+        save(args.ckpt, result.z_final, step=args.steps)
+        print(f"checkpoint saved to {args.ckpt}.npz")
 
 
 def main() -> None:
@@ -57,16 +90,41 @@ def main() -> None:
     ap.add_argument("--delay-model", default="uniform",
                     choices=sorted(DELAY_MODELS),
                     help="Assumption-3 staleness: uniform U{0..D}, "
-                         "constant worst-case lag D, or pareto "
-                         "heavy-tailed stragglers clipped at D")
+                         "constant worst-case lag D, pareto heavy-tailed "
+                         "stragglers clipped at D, or trace (replay a "
+                         "recorded PS-runtime trace; needs --trace-path)")
     ap.add_argument("--pareto-alpha", type=float, default=1.2,
                     help="tail exponent for --delay-model pareto "
                          "(smaller = heavier straggler tail)")
+    ap.add_argument("--trace-path", default=None,
+                    help="DelayTrace .npz for --delay-model trace "
+                         "(recorded by --runtime ps --save-trace or "
+                         "ConsensusSession.run_ps)")
+    ap.add_argument("--minibatch", type=float, default=None,
+                    help="incremental workers (Hong 2014): fraction of "
+                         "each worker's samples drawn fresh per step")
+    ap.add_argument("--runtime", default="epoch", choices=["epoch", "ps"],
+                    help="epoch: the vectorized asybadmm_epoch (fast "
+                         "path); ps: the event-driven Parameter Server "
+                         "runtime (repro.ps) — lock-free block servers, "
+                         "stall-enforced bounded staleness, delay-trace "
+                         "recording")
+    ap.add_argument("--discipline", default="lockfree",
+                    choices=["lockfree", "locked"],
+                    help="--runtime ps coordination: per-block lock-free "
+                         "servers (the paper) vs one locked full-vector "
+                         "server (the prior-work baseline)")
+    ap.add_argument("--save-trace", default=None,
+                    help="path to save the --runtime ps DelayTrace "
+                         "(.npz) for later --delay-model trace replay")
     ap.add_argument("--lr", type=float, default=1e-3)
     ap.add_argument("--ckpt", default=None)
     ap.add_argument("--log-every", type=int, default=10)
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
+    if args.runtime == "ps" and args.trainer != "admm":
+        raise SystemExit("--runtime ps is the AsyBADMM Parameter Server "
+                         "runtime; use --trainer admm")
 
     cfg = get_smoke(args.arch) if args.smoke else get_config(args.arch)
     model = build_model(cfg)
@@ -89,15 +147,23 @@ def main() -> None:
                           block_selection=args.block_selection,
                           backend=args.backend,
                           mesh=args.mesh,
+                          minibatch=args.minibatch,
                           seed=args.seed)
         delay_model = None                       # uniform == config default
         if args.delay_model == "constant":
             delay_model = ConstantDelay(args.max_delay)
         elif args.delay_model == "pareto":
             delay_model = ParetoDelay(args.max_delay, alpha=args.pareto_alpha)
+        elif args.delay_model == "trace":
+            if args.trace_path is None:
+                raise SystemExit("--delay-model trace needs --trace-path")
+            delay_model = TraceDelay.load(args.trace_path)
         session = ConsensusSession.pytree(model.loss, params, acfg,
                                           num_workers=args.workers,
                                           delay_model=delay_model)
+        if args.runtime == "ps":
+            run_ps_training(session, args, pipe, enc_kw)
+            return
         state = session.init()
         step_fn = session.step_fn()
         get_params = session.z

@@ -1,0 +1,42 @@
+"""Event-driven Parameter Server runtime for AsyBADMM.
+
+The subsystem that turns the paper's systems claims — lock-free block
+servers, bounded delay (Assumption 3), near-linear speedup (Table 1) —
+into executable, measurable, replayable scenarios:
+
+* :class:`EventScheduler` — deterministic discrete-event clock;
+* :class:`BlockServerProc` + ``DISCIPLINES`` — per-block ``lockfree``
+  servers vs the ``locked`` full-vector baseline (paper §1);
+* :class:`WorkerProc` — workers running the REAL jitted
+  ``VariableSpace`` hot path (jnp and pallas);
+* :class:`StalenessEnforcer` — stalls pulls that would violate
+  ``tau <= T`` instead of silently clipping;
+* :class:`DelayTrace` — records what happened; replays through the
+  fast ``asybadmm_epoch`` via ``core.space.TraceDelay`` exactly;
+* :class:`PSRuntime` / :class:`PSRunResult` — the front door, also
+  reachable as ``ConsensusSession.run_ps(...)`` and
+  ``repro.launch.train --runtime ps``.
+
+See API.md's "PS runtime" section for the scheduler model, the trace
+format, and the runtime-vs-epoch decision guide.
+"""
+from .engine import SpaceEngine
+from .events import EventScheduler
+from .runtime import PSRunResult, PSRuntime
+from .server import (BlockServerProc, DISCIPLINES, register_discipline,
+                     resolve_discipline)
+from .staleness import StalenessEnforcer
+from .timing import (SERVICE_MODELS, ConstantService, CostProfile,
+                     LognormalService, ParetoService, ServiceModel,
+                     as_service, measure_costs)
+from .trace import DelayTrace
+from .worker import WorkerProc
+
+__all__ = [
+    "SpaceEngine", "EventScheduler", "PSRunResult", "PSRuntime",
+    "BlockServerProc", "DISCIPLINES", "register_discipline",
+    "resolve_discipline", "StalenessEnforcer", "SERVICE_MODELS",
+    "ConstantService", "CostProfile", "LognormalService", "ParetoService",
+    "ServiceModel", "as_service", "measure_costs", "DelayTrace",
+    "WorkerProc",
+]

@@ -1,0 +1,61 @@
+"""Deterministic discrete-event scheduler — the PS runtime's clock.
+
+A single priority queue of ``(time, seq, callback)`` entries drives the
+whole runtime: worker compute completions, push arrivals, server
+commits, and stalled-pull resolutions are all events. Determinism is a
+hard requirement (traces must replay, CI gates must not flake), and it
+comes from two rules:
+
+* ties in ``time`` break by insertion order (``seq`` is a monotonically
+  increasing counter), so zero-cost events (e.g. ``t_push == 0``)
+  process in the order they were scheduled;
+* no entity draws randomness from a shared stream — every worker and
+  server owns its own seeded ``numpy`` generator, so service-time draws
+  are independent of event interleaving.
+
+Simulated time is unitless; callers decide whether a unit is a second
+(measured kernel costs) or an abstract service slot.
+"""
+from __future__ import annotations
+
+import heapq
+from typing import Callable, List, Tuple
+
+
+class EventScheduler:
+    """Run callbacks at simulated times; ``run`` drains the queue."""
+
+    def __init__(self):
+        self._q: List[Tuple[float, int, Callable[[], None]]] = []
+        self._seq = 0
+        self.now = 0.0
+        self.events_processed = 0
+
+    def at(self, time: float, fn: Callable[[], None]) -> None:
+        """Schedule ``fn`` at absolute simulated ``time``."""
+        if time < self.now:
+            raise ValueError(f"cannot schedule at {time} < now={self.now}")
+        heapq.heappush(self._q, (float(time), self._seq, fn))
+        self._seq += 1
+
+    def after(self, delay: float, fn: Callable[[], None]) -> None:
+        """Schedule ``fn`` ``delay`` time units from now."""
+        if delay < 0:
+            raise ValueError(f"negative delay {delay}")
+        self.at(self.now + delay, fn)
+
+    def run(self, max_events: int = 10_000_000) -> float:
+        """Process events until the queue drains; returns the final
+        simulated time (the makespan). ``max_events`` is a runaway
+        guard — a healthy run is O(rounds * (workers + servers))."""
+        while self._q:
+            if self.events_processed >= max_events:
+                raise RuntimeError(
+                    f"event budget {max_events} exhausted at t={self.now} "
+                    f"— likely a runaway commit loop (check num_rounds "
+                    f"caps and staleness bounds)")
+            time, _, fn = heapq.heappop(self._q)
+            self.now = time
+            self.events_processed += 1
+            fn()
+        return self.now

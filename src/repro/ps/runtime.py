@@ -1,0 +1,239 @@
+"""PSRuntime — wire scheduler + servers + workers + enforcer together.
+
+One call, two products:
+
+* **what happened** — makespan, per-domain queue occupancy, stall
+  statistics (the coordination-scalability quantities Table 1
+  measures), per-round losses when numerics run;
+* **what to replay** — a validated :class:`DelayTrace` whose
+  ``TraceDelay`` reproduces the runtime's z trajectory through the
+  fast vectorized ``asybadmm_epoch`` (flat/tree, jnp/pallas,
+  single-device/SPMD): structurally exact, bitwise on pallas,
+  fp32-ulp (cross-program XLA fusion) on jnp.
+
+Numerics run through :class:`~repro.ps.engine.SpaceEngine` (the real
+jitted ``VariableSpace`` ops); ``compute="timing"`` skips them for
+pure coordination studies (``benchmarks/speedup.py``).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, Optional
+
+import numpy as np
+
+from ..core.space import ConsensusSpec
+from .engine import SpaceEngine
+from .events import EventScheduler
+from .server import BlockServerProc, resolve_discipline
+from .staleness import StalenessEnforcer
+from .timing import CostProfile
+from .trace import DelayTrace
+from .worker import WorkerProc
+
+
+@dataclasses.dataclass
+class PSRunResult:
+    """What a PS-runtime run produced. ``z_final`` / ``z_versions`` are
+    in USER representation (flat vector / params pytree) like every
+    other ``ConsensusSession`` surface; both are None for timing-only
+    runs, and ``z_versions`` additionally needs ``record_z=True``."""
+    makespan: float
+    num_rounds: int
+    discipline: str
+    trace: DelayTrace
+    z_final: Optional[Any]               # final consensus value (real mode)
+    z_versions: Optional[List[Any]]      # z per version 0..R (record_z)
+    losses: Optional[List[float]]        # mean worker loss per round
+    metrics: Dict[str, Any]
+
+    def to_delay_model(self):
+        return self.trace.to_delay_model()
+
+
+class PSRuntime:
+    """Event-driven Parameter Server over one :class:`ConsensusSpec`."""
+
+    def __init__(self, spec: ConsensusSpec, data=None, batches=None, *,
+                 discipline: str = "lockfree",
+                 timing: Optional[CostProfile] = None,
+                 compute: str = "real",
+                 seed: Optional[int] = None,
+                 staleness_bound: Optional[int] = None,
+                 record_z: bool = True):
+        if compute not in ("real", "timing"):
+            raise ValueError(f"compute must be 'real' or 'timing'; "
+                             f"got {compute!r}")
+        self.spec = spec
+        self.engine = SpaceEngine(spec)
+        self.discipline = discipline
+        self.groups = resolve_discipline(discipline)(self.engine.M)
+        covered = sorted(j for g in self.groups for j in g)
+        if covered != list(range(self.engine.M)):
+            raise ValueError(f"discipline {discipline!r} does not "
+                             f"partition the {self.engine.M} blocks")
+        self.timing_profile = timing if timing is not None else CostProfile()
+        self.timing_only = compute == "timing"
+        # record_z=False keeps only the O(T) live version window per
+        # block server (plus the final z) — the long-training mode;
+        # record_z=True retains the full per-version trajectory for
+        # replay-parity pins and analysis
+        self.record_z = record_z and not self.timing_only
+        self.seed = spec.seed if seed is None else seed
+        # Assumption 3's T: the session's delay model already carries it
+        # (ring depth D+1) — the enforcer guarantees the runtime never
+        # serves staler, so its trace replays within the same depth
+        self.bound = (spec.delay_model.depth - 1 if staleness_bound is None
+                      else int(staleness_bound))
+        self._fixed_data = data
+        self._batches = batches
+        if not self.timing_only and data is None and batches is None:
+            raise ValueError("compute='real' needs fixed per-worker data "
+                             "or a batches(t) callable")
+        if self.timing_only and self.engine.needs_grads_for_select():
+            raise ValueError(
+                "this block selector may read gradient norms "
+                "(gauss_southwell / custom policies); run the PS runtime "
+                "with compute='real', or pick the gradient-free random/"
+                "cyclic selectors for timing studies)")
+
+    # ------------------------------------------------------------------
+    def run(self, num_rounds: int, z0=None) -> PSRunResult:
+        if num_rounds < 1:
+            raise ValueError("num_rounds must be >= 1")
+        eng = self.engine
+        self.num_rounds = num_rounds
+        self.sched = EventScheduler()
+        self.enforcer = StalenessEnforcer(self.bound)
+        self.trace = DelayTrace.empty(num_rounds, eng.N, eng.M, self.bound,
+                                      self.discipline)
+        self.worker_service = self.timing_profile.worker_service()
+        self._losses = [[] for _ in range(num_rounds)] \
+            if not self.timing_only else None
+        self._data_cache: Dict[int, Any] = {}
+        self._data_refs: Dict[int, int] = {}
+
+        # --- numeric state (Algorithm 1 lines 1-2) ---
+        if self.timing_only:
+            self.y = self.w = self.x = None
+            contents0 = {j: None for j in range(eng.M)}
+            caches0 = {}
+        else:
+            z0r, self.y, self.w, self.x = eng.init(z0)
+            contents0 = dict(enumerate(eng.split_blocks(z0r)))
+            caches0 = {j: eng.block_cache(self.w, j) for j in range(eng.M)}
+
+        # --- lock domains per the coordination discipline ---
+        commit_service = self.timing_profile.server_service()
+        self.domains: List[BlockServerProc] = []
+        for sid, block_ids in enumerate(self.groups):
+            edge_workers = frozenset(
+                i for i in range(eng.N)
+                if any(eng.edge[i, j] for j in block_ids))
+            self.domains.append(BlockServerProc(
+                sid, block_ids, engine=eng, sched=self.sched,
+                enforcer=self.enforcer, commit_service=commit_service,
+                push_cost=self.timing_profile.t_push,
+                rng=np.random.default_rng([self.seed, sid]),
+                num_rounds=num_rounds, edge_workers=edge_workers,
+                contents0={j: contents0[j] for j in block_ids},
+                caches0={j: caches0[j] for j in block_ids}
+                if not self.timing_only else {},
+                timing_only=self.timing_only))
+        self.domain_of_block = [None] * eng.M
+        for dom in self.domains:
+            for j in dom.block_ids:
+                self.domain_of_block[j] = dom
+        self.domains_of_worker = [
+            [dom for dom in self.domains if i in dom.edge_workers]
+            for i in range(eng.N)]
+
+        # --- launch ---
+        workers = self._workers = [WorkerProc(i, self)
+                                   for i in range(eng.N)]
+        for wk in workers:
+            self.sched.at(0.0, wk.start)
+        for dom in self.domains:
+            # blocks with an empty edge neighborhood still commit every
+            # round (prox-only decay, as the epoch does)
+            self.sched.at(0.0, dom._maybe_commit)
+        makespan = self.sched.run()
+
+        # --- invariants ---
+        for wk in workers:
+            if wk.rounds_done != num_rounds:
+                raise RuntimeError(f"worker {wk.i} finished "
+                                   f"{wk.rounds_done}/{num_rounds} rounds "
+                                   f"— runtime deadlock?")
+        for dom in self.domains:
+            if dom.version != num_rounds:
+                raise RuntimeError(f"lock domain {dom.sid} committed "
+                                   f"{dom.version}/{num_rounds} versions")
+        self.trace.validate()
+        assert self.enforcer.idle
+
+        z_final = None
+        z_versions = None
+        losses = None
+        if not self.timing_only:
+            to_user = eng.space.to_user
+
+            def z_at(v):
+                return to_user(eng.join_blocks(
+                    [self.domain_of_block[j].content_at(j, v)
+                     for j in range(eng.M)]))
+            if self.record_z:
+                z_versions = [z_at(v) for v in range(num_rounds + 1)]
+            z_final = z_versions[-1] if z_versions else z_at(num_rounds)
+            losses = [float(np.mean(l)) for l in self._losses]
+
+        metrics = dict(self.enforcer.stats())
+        metrics.update(
+            makespan=makespan,
+            events=self.sched.events_processed,
+            commits=sum(d.commits for d in self.domains),
+            pushes=sum(d.pushes for d in self.domains),
+            server_busy_time=[d.busy_time for d in self.domains],
+            worker_iterations=eng.N * num_rounds)
+        self.trace.meta.update(
+            seed=self.seed, makespan=makespan,
+            discipline=self.discipline,
+            minibatch=self.spec.minibatch,
+            stall_count=metrics["stall_count"],
+            max_served_tau=metrics["max_served_tau"])
+        return PSRunResult(makespan=makespan, num_rounds=num_rounds,
+                           discipline=self.discipline, trace=self.trace,
+                           z_final=z_final, z_versions=z_versions,
+                           losses=losses, metrics=metrics)
+
+    # ------------------------------------------------------------------
+    # per-round data (minibatched through the epoch's key chain)
+    # ------------------------------------------------------------------
+    def data_for(self, t: int):
+        if t not in self._data_cache:
+            base = self._batches(t) if self._batches is not None \
+                else self._fixed_data
+            self._data_cache[t] = self.engine.round_data(t, base)
+            self._data_refs[t] = 0
+        return self._data_cache[t]
+
+    def data_done(self, t: int) -> None:
+        if t in self._data_refs:
+            self._data_refs[t] += 1
+            if self._data_refs[t] >= self.engine.N:
+                del self._data_cache[t]
+                del self._data_refs[t]
+
+    def record_loss(self, t: int, i: int, loss) -> None:
+        self._losses[t].append(float(loss))
+
+    def on_worker_progress(self) -> None:
+        """A worker advanced a round: without full-trajectory recording,
+        drop block versions no worker can legally read anymore
+        (< min worker round - T)."""
+        if self.record_z or self.timing_only:
+            return
+        thr = min(wk.t for wk in self._workers) - self.bound
+        if thr > 0:
+            for dom in self.domains:
+                dom.prune(thr)

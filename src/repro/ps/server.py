@@ -1,0 +1,199 @@
+"""Block servers — lock-free per-block vs locked full-vector (paper §1).
+
+The paper's headline architectural claim is that block-wise servers
+need NO global lock: a push to block j occupies only server j, so
+different blocks commit concurrently, while all prior async consensus
+ADMM (Chang et al. 2015; Zhang & Kwok 2014) serializes every update
+through one full-vector lock. Both disciplines here are the SAME
+server implementation grouped differently:
+
+* ``lockfree`` — M lock domains, one block each; commit cost is one
+  block's prox service time;
+* ``locked``   — ONE lock domain holding every block; all pushes queue
+  on it and each commit pays the per-block service time M times, under
+  the lock.
+
+A lock domain commits version v+1 of its blocks once (a) it has heard
+a round-v declaration (push or skip) from every worker in its edge
+neighborhood, (b) all round-v pushes have been processed through its
+queue, and (c) version v is committed. Pushes that arrive EARLY (a
+worker running up to T rounds ahead under bounded staleness) buffer
+per round and apply to the stale-w~ cache only at their round's commit
+— that round-ordering is what makes a recorded trace replay through
+the vectorized epoch exactly. Commits cap at ``num_rounds``: versions
+beyond the horizon would never be read.
+
+``DISCIPLINES`` is the pluggable grouping registry (block ids ->
+lock domains); register custom groupings (e.g. shard-pair servers)
+with :func:`register_discipline`.
+"""
+from __future__ import annotations
+
+from collections import defaultdict
+from typing import Callable, Dict, List, Sequence, Tuple
+
+import numpy as np
+
+
+# ---------------------------------------------------------------------------
+# coordination disciplines = block -> lock-domain groupings
+# ---------------------------------------------------------------------------
+
+DisciplineFn = Callable[[int], List[Tuple[int, ...]]]
+
+DISCIPLINES: Dict[str, DisciplineFn] = {}
+
+
+def register_discipline(name: str):
+    def deco(fn: DisciplineFn) -> DisciplineFn:
+        DISCIPLINES[name] = fn
+        return fn
+    return deco
+
+
+@register_discipline("lockfree")
+def lockfree_domains(num_blocks: int) -> List[Tuple[int, ...]]:
+    """AsyBADMM: one lock domain per block server."""
+    return [(j,) for j in range(num_blocks)]
+
+
+@register_discipline("locked")
+def locked_domains(num_blocks: int) -> List[Tuple[int, ...]]:
+    """The baseline the paper beats: one global full-vector lock."""
+    return [tuple(range(num_blocks))]
+
+
+def resolve_discipline(name: str) -> DisciplineFn:
+    try:
+        return DISCIPLINES[name]
+    except KeyError:
+        raise ValueError(f"unknown discipline {name!r}; registered: "
+                         f"{sorted(DISCIPLINES)}") from None
+
+
+# ---------------------------------------------------------------------------
+# the server process
+# ---------------------------------------------------------------------------
+
+class BlockServerProc:
+    """One lock domain: a set of blocks sharing a serial service queue.
+
+    Owns the blocks' committed-version contents, their stale-w~ caches,
+    per-round push buffers and declarations; numeric commits delegate
+    to ``engine.commit_block`` (the real jitted server update)."""
+
+    def __init__(self, sid: int, block_ids: Sequence[int], *, engine, sched,
+                 enforcer, commit_service, push_cost: float,
+                 rng: np.random.Generator, num_rounds: int,
+                 edge_workers: frozenset, contents0: dict, caches0: dict,
+                 timing_only: bool):
+        self.sid = sid
+        self.block_ids = tuple(block_ids)
+        self.engine = engine
+        self.sched = sched
+        self.enforcer = enforcer
+        self.commit_service = commit_service
+        self.push_cost = float(push_cost)
+        self.rng = rng
+        self.num_rounds = num_rounds
+        self.edge_workers = edge_workers
+        self.timing_only = timing_only
+
+        self.version = 0
+        # contents[j][v] = block j's committed content at version v
+        # (a dict keyed by version: old versions are prunable once no
+        # worker can legally read them — see ``prune``)
+        self.contents = {j: {0: contents0[j]} for j in self.block_ids} \
+            if not timing_only else {}
+        self.caches = dict(caches0) if not timing_only else {}
+        self._decl: Dict[int, set] = defaultdict(set)
+        self._push_buf: Dict[int, list] = defaultdict(list)
+        self._unprocessed: Dict[int, int] = defaultdict(int)
+        self._committing = False
+        self.busy_until = 0.0
+        self.busy_time = 0.0
+        self.commits = 0
+        self.pushes = 0
+
+    # ---- queue occupancy --------------------------------------------------
+    def _occupy(self, duration: float) -> float:
+        """Serialize ``duration`` of work through this lock domain's
+        queue; returns the completion time."""
+        start = max(self.sched.now, self.busy_until)
+        done = start + duration
+        self.busy_until = done
+        self.busy_time += duration
+        return done
+
+    # ---- worker-facing API ------------------------------------------------
+    def on_declare(self, i: int, t: int, pushes: list) -> None:
+        """Worker i's round-t declaration: ``pushes`` is the
+        [(block_id, w_value)] it commits this round (w_value is None in
+        timing-only mode); an empty list is a skip. Either way the
+        server now knows worker i's round-t intent — the runtime
+        analogue of the bounded-delay assumption that lets a real
+        lock-free server stop waiting on non-pushers."""
+        self._decl[t].add(i)
+        for (j, value) in pushes:
+            self.pushes += 1
+            self._unprocessed[t] += 1
+            done = self._occupy(self.push_cost)
+            self.sched.at(done, lambda t=t, i=i, j=j, v=value:
+                          self._push_processed(t, i, j, v))
+        self._maybe_commit()
+
+    def _push_processed(self, t: int, i: int, j: int, value) -> None:
+        self._push_buf[t].append((i, j, value))
+        self._unprocessed[t] -= 1
+        self._maybe_commit()
+
+    # ---- commit machinery -------------------------------------------------
+    def _maybe_commit(self) -> None:
+        v = self.version
+        if self._committing or v >= self.num_rounds:
+            return
+        if not self._decl[v] >= self.edge_workers:
+            return
+        if self._unprocessed[v] > 0:
+            return
+        self._committing = True
+        dur = sum(self.commit_service.sample(self.rng)
+                  for _ in self.block_ids)
+        self.sched.at(self._occupy(dur), self._finish_commit)
+
+    def _finish_commit(self) -> None:
+        v = self.version
+        # apply round-v pushes to the stale-w~ caches in processed order
+        # (round-buffered: early pushes from workers running ahead under
+        # bounded staleness must not leak into this commit)
+        pushes = self._push_buf.pop(v, [])
+        if not self.timing_only:
+            for (i, j, value) in pushes:
+                self.caches[j] = self.engine.apply_push(self.caches[j], i,
+                                                        value)
+            for j in self.block_ids:
+                self.contents[j][v + 1] = self.engine.commit_block(
+                    j, self.contents[j][v], self.caches[j])
+        self.version = v + 1
+        self.commits += 1
+        self._decl.pop(v, None)
+        self._unprocessed.pop(v, None)
+        self._committing = False
+        self.enforcer.notify(self, self.sched.now)
+        self._maybe_commit()
+
+    # ---- reads ------------------------------------------------------------
+    def content_at(self, j: int, version: int):
+        return self.contents[j][version]
+
+    def prune(self, min_version: int) -> None:
+        """Drop committed versions below ``min_version`` (the oldest any
+        worker can still legally read: min worker round - T). The
+        newest version always stays. Keeps a real-compute run's memory
+        at O(T) versions instead of O(num_rounds) when the caller does
+        not want the full z trajectory."""
+        for j in self.block_ids:
+            store = self.contents[j]
+            for v in [v for v in store if v < min_version
+                      and v != self.version]:
+                del store[v]

@@ -1,0 +1,88 @@
+"""Bounded-staleness enforcement (Assumption 3) for the PS runtime.
+
+The theory requires every read z~_j = z_j^{t - tau} to satisfy
+``tau <= T``. The vectorized epoch gets this for free (the delay model
+draws within the ring depth); a real parameter server does NOT — a
+straggling block server can fall arbitrarily far behind a fast worker.
+The enforcer is the runtime's gatekeeper: a pull whose freshest
+available version would violate the bound **stalls** (the worker
+blocks, simulated time passes) until the server commits version
+``t - T``, instead of silently clipping the staleness the way a
+sampled delay model would.
+
+Serving discipline, for determinism: waiters resolve in FIFO order
+inside the commit event that satisfies them. Every served pull is
+asserted ``0 <= tau <= T`` — the property tests/test_ps_runtime.py
+sweeps disciplines and straggler models against.
+"""
+from __future__ import annotations
+
+from typing import Callable, Dict, List, Tuple
+
+
+class StalenessEnforcer:
+    """Gate pulls on the Assumption-3 bound; account stalls."""
+
+    def __init__(self, bound: int):
+        if bound < 0:
+            raise ValueError(f"staleness bound must be >= 0; got {bound}")
+        self.bound = int(bound)
+        self.pulls_served = 0
+        self.max_served_tau = 0
+        self.stall_count = 0
+        self.stall_time = 0.0
+        # server sid -> FIFO [(worker round t, issue time, resolve)]
+        self._waiting: Dict[int, List[Tuple[int, float, Callable]]] = {}
+
+    def request(self, server, t: int, now: float,
+                resolve: Callable[[int], None]) -> bool:
+        """Worker round-t pull against ``server``. Resolves immediately
+        (returning True) with version ``min(newest, t)`` when that
+        read's staleness is within the bound; otherwise parks the pull
+        until the server catches up to version ``t - bound``."""
+        if server.version >= t - self.bound:
+            self._serve(t, min(server.version, t), resolve)
+            return True
+        self.stall_count += 1
+        self._waiting.setdefault(server.sid, []).append((t, now, resolve))
+        return False
+
+    def notify(self, server, now: float) -> None:
+        """``server`` committed a new version — flush satisfiable
+        waiters in FIFO order (within the commit event, so resolution
+        order is deterministic)."""
+        waiters = self._waiting.get(server.sid)
+        if not waiters:
+            return
+        keep = []
+        for (t, issued, resolve) in waiters:
+            if server.version >= t - self.bound:
+                self.stall_time += now - issued
+                self._serve(t, min(server.version, t), resolve)
+            else:
+                keep.append((t, issued, resolve))
+        if keep:
+            self._waiting[server.sid] = keep
+        else:
+            del self._waiting[server.sid]
+
+    def _serve(self, t: int, version: int, resolve) -> None:
+        tau = t - version
+        if not 0 <= tau <= self.bound:
+            raise AssertionError(
+                f"staleness enforcer served tau={tau} outside [0, "
+                f"{self.bound}] — runtime invariant broken")
+        self.pulls_served += 1
+        self.max_served_tau = max(self.max_served_tau, tau)
+        resolve(version)
+
+    @property
+    def idle(self) -> bool:
+        return not self._waiting
+
+    def stats(self) -> Dict[str, float]:
+        return {"bound": self.bound,
+                "pulls_served": self.pulls_served,
+                "max_served_tau": self.max_served_tau,
+                "stall_count": self.stall_count,
+                "stall_time": self.stall_time}

@@ -1,0 +1,150 @@
+"""Service-time models for the PS runtime + measured kernel costs.
+
+The discrete-event scheduler charges every worker compute and every
+server commit a service time drawn from a :class:`ServiceModel`:
+
+* ``constant``  — deterministic (CI gates, analytical checks);
+* ``lognormal`` — the seed benchmark's EC2-style jitter;
+* ``pareto``    — heavy-tailed stragglers (the cluster profile behind
+  the paper's Table-1 story and our ``ParetoDelay`` staleness model).
+
+:func:`measure_costs` grounds the simulation in reality: it times the
+REAL jitted ``VariableSpace`` hot-path ops (the same ``worker_grads`` /
+``worker_select_update`` / ``server_consensus_update`` the epoch runs)
+on this host and returns a :class:`CostProfile` — this replaces the
+hand-rolled ``loss_fn``/``server_update`` measurement the old
+``benchmarks/speedup.py`` carried.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time as _time
+from typing import Any, Dict, Optional, Protocol
+
+import numpy as np
+
+
+class ServiceModel(Protocol):
+    """Draws one service duration from an entity-owned generator."""
+
+    def sample(self, rng: np.random.Generator) -> float: ...
+
+
+@dataclasses.dataclass(frozen=True)
+class ConstantService:
+    """Deterministic service time (the CI-gate workhorse)."""
+    mean: float
+
+    def sample(self, rng: np.random.Generator) -> float:
+        return self.mean
+
+
+@dataclasses.dataclass(frozen=True)
+class LognormalService:
+    """``mean * LogNormal(0, sigma)`` — the seed benchmark's jitter."""
+    mean: float
+    sigma: float = 0.3
+
+    def sample(self, rng: np.random.Generator) -> float:
+        return self.mean * float(rng.lognormal(0.0, self.sigma))
+
+
+@dataclasses.dataclass(frozen=True)
+class ParetoService:
+    """Heavy-tailed straggler service: ``mean * X`` with X ~ Pareto
+    (x_m = 1, tail ``alpha``), mean-normalized when ``alpha > 1`` and
+    capped at ``cap`` multiples of the mean so a single draw cannot
+    dominate the makespan unboundedly."""
+    mean: float
+    alpha: float = 1.2
+    cap: float = 50.0
+
+    def sample(self, rng: np.random.Generator) -> float:
+        x = (1.0 - float(rng.random())) ** (-1.0 / self.alpha)
+        if self.alpha > 1.0:
+            x *= (self.alpha - 1.0) / self.alpha
+        return self.mean * min(x, self.cap)
+
+
+SERVICE_MODELS = {"constant": ConstantService, "lognormal": LognormalService,
+                  "pareto": ParetoService}
+
+
+def as_service(v) -> ServiceModel:
+    """Coerce a float to ConstantService; pass ServiceModels through."""
+    if hasattr(v, "sample"):
+        return v
+    return ConstantService(float(v))
+
+
+@dataclasses.dataclass(frozen=True)
+class CostProfile:
+    """Per-event costs fed to the scheduler.
+
+    t_worker       : one worker iteration (stale pull -> grad -> update);
+    t_server_block : one block server commit (eq. 13 on one block); the
+                     locked full-vector discipline pays it once per
+                     block it holds under the lock;
+    t_push         : server-side processing of one incoming w push
+                     (queueing delay on the lock domain) — a plain
+                     float, charged deterministically per push.
+    ``t_worker`` / ``t_server_block`` floats coerce to
+    ConstantService; pass a ServiceModel for jitter.
+    """
+    t_worker: Any = 1.0
+    t_server_block: Any = 0.25
+    t_push: float = 0.0
+
+    def __post_init__(self):
+        if hasattr(self.t_push, "sample"):
+            raise TypeError("t_push is a deterministic float cost, not a "
+                            "ServiceModel (push processing is charged per "
+                            "event on the lock domain's queue)")
+
+    def worker_service(self) -> ServiceModel:
+        return as_service(self.t_worker)
+
+    def server_service(self) -> ServiceModel:
+        return as_service(self.t_server_block)
+
+
+def measure_costs(spec, data, z0=None, *, repeats: int = 20
+                  ) -> Dict[str, float]:
+    """Time the real jitted unified-path ops for one worker iteration
+    and one block-server commit on this host.
+
+    Returns ``{"t_worker": s, "t_server_block": s}`` — seconds per
+    event. The worker op executes at the epoch's full (N, ...) shape
+    (that IS the jitted hot path), so the per-worker cost is the
+    measured call divided by N.
+    """
+    import jax
+
+    from .engine import SpaceEngine
+
+    eng = SpaceEngine(spec)
+    z0r, y, w, x = eng.init(z0)
+    contents = eng.split_blocks(z0r)
+    data0 = eng.round_data(0, data)
+    zbuf = eng.z_tilde_buffer(0, contents)
+    gnorm0 = (np.zeros(eng.M, np.float32) if eng.needs_grads_for_select()
+              else None)
+    sel_row = eng.select(0, 0, gnorm0)
+
+    def _timeit(fn, n):
+        jax.block_until_ready(fn())            # compile + warm
+        t0 = _time.perf_counter()
+        for _ in range(n):
+            jax.block_until_ready(fn())
+        return (_time.perf_counter() - t0) / n
+
+    def worker_once():
+        losses, g_buf, _ = eng.grads(zbuf, data0)
+        return eng.update(0, g_buf, zbuf, y, w, x, sel_row)
+
+    t_worker = _timeit(worker_once, repeats) / eng.N
+
+    cache0 = eng.block_cache(w, 0)
+    t_server = _timeit(lambda: eng.commit_block(0, contents[0], cache0),
+                       max(repeats, 50))
+    return {"t_worker": t_worker, "t_server_block": t_server}

@@ -1,0 +1,87 @@
+"""DelayTrace — what the PS runtime actually observed, replayable.
+
+Every pull the runtime serves is a (round t, worker i, block j) read of
+some committed version u <= t; the trace records the full staleness
+matrix ``delays[t, i, j] = t - u``. Because the runtime realizes
+Algorithm 1's logical dataflow exactly (round-r pushes commit block
+version r+1), replaying a recorded trace through the fast vectorized
+``asybadmm_epoch`` via :class:`repro.core.space.TraceDelay` reproduces
+the runtime's z trajectory — structurally exact, bitwise on the pallas
+backend, fp32-ulp (cross-program XLA fusion) on jnp — the bridge that
+lets every scheduling/straggler scenario discovered under the
+event-driven runtime re-run at SPMD speed (pinned by
+tests/test_ps_runtime.py).
+
+File format (``.npz``): ``delays`` (rounds, N, M) int32, ``bound`` (the
+Assumption-3 T the enforcer guaranteed), ``discipline``, and a JSON
+``meta`` blob (timing config, seeds, makespan).
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+from typing import Any, Dict
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class DelayTrace:
+    delays: np.ndarray                 # (rounds, N, M) int32; -1 = unrecorded
+    bound: int                         # Assumption 3's T enforced at record time
+    discipline: str = "lockfree"
+    meta: Dict[str, Any] = dataclasses.field(default_factory=dict)
+
+    @classmethod
+    def empty(cls, num_rounds: int, n_workers: int, n_blocks: int,
+              bound: int, discipline: str = "lockfree") -> "DelayTrace":
+        return cls(delays=np.full((num_rounds, n_workers, n_blocks), -1,
+                                  np.int32),
+                   bound=int(bound), discipline=discipline)
+
+    # ---- recording -------------------------------------------------------
+    def record(self, t: int, i: int, row) -> None:
+        """Record worker i's round-t staleness row (M,)."""
+        self.delays[t, i, :] = np.asarray(row, np.int32)
+
+    @property
+    def num_rounds(self) -> int:
+        return self.delays.shape[0]
+
+    @property
+    def complete(self) -> bool:
+        return bool((self.delays >= 0).all())
+
+    def validate(self) -> "DelayTrace":
+        if not self.complete:
+            raise ValueError("trace has unrecorded (round, worker) pulls")
+        mx = int(self.delays.max())
+        if mx > self.bound:
+            raise ValueError(f"trace violates its own staleness bound: "
+                             f"max tau {mx} > T={self.bound}")
+        return self
+
+    # ---- replay ----------------------------------------------------------
+    def to_delay_model(self):
+        """The :class:`~repro.core.space.TraceDelay` that replays this
+        trace through ``asybadmm_epoch`` (any space/backend/mesh)."""
+        from ..core.space import TraceDelay
+        return TraceDelay(self.validate().delays)
+
+    # ---- persistence -----------------------------------------------------
+    def save(self, path: str) -> str:
+        if not str(path).endswith(".npz"):
+            path = f"{path}.npz"
+        np.savez(path, delays=self.delays, bound=np.int32(self.bound),
+                 discipline=np.str_(self.discipline),
+                 meta=np.str_(json.dumps(self.meta)))
+        return path
+
+    @staticmethod
+    def load(path: str) -> "DelayTrace":
+        with np.load(path, allow_pickle=False) as f:
+            return DelayTrace(
+                delays=np.asarray(f["delays"], np.int32),
+                bound=int(f["bound"]),
+                discipline=str(f["discipline"]),
+                meta=json.loads(str(f["meta"])) if "meta" in f else {})

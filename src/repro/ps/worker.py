@@ -1,0 +1,107 @@
+"""Worker processes — pull, compute, declare/push, repeat.
+
+Each worker runs Algorithm 1's lines 3-9 as an event-driven cycle:
+
+  1. **pull**  — request every lock domain's freshest committed version
+     (capped at its own round t, as the epoch model reads versions
+     <= t). Pulls route through the :class:`StalenessEnforcer`: a
+     domain lagging more than T versions stalls the worker until the
+     commit that restores Assumption 3.
+  2. **compute** — once every pull resolves, the observed staleness row
+     is recorded into the :class:`DelayTrace` and the worker's service
+     time elapses (the scheduler's clock; stragglers come from the
+     timing model). The numerics — the REAL jitted ``worker_grads`` +
+     ``worker_select_update`` at the epoch's full shape with this
+     worker's row live — run at completion.
+  3. **declare/push** — the selection row (the epoch's selector on the
+     epoch's key chain) decides which blocks get fresh w pushes; every
+     edge domain gets a declaration either way.
+
+In ``timing_only`` mode step 2 skips the numerics (selection still
+runs — it shapes server load) so coordination scalability can be
+simulated at sizes where real gradients would dominate wall-clock.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import numpy as np
+
+
+class WorkerProc:
+    def __init__(self, i: int, runtime):
+        self.i = i
+        self.rt = runtime
+        self.rng = np.random.default_rng([runtime.seed, 1000 + i])
+        self.t = 0
+        self.rounds_done = 0
+        self._pulled = {}
+        self._pending = 0
+        self._issued = False
+
+    # ---- the cycle --------------------------------------------------------
+    def start(self) -> None:
+        self._begin_round(0)
+
+    def _begin_round(self, t: int) -> None:
+        self.t = t                     # finished workers report t == R
+        if t >= self.rt.num_rounds:
+            return
+        self._pulled = {}
+        self._issued = False
+        self._pending = len(self.rt.domains)
+        for dom in self.rt.domains:
+            self.rt.enforcer.request(
+                dom, t, self.rt.sched.now,
+                lambda version, dom=dom: self._on_pull(dom, version))
+        self._issued = True
+        if self._pending == 0:
+            self._start_compute()
+
+    def _on_pull(self, dom, version: int) -> None:
+        self._pulled[dom.sid] = version
+        self._pending -= 1
+        if self._issued and self._pending == 0:
+            self._start_compute()
+
+    def _start_compute(self) -> None:
+        t = self.t
+        rt = self.rt
+        # observed staleness row -> the trace (replayable via TraceDelay)
+        row = np.empty(rt.engine.M, np.int32)
+        for j in range(rt.engine.M):
+            row[j] = t - self._pulled[rt.domain_of_block[j].sid]
+        rt.trace.record(t, self.i, row)
+        contents: Optional[list] = None
+        if not rt.timing_only:
+            contents = [rt.domain_of_block[j].content_at(
+                j, self._pulled[rt.domain_of_block[j].sid])
+                for j in range(rt.engine.M)]
+        dur = rt.worker_service.sample(self.rng)
+        rt.sched.after(dur, lambda: self._finish_round(t, contents))
+
+    def _finish_round(self, t: int, contents) -> None:
+        rt, i = self.rt, self.i
+        eng = rt.engine
+        if rt.timing_only:
+            sel_row = eng.select(t, i, None)
+        else:
+            z_buf = eng.z_tilde_buffer(i, contents)
+            data = rt.data_for(t)
+            losses, g_buf, gnorm = eng.grads(z_buf, data)
+            rt.record_loss(t, i, losses[i])
+            sel_row = eng.select(
+                t, i, gnorm[i] if eng.needs_grads_for_select() else None)
+            rt.y, rt.w, rt.x = eng.update(
+                i, g_buf, z_buf, rt.y, rt.w, rt.x, sel_row)
+        # declare to every edge domain; push fresh w where selected
+        sel_row = np.asarray(sel_row, bool) & eng.edge[i]
+        for dom in rt.domains_of_worker[i]:
+            pushes = [(j, None if rt.timing_only
+                       else eng.push_value(rt.w, i, j))
+                      for j in dom.block_ids if sel_row[j]]
+            dom.on_declare(i, t, pushes)
+        self.rounds_done += 1
+        rt.data_done(t)
+        self._begin_round(t + 1)
+        rt.on_worker_progress()

@@ -37,11 +37,12 @@ import jax.numpy as jnp
 
 from ..configs.base import ADMMConfig
 from ..core.admm import server_update, worker_update
-from ..core.async_sim import push_history
+from ..core.async_sim import push_history, subsample_worker_data
 from ..core.blocks import TreeBlocks, make_tree_blocks
 from ..core.space import (ConsensusSpec, ConsensusState, TreeSpace,
                           asybadmm_epoch, consensus_residual,
-                          init_consensus_state, make_spec)
+                          init_consensus_state, make_spec,
+                          sample_delay_model)
 from ..optim.optimizers import Optimizer, apply_updates
 from .train_state import ADMMTrainState, SGDTrainState
 
@@ -172,14 +173,22 @@ class ADMMTrainer:
         spec = self._spec(params0)
         space = spec.space
         blocks = space.blocks
-        rng, r_delay = jax.random.split(state.rng)
+        if spec.minibatch is not None:
+            # incremental workers: same semantics as the generic epoch
+            # (this specialized path has its own rng chain, so the draw
+            # widens it rather than matching the epoch's keys)
+            rng, r_delay, r_batch = jax.random.split(state.rng, 3)
+            batch = subsample_worker_data(r_batch, batch, spec.minibatch)
+        else:
+            rng, r_delay = jax.random.split(state.rng)
 
         leaves_ids = blocks.leaf_block_ids
         active_idx = [i for i, b in enumerate(leaves_ids) if b == block_id]
         treedef = blocks.treedef
 
         # --- bounded-staleness pull (all leaves — forward needs them) ---
-        delays = spec.delay_model.sample(r_delay, N, M)
+        delays = sample_delay_model(spec.delay_model, r_delay, N, M,
+                                    state.step)
         z_tilde = space.gather(state.z_hist, delays)
 
         zt_leaves = jax.tree.leaves(z_tilde)

@@ -1,0 +1,436 @@
+"""PS runtime (repro.ps): runtime <-> replay parity, bounded-staleness
+enforcement, trace IO, and discipline behavior.
+
+The headline pin: a ``DelayTrace`` recorded by the event-driven
+Parameter Server runtime, replayed via ``TraceDelay`` through the
+vectorized ``asybadmm_epoch``, reproduces the runtime's z trajectory —
+for both spaces (flat / tree), both backends (jnp / pallas), both
+coordination disciplines (lockfree / locked), and the SPMD epoch.
+The replay is structurally exact (delays, selection, push/commit
+round-ordering are integers) and float-exact up to cross-program XLA
+fusion: the pallas backend pins BITWISE equality (interpret-mode
+kernels are fusion-stable), jnp pins at the same fp32 ulp tolerance
+class as the repo's other same-math-different-program parity suites
+(backend/SPMD parity).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.api import ConsensusSession
+from repro.configs.base import ADMMConfig
+from repro.core.blocks import TreeBlocks
+from repro.core.space import DELAY_MODELS, TraceDelay
+from repro.ps import (ConstantService, CostProfile, DelayTrace,
+                      EventScheduler, LognormalService, ParetoService,
+                      PSRuntime)
+
+N, M, DBLK = 3, 4, 5
+DIM = M * DBLK
+ROUNDS = 6
+
+_r = np.random.RandomState(7)
+CENTERS = jnp.asarray(_r.randn(N, DIM).astype(np.float32))
+EDGE = np.array([[1, 1, 0, 1],
+                 [1, 0, 1, 0],
+                 [1, 1, 1, 1]], bool)
+RHO_SCALE = np.array([0.5, 1.0, 2.0], np.float32)
+
+STRAGGLER = CostProfile(t_worker=ParetoService(1.0, alpha=1.2),
+                        t_server_block=LognormalService(0.3, 0.4))
+
+
+def _cfg(scheme="random", max_delay=2, **kw):
+    return ADMMConfig(rho=2.0, gamma=0.1, max_delay=max_delay,
+                      block_fraction=0.5, num_blocks=M,
+                      block_selection=scheme, l1_coef=1e-3, clip=0.8,
+                      seed=0, **kw)
+
+
+def _flat_loss(z, c):
+    return 0.5 * jnp.sum(jnp.square(z - c))
+
+
+def _flat_session(backend="jnp", delay_model=None, cfg=None, mesh=None):
+    return ConsensusSession.flat(
+        _flat_loss, CENTERS, dim=DIM, cfg=cfg or _cfg(), edge=EDGE,
+        rho_scale=RHO_SCALE, backend=backend, delay_model=delay_model,
+        mesh=mesh)
+
+
+def _tree_params():
+    return {f"w{j}": jnp.zeros((DBLK,), jnp.float32) for j in range(M)}
+
+
+def _tree_loss(p, c):
+    z = jnp.concatenate([p[f"w{j}"] for j in range(M)])
+    return 0.5 * jnp.sum(jnp.square(z - c))
+
+
+def _tree_session(backend="jnp", delay_model=None, cfg=None):
+    params = _tree_params()
+    tblocks = TreeBlocks(num_blocks=M, leaf_block_ids=tuple(range(M)),
+                         treedef=jax.tree.structure(params))
+    return ConsensusSession.pytree(
+        _tree_loss, params, cfg or _cfg(), num_workers=N, blocks=tblocks,
+        edge=EDGE, rho_scale=RHO_SCALE, backend=backend,
+        delay_model=delay_model)
+
+
+def _tree_vec(zt):
+    return np.concatenate([np.asarray(zt[f"w{j}"]).ravel()
+                           for j in range(M)])
+
+
+def _assert_replay(res, sess2, data, to_vec, bitwise):
+    state = sess2.init()
+    step = sess2.step_fn()
+    for t in range(res.num_rounds):
+        state, _ = step(state, data)
+        replay = to_vec(sess2.z(state))
+        runtime = to_vec(res.z_versions[t + 1])      # user representation
+        if bitwise:
+            np.testing.assert_array_equal(
+                replay, runtime, err_msg=f"replay diverged at round {t}")
+        else:
+            np.testing.assert_allclose(
+                replay, runtime, rtol=1e-5, atol=1e-6,
+                err_msg=f"replay diverged at round {t}")
+
+
+# ---------------------------------------------------------------------------
+# runtime <-> replay parity (the acceptance pin)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("discipline", ["lockfree", "locked"])
+@pytest.mark.parametrize("backend", ["jnp", "pallas"])
+def test_flat_runtime_replay_parity(backend, discipline):
+    sess = _flat_session(backend)
+    res = sess.run_ps(ROUNDS, discipline=discipline, timing=STRAGGLER)
+    assert res.trace.complete and res.trace.delays.max() <= 2
+    sess2 = _flat_session(backend, delay_model=res.to_delay_model())
+    _assert_replay(res, sess2, CENTERS,
+                   lambda z: np.asarray(z).ravel(),
+                   bitwise=backend == "pallas")
+
+
+@pytest.mark.parametrize("discipline", ["lockfree", "locked"])
+@pytest.mark.parametrize("backend", ["jnp", "pallas"])
+def test_tree_runtime_replay_parity(backend, discipline):
+    sess = _tree_session(backend)
+    res = sess.run_ps(ROUNDS, discipline=discipline, timing=STRAGGLER,
+                      batches=lambda t: CENTERS)
+    sess2 = _tree_session(backend, delay_model=res.to_delay_model())
+    _assert_replay(res, sess2, CENTERS, _tree_vec,
+                   bitwise=backend == "pallas")
+
+
+@pytest.mark.parametrize("scheme", ["cyclic", "gauss_southwell"])
+def test_selector_runtime_replay_parity(scheme):
+    """Selection runs on the epoch's key chain inside the runtime, so
+    non-default selectors replay too (Gauss-Southwell additionally
+    exercises the per-row gradient-norm path)."""
+    sess = _flat_session(cfg=_cfg(scheme))
+    res = sess.run_ps(ROUNDS, timing=STRAGGLER)
+    sess2 = _flat_session(cfg=_cfg(scheme), delay_model=res.to_delay_model())
+    _assert_replay(res, sess2, CENTERS, lambda z: np.asarray(z).ravel(),
+                   bitwise=False)
+
+
+def test_custom_selector_runtime_replay_parity():
+    """A user-registered selector is conservatively fed real gradient
+    norms under the runtime (only the built-in random/cyclic are known
+    gradient-free), so custom policies replay too — and timing-only
+    mode refuses them rather than silently zeroing the norms."""
+    def top1_by_gnorm(ctx):
+        g = jnp.where(ctx.edge, ctx.grad_sqnorm(), -jnp.inf)
+        best = jnp.argmax(g, axis=1)
+        sel = jax.nn.one_hot(best, ctx.edge.shape[1], dtype=bool)
+        return sel & ctx.edge
+
+    def make(dm=None):
+        return ConsensusSession.flat(
+            _flat_loss, CENTERS, dim=DIM, cfg=_cfg(), edge=EDGE,
+            rho_scale=RHO_SCALE, selector=top1_by_gnorm, delay_model=dm)
+    sess = make()
+    res = sess.run_ps(ROUNDS, timing=STRAGGLER)
+    _assert_replay(res, make(res.to_delay_model()), CENTERS,
+                   lambda z: np.asarray(z).ravel(), bitwise=False)
+    with pytest.raises(ValueError):
+        PSRuntime(make().spec, compute="timing")
+
+
+def test_minibatch_runtime_replay_parity():
+    """Incremental workers: the runtime's per-round minibatch draw is
+    the epoch's (same key chain), so stochastic-gradient runs replay."""
+    cfg = _cfg(minibatch=0.5)
+    rng = np.random.RandomState(3)
+    X = jnp.asarray(rng.randn(N, 24, DIM).astype(np.float32))
+    y = jnp.asarray(np.sign(rng.randn(N, 24)).astype(np.float32))
+
+    def loss(z, d):
+        Xi, yi = d
+        return jnp.mean(jnp.log1p(jnp.exp(-yi * (Xi @ z))))
+
+    def make(dm=None):
+        return ConsensusSession.flat(loss, (X, y), dim=DIM, cfg=cfg,
+                                     delay_model=dm)
+    sess = make()
+    res = sess.run_ps(ROUNDS, timing=STRAGGLER)
+    _assert_replay(res, make(res.to_delay_model()), sess.data,
+                   lambda z: np.asarray(z).ravel(), bitwise=False)
+
+
+def test_runtime_loss_matches_replay_info():
+    """The runtime's per-round mean worker loss equals the epoch
+    info['loss'] under replay (same grads at the same stale reads)."""
+    sess = _flat_session()
+    res = sess.run_ps(ROUNDS, timing=STRAGGLER)
+    sess2 = _flat_session(delay_model=res.to_delay_model())
+    state = sess2.init()
+    step = sess2.step_fn()
+    for t in range(ROUNDS):
+        state, info = step(state, CENTERS)
+        np.testing.assert_allclose(res.losses[t], float(info["loss"]),
+                                   rtol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# bounded-staleness enforcement (Assumption 3)
+# ---------------------------------------------------------------------------
+
+def _staleness_run(discipline, bound, timing, rounds=10, scheme="random"):
+    sess = _flat_session(cfg=_cfg(scheme, max_delay=bound))
+    rt = PSRuntime(sess.spec, discipline=discipline, timing=timing,
+                   compute="timing")
+    return rt.run(rounds)
+
+
+@pytest.mark.parametrize("discipline", ["lockfree", "locked"])
+@pytest.mark.parametrize("bound", [0, 1, 3])
+def test_no_pull_ever_exceeds_bound(discipline, bound):
+    """Deterministic sweep of the property the enforcer guarantees: no
+    served pull observes a version older than T, across disciplines and
+    straggler models — even when servers straggle so hard that pulls
+    must stall."""
+    slow_servers = CostProfile(t_worker=ConstantService(0.1),
+                               t_server_block=ParetoService(1.0, alpha=1.1))
+    res = _staleness_run(discipline, bound, slow_servers)
+    assert res.metrics["max_served_tau"] <= bound
+    assert int(res.trace.delays.max()) <= bound
+    assert int(res.trace.delays.min()) >= 0
+    if bound <= 1:
+        # fast workers + straggling servers must actually stall (the
+        # enforcer is enforcing, not vacuously passing)
+        assert res.metrics["stall_count"] > 0
+
+
+def test_stalls_account_simulated_time():
+    res = _staleness_run("locked", 0, CostProfile(
+        t_worker=ConstantService(0.1), t_server_block=ConstantService(1.0)))
+    assert res.metrics["stall_count"] > 0
+    assert res.metrics["stall_time"] > 0.0
+    assert res.metrics["makespan"] > 0.0
+
+
+try:
+    import hypothesis  # noqa: F401
+    from hypothesis import given, settings, strategies as st
+
+    @given(bound=st.integers(0, 3),
+           discipline=st.sampled_from(["lockfree", "locked"]),
+           worker_alpha=st.floats(1.05, 2.5),
+           server_mean=st.floats(0.05, 3.0))
+    @settings(max_examples=15, deadline=None)
+    def test_staleness_bound_property(bound, discipline, worker_alpha,
+                                      server_mean):
+        """Property form of the Assumption-3 guarantee under arbitrary
+        straggler profiles."""
+        timing = CostProfile(
+            t_worker=ParetoService(1.0, alpha=worker_alpha),
+            t_server_block=LognormalService(server_mean, 0.5))
+        res = _staleness_run(discipline, bound, timing, rounds=6)
+        assert res.metrics["max_served_tau"] <= bound
+        assert int(res.trace.delays.max()) <= bound
+except ImportError:                     # pragma: no cover - optional extra
+    pass
+
+
+# ---------------------------------------------------------------------------
+# trace recording / persistence / TraceDelay
+# ---------------------------------------------------------------------------
+
+def test_trace_save_load_roundtrip(tmp_path):
+    sess = _flat_session()
+    res = sess.run_ps(ROUNDS, timing=STRAGGLER)
+    path = res.trace.save(str(tmp_path / "trace"))
+    loaded = DelayTrace.load(path)
+    np.testing.assert_array_equal(loaded.delays, res.trace.delays)
+    assert loaded.bound == res.trace.bound
+    assert loaded.discipline == res.trace.discipline
+    assert loaded.meta["makespan"] == pytest.approx(res.makespan)
+    # TraceDelay.load reads the same file
+    dm = TraceDelay.load(path)
+    np.testing.assert_array_equal(dm.delays, res.trace.delays)
+
+
+def test_trace_delay_registered_and_samples():
+    assert DELAY_MODELS["trace"] is TraceDelay
+    delays = np.random.RandomState(0).randint(0, 3, (4, N, M))
+    dm = TraceDelay(delays)
+    assert dm.depth == int(delays.max()) + 1
+    for t in [0, 2, 3, 7]:                       # 7 clamps to final round
+        out = np.asarray(dm.sample(jax.random.PRNGKey(0), N, M, t=t))
+        np.testing.assert_array_equal(out, delays[min(t, 3)])
+    with pytest.raises(ValueError):
+        dm.sample(jax.random.PRNGKey(0), N, M)   # epoch counter required
+    with pytest.raises(ValueError):
+        dm.sample(jax.random.PRNGKey(0), N + 1, M, t=0)  # shape mismatch
+    with pytest.raises(ValueError):
+        TraceDelay(np.array([[1, 2], [3, 4]]))   # not (rounds, N, M)
+
+
+def test_incomplete_trace_rejected():
+    tr = DelayTrace.empty(3, N, M, bound=2)
+    with pytest.raises(ValueError):
+        tr.validate()
+    with pytest.raises(ValueError):
+        tr.to_delay_model()
+
+
+# ---------------------------------------------------------------------------
+# disciplines + scheduler + runtime surface
+# ---------------------------------------------------------------------------
+
+def test_locked_serializes_lockfree_does_not():
+    """Same deterministic coordination-bound config, only the lock
+    discipline differs: the full-vector lock's M-serial commit must
+    cost strictly more wall-clock (the paper's §1 claim, and what the
+    CI speedup gate measures at benchmark scale)."""
+    timing = CostProfile(t_worker=ConstantService(1.0),
+                         t_server_block=ConstantService(1.0))
+    spans = {}
+    for d in ("lockfree", "locked"):
+        sess = _flat_session()
+        rt = PSRuntime(sess.spec, discipline=d, timing=timing,
+                       compute="timing")
+        spans[d] = rt.run(8).makespan
+    assert spans["locked"] > spans["lockfree"] * 1.2
+
+
+def test_locked_pull_sees_uniform_version():
+    """Under the full-vector lock every block is the same version, so
+    each recorded delay row is constant across blocks."""
+    sess = _flat_session()
+    res = sess.run_ps(ROUNDS, discipline="locked", timing=STRAGGLER)
+    assert (res.trace.delays == res.trace.delays[:, :, :1]).all()
+
+
+def test_event_scheduler_deterministic_ties():
+    order = []
+    s = EventScheduler()
+    s.at(1.0, lambda: order.append("a"))
+    s.at(0.5, lambda: order.append("b"))
+    s.at(1.0, lambda: order.append("c"))
+    assert s.run() == 1.0
+    assert order == ["b", "a", "c"]
+    with pytest.raises(ValueError):
+        s.at(0.1, lambda: None)                  # scheduling in the past
+
+
+def test_runtime_rejects_bad_config():
+    sess = _flat_session()
+    with pytest.raises(ValueError):
+        PSRuntime(sess.spec, data=sess.data, discipline="quantum")
+    with pytest.raises(ValueError):
+        PSRuntime(sess.spec, data=sess.data, compute="psychic")
+    with pytest.raises(ValueError):              # real mode needs data
+        PSRuntime(_flat_session().spec)
+    with pytest.raises(ValueError):              # GS needs gradients
+        PSRuntime(_flat_session(cfg=_cfg("gauss_southwell")).spec,
+                  compute="timing")
+    rt = PSRuntime(sess.spec, data=sess.data)
+    with pytest.raises(ValueError):
+        rt.run(0)
+
+
+def test_timing_only_records_no_z():
+    sess = _flat_session()
+    rt = PSRuntime(sess.spec, compute="timing",
+                   timing=CostProfile(t_worker=ConstantService(1.0)))
+    res = rt.run(4)
+    assert res.z_versions is None and res.losses is None
+    assert res.z_final is None
+    assert res.trace.complete
+
+
+def test_record_z_false_prunes_but_matches():
+    """Long-training memory mode: record_z=False keeps only the live
+    staleness window of committed versions per block server, yet
+    z_final (user representation) matches the full-recording run."""
+    full = _flat_session().run_ps(ROUNDS, timing=STRAGGLER)
+    sess = _flat_session()
+    rt = PSRuntime(sess.spec, data=sess.data, timing=STRAGGLER,
+                   record_z=False)
+    res = rt.run(ROUNDS)
+    assert res.z_versions is None
+    np.testing.assert_array_equal(np.asarray(res.z_final),
+                                  np.asarray(full.z_final))
+    np.testing.assert_array_equal(res.trace.delays, full.trace.delays)
+    bound = sess.spec.delay_model.depth - 1
+    for dom in rt.domains:
+        for j in dom.block_ids:
+            assert len(dom.contents[j]) <= bound + 2
+
+
+def test_run_ps_deterministic():
+    """Same session, same timing -> identical trace and makespan."""
+    runs = [
+        _flat_session().run_ps(ROUNDS, timing=STRAGGLER) for _ in range(2)]
+    np.testing.assert_array_equal(runs[0].trace.delays,
+                                  runs[1].trace.delays)
+    assert runs[0].makespan == runs[1].makespan
+    np.testing.assert_array_equal(np.asarray(runs[0].z_final),
+                                  np.asarray(runs[1].z_final))
+
+
+# ---------------------------------------------------------------------------
+# SPMD replay (runs under scripts/ci.sh's forced-8-device step)
+# ---------------------------------------------------------------------------
+
+needs8 = pytest.mark.skipif(
+    jax.device_count() < 8,
+    reason="needs XLA_FLAGS=--xla_force_host_platform_device_count=8 "
+           "(scripts/ci.sh runs this file's spmd tests under it)")
+
+
+@needs8
+def test_spmd_trace_replay():
+    """A runtime-recorded trace replays through the SPMD-sharded epoch:
+    the mesh run's z trajectory matches the runtime's at the SPMD
+    parity suite's tolerance (the worker reduction's psum changes float
+    order — same contract as tests/test_spmd_parity.py)."""
+    from repro.launch.mesh import make_test_mesh
+
+    N8, M8 = 4, 8
+    dim = M8 * DBLK
+    centers = jnp.asarray(
+        np.random.RandomState(5).randn(N8, dim).astype(np.float32))
+    cfg = ADMMConfig(rho=2.0, gamma=0.1, max_delay=2, block_fraction=0.5,
+                     num_blocks=M8, l1_coef=1e-3, clip=0.8, seed=0)
+
+    def make(dm=None, mesh=None):
+        return ConsensusSession.flat(_flat_loss, centers, dim=dim, cfg=cfg,
+                                     delay_model=dm, mesh=mesh,
+                                     backend="pallas")
+    res = make().run_ps(ROUNDS, timing=STRAGGLER)
+    sess = make(dm=res.to_delay_model(), mesh=make_test_mesh(8))
+    state = sess.init()
+    step = sess.step_fn()
+    for t in range(ROUNDS):
+        state, _ = step(state, centers)
+        np.testing.assert_allclose(
+            np.asarray(jax.device_get(sess.z(state))),
+            np.asarray(res.z_versions[t + 1]), rtol=1e-5, atol=1e-5,
+            err_msg=f"SPMD replay diverged at round {t}")
