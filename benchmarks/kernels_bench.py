@@ -143,6 +143,58 @@ def _abstract_mesh():
     return AbstractMesh((("data", MESH_SHAPE[0]), ("model", MESH_SHAPE[1])))
 
 
+def _tree_spec(backend, N, M, dblk, mesh=None):
+    """A ragged pytree spec at the same packed scale as the flat case:
+    block j packs two leaves (dblk-128, 128), the last block only one —
+    real padding in the packed (M, dblk) table, exercising the
+    BlockLayout lowering end to end (shapes only; nothing allocated)."""
+    from repro.core.blocks import TreeBlocks, make_block_layout
+    from repro.core.space import TreeSpace, make_spec
+
+    params = {f"w{j:03d}a": jax.ShapeDtypeStruct((dblk - 128,), jnp.float32)
+              for j in range(M)}
+    params.update({f"w{j:03d}b": jax.ShapeDtypeStruct((128,), jnp.float32)
+                   for j in range(M - 1)})
+    names = sorted(params)                    # == jax dict flatten order
+    tblocks = TreeBlocks(num_blocks=M,
+                         leaf_block_ids=tuple(int(n[1:4]) for n in names),
+                         treedef=jax.tree.structure(params))
+    space = TreeSpace(blocks=tblocks, num_workers=N,
+                      layout=make_block_layout(params, tblocks))
+    dim = sum(int(np.prod(params[n].shape)) for n in names)
+    cfg = ADMMConfig(rho=2.0, gamma=0.1, max_delay=1, block_fraction=0.5,
+                     num_blocks=M, l1_coef=1e-3, clip=1.0, backend=backend)
+
+    def tree_loss(p, c):
+        z = jnp.concatenate([p[n] for n in names])
+        return 0.5 * jnp.sum(jnp.square(z - c))
+
+    spec = make_spec(space, cfg, tree_loss, backend=backend, mesh=mesh)
+    data = jax.ShapeDtypeStruct((N, dim), jnp.float32)
+    return spec, params, data
+
+
+def _tree_epoch_cost(backend, N, M, dblk):
+    """HLO cost of one TreeSpace asybadmm_epoch (packed layout)."""
+    spec, params, data = _tree_spec(backend, N, M, dblk)
+    state = jax.eval_shape(lambda p: init_consensus_state(spec, p), params)
+    hlo = (jax.jit(lambda s, b: asybadmm_epoch(spec, s, b))
+           .lower(state, data)
+           .compiler_ir(dialect="hlo").as_hlo_text())
+    return analyze_hlo(hlo)
+
+
+def _tree_shard_epoch_cost(N, M, dblk):
+    """HLO cost of ONE shard of the TreeSpace SPMD epoch — native block
+    servers over `model` since the packed-layout lowering."""
+    spec, params, data = _tree_spec("pallas_stub", N, M, dblk,
+                                    mesh=_abstract_mesh())
+    fn, args = per_shard_cost_program(spec, data, z0=params)
+    hlo = (jax.jit(fn).lower(*args)
+           .compiler_ir(dialect="hlo").as_hlo_text())
+    return analyze_hlo(hlo)
+
+
 def _epoch_cost(backend, N, M, dblk):
     """HLO cost of one asybadmm_epoch, lowered abstractly (no real
     arrays — works at full kddA scale)."""
@@ -172,8 +224,11 @@ def measure_cases(emit):
         jnp_cost = _epoch_cost("jnp", N, M, dblk)
         pl_cost = _epoch_cost("pallas_stub", N, M, dblk)
         sh_cost = _shard_epoch_cost(N, M, dblk)
+        tr_cost = _tree_epoch_cost("pallas_stub", N, M, dblk)
+        tr_sh_cost = _tree_shard_epoch_cost(N, M, dblk)
         saving = 1.0 - pl_cost.hbm_bytes / jnp_cost.hbm_bytes
         shard_frac = sh_cost.hbm_bytes / pl_cost.hbm_bytes
+        tree_shard_frac = tr_sh_cost.hbm_bytes / tr_cost.hbm_bytes
         rec = {
             "name": name, "N": N, "M": M, "dblk": dblk, "dim": M * dblk,
             "jnp": {"hbm_bytes": int(jnp_cost.hbm_bytes),
@@ -190,6 +245,20 @@ def measure_cases(emit):
                 "shard_bytes_frac": shard_frac,
                 "ideal_frac": 1.0 / shards,
             },
+            # tree space, packed-layout lowering: the ragged pytree's
+            # epoch + ONE shard of its SPMD epoch (native block servers
+            # over model — flipped from the old replicated-z fallback)
+            "tree_pallas": {"hbm_bytes": int(tr_cost.hbm_bytes),
+                            "flops": int(tr_cost.flops),
+                            "v5e_us": tr_cost.hbm_bytes / HBM_BW * 1e6},
+            "tree_pallas_sharded": {
+                "hbm_bytes_per_shard": int(tr_sh_cost.hbm_bytes),
+                "flops_per_shard": int(tr_sh_cost.flops),
+                "v5e_us": tr_sh_cost.hbm_bytes / HBM_BW * 1e6,
+                "mesh": f"data={MESH_SHAPE[0]},model={MESH_SHAPE[1]}",
+                "shard_bytes_frac": tree_shard_frac,
+                "ideal_frac": 1.0 / shards,
+            },
             "bytes_saving_frac": saving,
         }
         out.append(rec)
@@ -199,6 +268,10 @@ def measure_cases(emit):
         emit(f"epoch_{name}_shard_d{MESH_SHAPE[0]}m{MESH_SHAPE[1]},"
              f"{rec['pallas_sharded']['v5e_us']:.1f},"
              f"shard_bytes_frac={shard_frac:.3f};ideal={1.0/shards:.3f}")
+        emit(f"epoch_{name}_tree_shard_d{MESH_SHAPE[0]}m{MESH_SHAPE[1]},"
+             f"{rec['tree_pallas_sharded']['v5e_us']:.1f},"
+             f"tree_shard_bytes_frac={tree_shard_frac:.3f};"
+             f"ideal={1.0/shards:.3f}")
     return out
 
 
@@ -316,6 +389,18 @@ def main(emit=print, smoke: bool = False) -> None:
                 f"kdda_like: per-shard bytes frac {frac:.3f} > "
                 f"{max_shard_frac} (ideal 1/{MESH_SHAPE[0] * MESH_SHAPE[1]}"
                 f" = {1.0 / (MESH_SHAPE[0] * MESH_SHAPE[1]):.3f})")
+        # tree gate: the packed-layout lowering must keep TreeSpace's
+        # per-shard bytes shrinking like the flat block servers (no
+        # regression back toward the old replicated-z fallback, whose
+        # state path would not shrink over model at all)
+        max_tree_frac = baseline["max_tree_shard_bytes_frac"]
+        tfrac = kdda["tree_pallas_sharded"]["shard_bytes_frac"]
+        if tfrac > max_tree_frac:
+            failures.append(
+                f"kdda_like: TREE per-shard bytes frac {tfrac:.3f} > "
+                f"{max_tree_frac} (ideal "
+                f"1/{MESH_SHAPE[0] * MESH_SHAPE[1]} = "
+                f"{1.0 / (MESH_SHAPE[0] * MESH_SHAPE[1]):.3f})")
     OUT_JSON.write_text(json.dumps(report, indent=2) + "\n")
     emit(f"bench_json,0,written={OUT_JSON.name}")
     if failures:

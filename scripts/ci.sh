@@ -13,8 +13,11 @@ fi
 
 # kernel benchmark smoke: numeric pallas<->jnp parity + NaN check,
 # fused-epoch HBM-byte regression gate, and the per-shard byte-shrink
-# gate of the SPMD epoch, all vs benchmarks/kernels_baseline.json
-# (the bench forces 8 host devices itself for the sharded wall-clock)
+# gates of the SPMD epoch — flat (max_shard_bytes_frac) AND tree
+# (max_tree_shard_bytes_frac: the packed BlockLayout lowering must keep
+# TreeSpace block servers sharding over model) — all vs
+# benchmarks/kernels_baseline.json (the bench forces 8 host devices
+# itself for the sharded wall-clock)
 echo "[ci] kernels bench (smoke)"
 env PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" \
     python benchmarks/kernels_bench.py --smoke
@@ -31,12 +34,14 @@ env PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" \
 # SPMD parity smoke: the sharded epoch needs an 8-host-device mesh, so
 # the parity suite runs in its own process with the device count forced
 # (inside the main tier-1 run below it skips) — single-device-only
-# regressions of the mesh path cannot land
-echo "[ci] SPMD parity (8 host devices, data=4 x model=2)"
+# regressions of the mesh path cannot land. This includes the TREE
+# cells (test_tree_spmd_parity): pytree z_hist/prox natively sharded
+# over model via the packed BlockLayout, no replicated-z fallback.
+echo "[ci] SPMD parity, flat + tree cells (8 host devices, data=4 x model=2)"
 env PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" \
     XLA_FLAGS="--xla_force_host_platform_device_count=8" \
     python -m pytest -x -q tests/test_spmd_parity.py
-echo "[ci] PS-trace -> SPMD-epoch replay parity (8 host devices)"
+echo "[ci] PS-trace -> SPMD-epoch replay parity, flat + tree (8 host devices)"
 env PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" \
     XLA_FLAGS="--xla_force_host_platform_device_count=8" \
     python -m pytest -x -q tests/test_ps_runtime.py -k spmd

@@ -36,7 +36,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from .configs.base import ADMMConfig
-from .core.blocks import TreeBlocks, make_tree_blocks
+from .core.blocks import TreeBlocks, make_block_layout, make_tree_blocks
 from .core.consensus import ConsensusProblem, make_problem
 from .core.metrics import kkt_violations, stationarity
 from .core.space import (ConsensusSpec, ConsensusState, TreeSpace,
@@ -113,11 +113,14 @@ class ConsensusSession:
         per-worker batches stream in through ``step``/``run``.
         ``backend`` (jnp | pallas | auto) overrides ``cfg.backend``;
         ``mesh`` overrides ``cfg.mesh`` (SPMD epoch: workers over the
-        ``data`` axes; z replicated over ``model`` in pytree mode)."""
+        ``data`` axes, packed block servers over ``model`` — pytree
+        mode shards z natively since the BlockLayout lowering; see
+        API.md's support matrix)."""
         cfg = cfg if cfg is not None else ADMMConfig()
         if blocks is None:
             blocks = make_tree_blocks(params, cfg.num_blocks)
-        space = TreeSpace(blocks=blocks, num_workers=num_workers)
+        space = TreeSpace(blocks=blocks, num_workers=num_workers,
+                          layout=make_block_layout(params, blocks))
         spec = make_spec(space, cfg, loss_fn, edge=edge, rho_scale=rho_scale,
                          selector=selector, delay_model=delay_model,
                          track_x=False, backend=backend, mesh=mesh)

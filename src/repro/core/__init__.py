@@ -1,5 +1,6 @@
 from .admm import server_update, theorem1_feasible, worker_update
-from .blocks import (FlatBlocks, TreeBlocks, edge_set_from_support,
+from .blocks import (BlockLayout, FlatBlocks, TreeBlocks,
+                     edge_set_from_support, make_block_layout,
                      make_flat_blocks, make_tree_blocks)
 from .consensus import (AsyBADMMState, ConsensusProblem, asybadmm_step,
                         init_state, make_problem, make_step_fn, run)

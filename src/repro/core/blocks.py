@@ -1,6 +1,6 @@
 """Block partitioning for general form consensus (paper §2.2).
 
-Two representations:
+Two user-facing representations, ONE canonical packed layout underneath:
 
 * **Flat mode** (the paper's own workloads — sparse logistic regression):
   the decision variable is a flat vector of dim ``d`` padded and reshaped
@@ -9,8 +9,20 @@ Two representations:
 
 * **Pytree mode** (transformer consensus training): every parameter leaf
   is assigned to one of M logical blocks, balanced by parameter count
-  (greedy LPT). Per-block masks are realized as per-leaf scalar 0/1
-  multipliers so masked updates stay fully vectorized under jit.
+  (greedy LPT, :class:`TreeBlocks`). Since the packed-layout refactor
+  the pytree is *lowered* onto the same ``(M, dblk)`` block table flat
+  mode uses: :class:`BlockLayout` packs each block's leaves into one
+  padded row (bitwise round-trip, zero padding), so the kernels, the
+  SPMD block servers and the PS lock domains all see a single
+  representation — the scatter/partition structure, not the user-facing
+  parameter shape (Hong et al. 1412.6058; Chang et al. 1509.02597).
+
+**Block-id contract**: block j of a :class:`BlockLayout` is row j of the
+packed table, in ``TreeBlocks.leaf_block_ids`` order. Every layer keys
+off these ids — selection masks and edge sets index columns j, the SPMD
+``model`` axis shards rows j, and the PS runtime's lock domains group
+ids j (``repro.ps.server.DISCIPLINES``) — so a block id means the same
+server in every execution mode.
 """
 from __future__ import annotations
 
@@ -101,3 +113,139 @@ def make_tree_blocks(tree, num_blocks: int) -> TreeBlocks:
         load[j] += sizes[int(li)]
     return TreeBlocks(num_blocks=num_blocks, leaf_block_ids=tuple(ids),
                       treedef=treedef)
+
+
+# --------------------------------------------------------------------------
+# the canonical packed block layout (pytree -> (M, dblk) block table)
+# --------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class BlockLayout:
+    """Packed block layout: a params pytree lowered onto the flat-mode
+    ``(M, dblk)`` block table.
+
+    Built ONCE per (tree structure, block assignment) by
+    :func:`make_block_layout`. Block j's leaves are raveled and
+    concatenated (in leaf order) into row j; rows are zero-padded to
+    ``block_dim`` = the largest packed block. ``to_blocks``/
+    ``from_blocks`` mirror :class:`FlatBlocks` — leading batch axes
+    (worker N, ring depth D+1) pass through — and round-trip bitwise:
+    arithmetic happens in ``dtype`` (float32), every leaf dtype that
+    embeds losslessly in it (f32/bf16/f16) casts there and back exactly.
+
+    The padding lanes of a row are *structurally inert*: every epoch op
+    is lane-local (elementwise updates, worker-axis reductions,
+    separable prox), so pad lanes never mix into real coordinates, and
+    ``from_blocks`` never reads them. Gradients are packed with
+    explicit zero padding, so lane-reductions (``grad_sqnorm``) are
+    exact too — pinned by tests/test_block_layout.py.
+
+    Block ids are the stable contract shared by every layer (see module
+    docstring): the SPMD ``model`` axis shards rows j and the PS
+    runtime's lock domains group ids j.
+    """
+    tree: TreeBlocks
+    leaf_shapes: Tuple[Tuple[int, ...], ...]
+    leaf_dtypes: Tuple[str, ...]          # dtype names (hashable/comparable)
+    leaf_offsets: Tuple[int, ...]         # per leaf: offset within its row
+    block_leaves: Tuple[Tuple[int, ...], ...]  # per block: leaf idx, pack order
+    block_sizes: Tuple[int, ...]          # per block: packed (pad-free) size
+    block_dim: int                        # dblk (max packed block size)
+    dtype: str = "float32"                # packed compute dtype
+
+    @property
+    def num_blocks(self) -> int:
+        return self.tree.num_blocks
+
+    @property
+    def block_ids(self) -> Tuple[int, ...]:
+        """Per-leaf block assignment — THE block-id contract."""
+        return self.tree.leaf_block_ids
+
+    def padding_mask(self) -> np.ndarray:
+        """(M, dblk) bool — True on real coordinates, False on padding."""
+        mask = np.zeros((self.num_blocks, self.block_dim), bool)
+        for j, used in enumerate(self.block_sizes):
+            mask[j, :used] = True
+        return mask
+
+    def _lead(self, leaves) -> Tuple[int, ...]:
+        lead = leaves[0].ndim - len(self.leaf_shapes[0])
+        batch = tuple(leaves[0].shape[:lead])
+        for k, leaf in enumerate(leaves):
+            if tuple(leaf.shape) != batch + self.leaf_shapes[k]:
+                raise ValueError(
+                    f"leaf {k} has shape {leaf.shape}; expected batch "
+                    f"{batch} + {self.leaf_shapes[k]} (layout built for a "
+                    f"different tree?)")
+        return batch
+
+    def to_blocks(self, tree_val):
+        """Pack a pytree (leaves ``batch + leaf_shape``) into the block
+        table ``batch + (M, dblk)`` in the packed compute dtype."""
+        leaves, treedef = jax.tree.flatten(tree_val)
+        if treedef != self.tree.treedef:
+            raise ValueError(f"tree structure {treedef} does not match the "
+                             f"layout's {self.tree.treedef}")
+        batch = self._lead(leaves)
+        dt = jnp.dtype(self.dtype)
+        rows = []
+        for j, kidx in enumerate(self.block_leaves):
+            parts = [leaves[k].astype(dt).reshape(batch + (-1,))
+                     for k in kidx]
+            used = self.block_sizes[j]
+            if used < self.block_dim:
+                parts.append(jnp.zeros(batch + (self.block_dim - used,), dt))
+            rows.append(parts[0] if len(parts) == 1
+                        else jnp.concatenate(parts, axis=-1))
+        return jnp.stack(rows, axis=-2)
+
+    def from_blocks(self, arr):
+        """Unpack a block table ``batch + (M, dblk)`` back to the pytree
+        (leaves cast back to their stored dtypes; padding dropped)."""
+        batch = tuple(arr.shape[:-2])
+        leaves = []
+        for k, (shape, dt) in enumerate(zip(self.leaf_shapes,
+                                            self.leaf_dtypes)):
+            size = int(np.prod(shape, dtype=np.int64))
+            row = arr[..., self.block_ids[k], :]
+            flat = jax.lax.slice_in_dim(row, self.leaf_offsets[k],
+                                        self.leaf_offsets[k] + size, axis=-1)
+            leaves.append(flat.reshape(batch + shape).astype(dt))
+        return jax.tree.unflatten(self.tree.treedef, leaves)
+
+
+def make_block_layout(tree, blocks: TreeBlocks = None, *,
+                      num_blocks: int = None, dtype="float32") -> BlockLayout:
+    """Build the packed layout for ``tree`` (arrays or ShapeDtypeStructs;
+    only shapes/dtypes are read). ``blocks`` defaults to the LPT
+    assignment of :func:`make_tree_blocks` over ``num_blocks``."""
+    leaves, treedef = jax.tree.flatten(tree)
+    if not leaves:
+        raise ValueError("cannot build a BlockLayout for an empty pytree")
+    if blocks is None:
+        blocks = make_tree_blocks(tree, num_blocks)
+    if treedef != blocks.treedef:
+        raise ValueError(f"tree structure {treedef} does not match the "
+                         f"TreeBlocks' {blocks.treedef}")
+    sizes = [int(np.prod(l.shape, dtype=np.int64)) for l in leaves]
+    block_leaves = tuple(
+        tuple(k for k, b in enumerate(blocks.leaf_block_ids) if b == j)
+        for j in range(blocks.num_blocks))
+    offsets = [0] * len(leaves)
+    block_sizes = []
+    for kidx in block_leaves:
+        off = 0
+        for k in kidx:
+            offsets[k] = off
+            off += sizes[k]
+        block_sizes.append(off)
+    return BlockLayout(
+        tree=blocks,
+        leaf_shapes=tuple(tuple(l.shape) for l in leaves),
+        leaf_dtypes=tuple(np.dtype(l.dtype).name for l in leaves),
+        leaf_offsets=tuple(offsets),
+        block_leaves=block_leaves,
+        block_sizes=tuple(block_sizes),
+        block_dim=max(1, max(block_sizes)),
+        dtype=np.dtype(dtype).name)

@@ -4,12 +4,13 @@ The paper's Parameter-Server picture maps onto the pod directly:
 
   worker i       = a shard of the ``data`` mesh axes — its duals ``y``,
                    stale-w cache and primal ``x`` live with its data;
-  block server j = a shard of the ``model`` axis. FlatSpace splits the
-                   (M, dblk) block table over ``model`` (z_hist, prox
-                   and the server kernel all run on local (M/model,
-                   dblk) tiles); TreeSpace assigns whole leaves to
-                   blocks, so z is replicated over ``model`` instead
-                   (documented fallback — see API.md);
+  block server j = a shard of the ``model`` axis. BOTH spaces split the
+                   canonical packed (M, dblk) block table over ``model``
+                   (z_hist, prox and the server kernel all run on local
+                   (M/model, dblk) tiles) — TreeSpace lowers its leaves
+                   onto that table via ``core.blocks.BlockLayout``, so
+                   pytree consensus gets native block servers too (the
+                   old replicated-z fallback is gone);
   push w_ij      = a partial edge-masked reduce over the *local*
                    workers followed by ONE ``psum`` over ``data`` that
                    lands directly in each block server's local shard —
@@ -51,17 +52,14 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 
 from ..launch.mesh import data_axes, model_axis_size, num_workers
 from .async_sim import minibatch_rows, validate_minibatch_data
-from .space import (ConsensusSpec, ConsensusState, FlatSpace,
-                    SelectorContext, epoch_keys, sample_delay_model)
-
-
-def _is_flat(space) -> bool:
-    return isinstance(space, FlatSpace)
+from .space import (ConsensusSpec, ConsensusState, SelectorContext,
+                    epoch_keys, sample_delay_model)
 
 
 def _splits_model(space) -> bool:
-    """Does this space shard its block axis over ``model``?"""
-    return _is_flat(space) and model_axis_size(space.mesh) > 1
+    """Does this space shard its block axis over ``model``? Since the
+    packed-layout refactor both spaces do, whenever the axis exists."""
+    return model_axis_size(space.mesh) > 1
 
 
 def validate_space_mesh(space) -> None:
@@ -82,10 +80,10 @@ def validate_space_mesh(space) -> None:
         msize = model_axis_size(mesh)
         if space.num_blocks % msize != 0:
             raise ValueError(
-                f"FlatSpace num_blocks={space.num_blocks} must divide over "
+                f"num_blocks={space.num_blocks} must divide over "
                 f"model={msize} block-server shards; choose num_blocks as "
-                f"a multiple of the model axis (TreeSpace instead "
-                f"replicates z over model and has no such constraint)")
+                f"a multiple of the model axis (both spaces shard the "
+                f"packed (M, dblk) block table over model)")
 
 
 # ---------------------------------------------------------------------------
@@ -230,8 +228,8 @@ def _epoch_body(spec: ConsensusSpec, space_l, coll, Nl: int, Ml: int,
             data = jax.tree.map(
                 lambda a: a[jnp.arange(Nl)[:, None], idx_l], data)
 
-    # --- grads need every block of z~ for the local workers: gather the
-    #     block shards back (FlatSpace only; TreeSpace z is whole) ---
+    # --- grads need every block of z~ for the local workers (the loss
+    #     reads the whole variable): gather the block shards back ---
     z_tilde_full = (coll.all_gather_model(z_tilde, axis=1)
                     if split_model else z_tilde)
     losses, g = space_l.worker_grads(spec.loss_fn, z_tilde_full, data)
@@ -305,13 +303,15 @@ def sharded_epoch(spec: ConsensusSpec, state: ConsensusState, data
     return fn(state, data, spec.edge, spec.rho_vec)
 
 
-def per_shard_cost_program(spec: ConsensusSpec, data):
+def per_shard_cost_program(spec: ConsensusSpec, data, z0=None):
     """(fn, example_args) lowering ONE shard of the sharded epoch on a
     single (possibly absent) device: collectives are replaced by the
     shape-faithful :class:`_SimCollectives` and all inputs are shrunk to
     their local tile per :func:`consensus_state_specs`. Used by
     benchmarks/kernels_bench.py to measure per-shard HBM bytes — the
-    mesh may be an ``AbstractMesh``, nothing is executed."""
+    mesh may be an ``AbstractMesh``, nothing is executed. ``z0`` (shape
+    structs suffice) is required for TreeSpace, which has no default
+    initial value."""
     from .space import init_consensus_state
     space = spec.space
     mesh = space.mesh
@@ -321,7 +321,10 @@ def per_shard_cost_program(spec: ConsensusSpec, data):
                            model_axis_size(mesh) if _splits_model(space)
                            else 1)
 
-    state = jax.eval_shape(lambda: init_consensus_state(spec))
+    if z0 is None:
+        state = jax.eval_shape(lambda: init_consensus_state(spec))
+    else:
+        state = jax.eval_shape(lambda p: init_consensus_state(spec, p), z0)
     sspecs = consensus_state_specs(spec, state)
 
     def shrink(sds, pspec):

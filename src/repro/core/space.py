@@ -11,7 +11,10 @@ implementations:
   sparse logistic regression, eq. 22);
 * ``TreeSpace``  — the decision variable is a params pytree, leaves
   assigned to logical blocks by :class:`~repro.core.blocks.TreeBlocks`
-  (consensus training of transformers).
+  and *lowered* onto the same packed (M, dblk) block table via
+  :class:`~repro.core.blocks.BlockLayout` (consensus training of
+  transformers). Both spaces share one block-server code path
+  (:class:`_PackedOps`); only the user-representation codec differs.
 
 On top of the space sit two pluggable policies:
 
@@ -46,9 +49,10 @@ Each space also optionally carries a **mesh** (``mesh=`` on
 ``ADMMConfig`` / ``ConsensusSession`` / :func:`make_spec`): when set,
 ``asybadmm_epoch`` dispatches to the SPMD-sharded implementation in
 ``core/sharded.py`` — worker state sharded over the ``data`` axes,
-FlatSpace block servers sharded over ``model``, the paper's w push
-lowered to a ``psum`` that lands in each block server's local shard.
-See ``core/sharded.py`` and API.md's support matrix.
+block servers (both spaces — the packed (M, dblk) table) sharded over
+``model``, the paper's w push lowered to a ``psum`` that lands in each
+block server's local shard. See ``core/sharded.py`` and API.md's
+support matrix.
 """
 from __future__ import annotations
 
@@ -351,24 +355,31 @@ class VariableSpace(Protocol):
     def worker_leaves(self, bundle: Any) -> list: ...
 
 
-@dataclasses.dataclass(frozen=True)
-class FlatSpace:
-    """Flat-vector consensus: z is (M, dblk) blocks of a padded vector;
-    worker bundles are (N, M, dblk) arrays — the Pallas kernels' native
-    layout, so the ``pallas`` backend dispatches without reshapes.
+class _PackedOps:
+    """Shared mechanics of the canonical packed block representation.
+
+    Both spaces lower onto the SAME layout: z is an (M, dblk) block
+    table, worker bundles are (N, M, dblk) arrays — the Pallas kernels'
+    native shape, so the ``pallas`` backend dispatches without reshapes,
+    the SPMD epoch shards (N, M) over (data, model), and the PS runtime
+    splits block servers on rows. Subclasses supply the *packer* (the
+    user-representation codec: :class:`~repro.core.blocks.FlatBlocks`
+    for flat vectors, :class:`~repro.core.blocks.BlockLayout` for params
+    pytrees) plus ``init_repr``; everything else — history, gather,
+    worker/server updates, kernel dispatch — lives here once.
 
     With ``mesh`` set the epoch runs SPMD: worker bundles shard
     ``(data, model)`` over their leading (N, M) axes, z_hist shards
     ``model`` over M — the kernels then see local (N/data, M/model,
     dblk) tiles (see core/sharded.py)."""
-    blocks: FlatBlocks
-    num_workers: int
-    backend: str = "jnp"
-    mesh: Any = None
+
+    @property
+    def packer(self):
+        return self.blocks
 
     @property
     def num_blocks(self) -> int:
-        return self.blocks.num_blocks
+        return self.packer.num_blocks
 
     def _use_kernels(self) -> bool:
         return self.backend != "jnp"
@@ -377,13 +388,8 @@ class FlatSpace:
         return self.backend == "pallas_stub"
 
     # ---- representation -------------------------------------------------
-    def init_repr(self, z0):
-        if z0 is None:
-            return jnp.zeros((self.blocks.num_blocks, self.blocks.block_dim))
-        return self.blocks.to_blocks(z0)
-
     def to_user(self, z):
-        return self.blocks.from_blocks(z)
+        return self.packer.from_blocks(z)
 
     # ---- history --------------------------------------------------------
     def init_history(self, z0, depth):
@@ -403,10 +409,10 @@ class FlatSpace:
         data = subsample_worker_data(rng, data, minibatch)
 
         def vg(zb, di):
-            zv = self.blocks.from_blocks(zb)
+            zv = self.packer.from_blocks(zb)
             return jax.value_and_grad(loss_fn)(zv, di)
         losses, g = jax.vmap(vg)(z_tilde, data)
-        return losses, self.blocks.to_blocks(g)
+        return losses, self.packer.to_blocks(g)
 
     def grad_sqnorm(self, g):
         return jnp.sum(jnp.square(g), axis=-1)
@@ -473,185 +479,64 @@ class FlatSpace:
 
 
 @dataclasses.dataclass(frozen=True)
-class TreeSpace:
-    """Pytree consensus: z is a params pytree; worker bundles are pytrees
-    whose leaves carry a leading worker axis N. Block j is the set of
-    leaves with ``leaf_block_ids[k] == j``. Arithmetic runs in float32
-    and is stored back in each leaf's dtype (bf16-safe under dryrun).
-
-    The ``pallas`` backend routes each leaf through the batched kernels
-    as an (N, 1, leaf_size) view — block masks become the single-row
-    select mask, so the same fused ops serve both spaces.
-
-    With ``mesh`` set the epoch runs SPMD with the worker axis of every
-    bundle leaf sharded over the ``data`` axes; whole leaves cannot be
-    split across block servers, so z stays replicated over ``model``
-    (documented fallback — see API.md's support matrix)."""
-    blocks: TreeBlocks
+class FlatSpace(_PackedOps):
+    """Flat-vector consensus: z is (M, dblk) blocks of a padded vector
+    (:class:`~repro.core.blocks.FlatBlocks`); worker bundles are
+    (N, M, dblk) arrays. All mechanics come from :class:`_PackedOps`."""
+    blocks: FlatBlocks
     num_workers: int
     backend: str = "jnp"
     mesh: Any = None
 
+    def init_repr(self, z0):
+        if z0 is None:
+            return jnp.zeros((self.blocks.num_blocks, self.blocks.block_dim))
+        return self.blocks.to_blocks(z0)
+
+
+@dataclasses.dataclass(frozen=True)
+class TreeSpace(_PackedOps):
+    """Pytree consensus, LOWERED onto the packed block layout: z is the
+    same (M, dblk) block table flat mode uses, built by packing block
+    j's leaves into row j (:class:`~repro.core.blocks.BlockLayout`,
+    zero-padded, bitwise round-trip). Worker bundles are (N, M, dblk)
+    arrays; arithmetic runs in the layout's float32 compute dtype and
+    leaves cast back to their stored dtype at ``to_user`` (bf16-safe
+    under dryrun). Packing touches only the epoch's boundary (the z~
+    unpack / gradient repack inside ``worker_grads``) — the hot path,
+    kernels, SPMD sharding, and PS block servers all see the packed
+    table, identical to ``FlatSpace``.
+
+    Consequences (vs the pre-layout per-leaf fork):
+
+    * the ``pallas`` backend runs the batched (N, M, dblk) kernels
+      natively — no per-leaf (N, 1, leaf) views;
+    * with ``mesh`` set, z_hist + prox shard over ``model`` exactly like
+      flat block servers (no replicated-z fallback);
+    * ``Regularizer.fusable`` is honored once per spec (the shared
+      server path), not re-decided per leaf;
+    * the PS runtime's lock domains key off the layout's block ids for
+      both spaces.
+    """
+    blocks: TreeBlocks
+    num_workers: int
+    backend: str = "jnp"
+    mesh: Any = None
+    layout: Any = None                    # BlockLayout (required to run)
+
     @property
-    def num_blocks(self) -> int:
-        return self.blocks.num_blocks
+    def packer(self):
+        if self.layout is None:
+            raise ValueError(
+                "TreeSpace needs its packed BlockLayout; build the space "
+                "via ConsensusSession.pytree / ADMMTrainer, or pass "
+                "layout=make_block_layout(params, blocks)")
+        return self.layout
 
-    def _use_kernels(self) -> bool:
-        return self.backend != "jnp"
-
-    def _stub(self) -> bool:
-        return self.backend == "pallas_stub"
-
-    def _bid_tree(self):
-        return self.blocks.block_id_tree()
-
-    def _wshape(self, leaf):
-        return (self.num_workers,) + (1,) * (leaf.ndim - 1)
-
-    # ---- representation -------------------------------------------------
     def init_repr(self, z0):
         if z0 is None:
             raise ValueError("TreeSpace needs an initial params pytree")
-        return z0
-
-    def to_user(self, z):
-        return z
-
-    # ---- history --------------------------------------------------------
-    def init_history(self, z0, depth):
-        return jax.tree.map(
-            lambda p: jnp.broadcast_to(p, (depth,) + p.shape).copy(), z0)
-
-    def current(self, z_hist):
-        return jax.tree.map(lambda a: a[0], z_hist)
-
-    def push(self, z_hist, z_new):
-        return jax.tree.map(push_history, z_hist, z_new)
-
-    def gather(self, z_hist, delays):
-        return jax.tree.map(lambda zh, bid: zh[delays[:, bid]],
-                            z_hist, self._bid_tree())
-
-    # ---- worker side ----------------------------------------------------
-    def worker_grads(self, loss_fn, z_tilde, data, minibatch=None, rng=None):
-        data = subsample_worker_data(rng, data, minibatch)
-        return jax.vmap(jax.value_and_grad(loss_fn))(z_tilde, data)
-
-    def grad_sqnorm(self, g):
-        out = jnp.zeros((self.num_workers, self.num_blocks), jnp.float32)
-        for leaf, bid in zip(jax.tree.leaves(g), self.blocks.leaf_block_ids):
-            sq = jnp.sum(jnp.square(leaf.astype(jnp.float32)),
-                         axis=tuple(range(1, leaf.ndim)))
-            out = out.at[:, bid].add(sq)
-        return out
-
-    def worker_update(self, g, y, z_tilde, rho_vec):
-        rho32 = rho_vec.astype(jnp.float32)
-
-        def upd(g_l, y_l, zt_l):
-            rho = rho32.reshape(self._wshape(g_l))
-            return worker_update(g_l.astype(jnp.float32),
-                                 y_l.astype(jnp.float32),
-                                 zt_l.astype(jnp.float32), rho)
-        out = jax.tree.map(upd, g, y, z_tilde)
-        leaf = lambda t: isinstance(t, tuple)
-        return tuple(jax.tree.map(lambda t, i=i: t[i], out, is_leaf=leaf)
-                     for i in range(3))
-
-    def select(self, sel, new, old):
-        def f(n_l, o_l, bid):
-            m = sel[:, bid].reshape(self._wshape(o_l))
-            return jnp.where(m, n_l, o_l).astype(o_l.dtype)
-        return jax.tree.map(f, new, old, self._bid_tree())
-
-    def worker_select_update(self, g, y, z_tilde, w_cache, x, sel, rho_vec,
-                             track_x):
-        if not self._use_kernels():
-            x_new, y_new, w_new = self.worker_update(g, y, z_tilde, rho_vec)
-            return (self.select(sel, y_new, y),
-                    self.select(sel, w_new, w_cache),
-                    self.select(sel, x_new, x) if track_x else x)
-        N = self.num_workers
-        rho32 = rho_vec.astype(jnp.float32)
-        stub = self._stub()
-        to3 = lambda a: a.astype(jnp.float32).reshape(N, 1, -1)
-        back = lambda o, like: o.reshape(like.shape).astype(like.dtype)
-
-        def upd(g_l, y_l, zt_l, w_l, *rest):
-            (x_l, bid) = rest if track_x else (None, rest[0])
-            out = kernel_ops.admm_worker_select_update(
-                to3(g_l), to3(y_l), to3(zt_l), to3(w_l), sel[:, bid][:, None],
-                rho32, None if x_l is None else to3(x_l),
-                boundary_stub=stub)
-            outs = (back(out[0], y_l), back(out[1], w_l))
-            return outs + ((back(out[2], x_l),) if track_x else ())
-
-        args = (g, y, z_tilde, w_cache) + ((x,) if track_x else ())
-        out = jax.tree.map(upd, *args, self._bid_tree())
-        leaf = lambda t: isinstance(t, tuple)
-        y_new, w_new = (jax.tree.map(lambda t, i=i: t[i], out, is_leaf=leaf)
-                        for i in range(2))
-        x_new = (jax.tree.map(lambda t: t[2], out, is_leaf=leaf)
-                 if track_x else x)
-        return y_new, w_new, x_new
-
-    # ---- server side ----------------------------------------------------
-    def reduce_workers(self, w, edge):
-        def f(w_l, bid):
-            m = edge[:, bid].reshape(self._wshape(w_l))
-            return jnp.sum(jnp.where(m, w_l.astype(jnp.float32), 0.0), axis=0)
-        return jax.tree.map(f, w, self._bid_tree())
-
-    def server_update(self, z_cur, w_sum, rho_sum, gamma, prox):
-        def f(z_l, ws_l, bid):
-            z_new = server_update(z_l.astype(jnp.float32), ws_l,
-                                  rho_sum[bid], gamma, prox)
-            return z_new.astype(z_l.dtype)
-        return jax.tree.map(f, z_cur, w_sum, self._bid_tree())
-
-    def server_consensus_update(self, z_cur, w_cache, edge, rho_sum, gamma,
-                                reg):
-        if self._use_kernels() and getattr(reg, "fusable", False):
-            N = self.num_workers
-            stub = self._stub()
-            l1 = reg.l1_coef
-            clip = 0.0 if reg.clip is None else reg.clip
-
-            def f(z_l, w_l, bid):
-                out = kernel_ops.server_prox_update(
-                    z_l.astype(jnp.float32).reshape(1, -1),
-                    w_l.astype(jnp.float32).reshape(N, 1, -1),
-                    edge[:, bid][:, None], rho_sum[bid].reshape(1),
-                    gamma, l1, clip, boundary_stub=stub)
-                return out.reshape(z_l.shape).astype(z_l.dtype)
-            return jax.tree.map(f, z_cur, w_cache, self._bid_tree())
-        w_sum = self.reduce_workers(w_cache, edge)
-        return self.server_update(z_cur, w_sum, rho_sum, gamma, reg.prox)
-
-    def server_prox(self, z_cur, w_sum, rho_sum, gamma, reg):
-        """Prox step (13) from an already-reduced w_sum (SPMD path; the
-        per-leaf prox is elementwise, so the jnp composition is used —
-        the fused reduce+prox kernel has nothing left to fuse here)."""
-        return self.server_update(z_cur, w_sum, rho_sum, gamma, reg.prox)
-
-    # ---- state construction --------------------------------------------
-    def zeros_workers(self, z0):
-        return jax.tree.map(
-            lambda p: jnp.zeros((self.num_workers,) + p.shape, p.dtype), z0)
-
-    def broadcast_workers(self, z0):
-        return jax.tree.map(
-            lambda p: jnp.broadcast_to(
-                p, (self.num_workers,) + p.shape).copy(), z0)
-
-    def workers_scaled(self, z0, rho_vec):
-        def f(p):
-            rho = rho_vec.astype(jnp.float32).reshape(self._wshape(p[None]))
-            return (rho * p[None].astype(jnp.float32)).astype(p.dtype)
-        return jax.tree.map(f, z0)
-
-    def worker_leaves(self, bundle):
-        return list(jax.tree.leaves(bundle))
+        return self.packer.to_blocks(z0)
 
 
 # ---------------------------------------------------------------------------
@@ -678,7 +563,8 @@ class ConsensusState(NamedTuple):
 
     @property
     def z_blocks(self):
-        """Flat-mode convenience: newest consensus blocks (M, dblk)."""
+        """Newest consensus blocks (M, dblk) — the packed table both
+        spaces share."""
         return self.z_hist[0]
 
 

@@ -15,6 +15,12 @@ Shapes map to programs:
   decode_32k, long_500k -> one-token decode_step against a full KV cache
 
 long_500k is skipped for pure full-attention archs (DESIGN.md §5).
+
+``--variant sharded_epoch`` lowers train_4k through the SPMD-sharded
+``asybadmm_epoch`` itself (core/sharded.py: shard_map over
+(data..., model), packed block servers over ``model``) instead of the
+GSPMD-partitioned trainer step — production-shape cost estimates for
+the runtime path ``ConsensusSession`` actually executes.
 """
 import argparse
 import dataclasses
@@ -164,6 +170,47 @@ def build_train(cfg, shape, mesh, variant: str = "baseline"):
     return fn, (state_in, batch_in)
 
 
+def build_train_epoch(cfg, shape, mesh, variant: str = "baseline"):
+    """``sharded_epoch`` variant: lower the SPMD-sharded
+    ``asybadmm_epoch`` (the path ``ConsensusSession.pytree(mesh=...)``
+    runs) at production shape — worker state over the data axes, the
+    packed (M, dblk) block table over ``model`` (TreeSpace lowered via
+    ``core.blocks.BlockLayout``), the w push one psum into the block
+    server's shard."""
+    from ..core import sharded
+    from ..core.blocks import make_block_layout, make_tree_blocks
+    from ..core.space import (TreeSpace, asybadmm_epoch,
+                              init_consensus_state, make_spec)
+
+    tokens = set(variant.split("+"))
+    cfg = _apply_cfg_variants(cfg.with_(dtype=DTYPE, param_dtype=DTYPE,
+                                        remat=True), tokens)
+    model = build_model(cfg)
+    N = num_workers(mesh)
+    acfg = admm_config(mesh)
+    params_shape = model.param_specs()
+    blocks = make_tree_blocks(params_shape, acfg.num_blocks)
+    space = TreeSpace(blocks=blocks, num_workers=N,
+                      layout=make_block_layout(params_shape, blocks))
+    spec = make_spec(space, acfg, model.loss, mesh=mesh)
+
+    # shapes via a mesh-detached twin (no device_put during eval_shape),
+    # then the canonical packed-state shardings attached for lowering
+    spec_local = dataclasses.replace(
+        spec, space=dataclasses.replace(spec.space, mesh=None))
+    state_shape = jax.eval_shape(
+        lambda p: init_consensus_state(spec_local, p), params_shape)
+    sspecs = sharded.consensus_state_specs(spec, state_shape)
+    state_in = _with_sharding(state_shape, sspecs, mesh)
+    batch_in = input_specs(cfg, shape, mesh, worker_axis=True)
+
+    out_sh = (jax.tree.map(lambda s: NamedSharding(mesh, s), sspecs,
+                           is_leaf=lambda x: isinstance(x, P)), None)
+    fn = jax.jit(lambda st, b: asybadmm_epoch(spec, st, b),
+                 out_shardings=out_sh, donate_argnums=(0,))
+    return fn, (state_in, batch_in)
+
+
 def build_prefill(cfg, shape, mesh, variant: str = "baseline"):
     tokens = set(variant.split("+"))
     cfg = _apply_cfg_variants(cfg.with_(dtype=DTYPE, param_dtype=DTYPE),
@@ -221,6 +268,8 @@ def build(arch: str, shape_name: str, mesh, variant: str = "baseline"):
     cfg = get_config(arch)
     shape = INPUT_SHAPES[shape_name]
     if shape.kind == "train":
+        if "sharded_epoch" in variant.split("+"):
+            return build_train_epoch(cfg, shape, mesh, variant)
         return build_train(cfg, shape, mesh, variant)
     if shape.kind == "prefill":
         return build_prefill(cfg, shape, mesh, variant)

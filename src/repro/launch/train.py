@@ -31,10 +31,17 @@ def run_ps_training(session, args, pipe, enc_kw) -> None:
     """--runtime ps: drive the event-driven Parameter Server runtime
     (repro.ps) instead of the vectorized epoch — real jitted numerics
     under lock-free (or locked) block servers, bounded staleness
-    enforced by stalling, and a replayable DelayTrace out."""
+    enforced by stalling, optional network latency on every
+    worker<->server message, and a replayable DelayTrace out."""
+    timing = None
+    if args.net_latency > 0.0 or args.net_jitter > 0.0:
+        from ..ps import CostProfile, NetworkModel
+        timing = CostProfile(net=NetworkModel(args.net_latency,
+                                              args.net_jitter))
     t0 = time.time()
     result = session.run_ps(
         args.steps, discipline=args.discipline, record_z=False,
+        timing=timing,
         batches=lambda t: pipe.batch(t, num_workers=args.workers, **enc_kw))
     for step in range(0, args.steps, max(args.log_every, 1)):
         print(json.dumps({"round": step,
@@ -117,6 +124,13 @@ def main() -> None:
     ap.add_argument("--save-trace", default=None,
                     help="path to save the --runtime ps DelayTrace "
                          "(.npz) for later --delay-model trace replay")
+    ap.add_argument("--net-latency", type=float, default=0.0,
+                    help="--runtime ps: constant network latency (sim "
+                         "seconds) charged on every worker<->server "
+                         "message (pull responses, declarations/pushes)")
+    ap.add_argument("--net-jitter", type=float, default=0.0,
+                    help="--runtime ps: +/- uniform jitter around "
+                         "--net-latency per message")
     ap.add_argument("--lr", type=float, default=1e-3)
     ap.add_argument("--ckpt", default=None)
     ap.add_argument("--log-every", type=int, default=10)

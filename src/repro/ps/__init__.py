@@ -27,8 +27,8 @@ from .server import (BlockServerProc, DISCIPLINES, register_discipline,
                      resolve_discipline)
 from .staleness import StalenessEnforcer
 from .timing import (SERVICE_MODELS, ConstantService, CostProfile,
-                     LognormalService, ParetoService, ServiceModel,
-                     as_service, measure_costs)
+                     LognormalService, NetworkModel, ParetoService,
+                     ServiceModel, as_network, as_service, measure_costs)
 from .trace import DelayTrace
 from .worker import WorkerProc
 
@@ -36,7 +36,7 @@ __all__ = [
     "SpaceEngine", "EventScheduler", "PSRunResult", "PSRuntime",
     "BlockServerProc", "DISCIPLINES", "register_discipline",
     "resolve_discipline", "StalenessEnforcer", "SERVICE_MODELS",
-    "ConstantService", "CostProfile", "LognormalService", "ParetoService",
-    "ServiceModel", "as_service", "measure_costs", "DelayTrace",
-    "WorkerProc",
+    "ConstantService", "CostProfile", "LognormalService", "NetworkModel",
+    "ParetoService", "ServiceModel", "as_network", "as_service",
+    "measure_costs", "DelayTrace", "WorkerProc",
 ]

@@ -23,19 +23,25 @@ The engine also owns the epoch's per-round rng chain (delay key burned,
 selection/minibatch keys consumed), the block split/join of the
 consensus representation, and per-block caches — everything numeric;
 the runtime modules own only *time*.
+
+Both spaces arrive here in the canonical packed block representation
+(z is an (M, dblk) table, worker bundles (N, M, dblk) — TreeSpace
+lowers its leaves onto it via ``core.blocks.BlockLayout``), so block j
+of EVERY space is row j: the lock domains' block ids, the per-block
+caches and the column-local commits are one code path, and pytree
+models run under ``lockfree``/``locked`` identically to flat ones.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, List, Optional, Tuple
+from typing import List, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from ..core.blocks import TreeBlocks
-from ..core.space import (BLOCK_SELECTORS, ConsensusSpec, FlatSpace,
-                          SelectorContext, epoch_keys)
+from ..core.space import (BLOCK_SELECTORS, ConsensusSpec, SelectorContext,
+                          epoch_keys)
 from ..core.async_sim import subsample_worker_data
 
 
@@ -49,18 +55,11 @@ class SpaceEngine:
             space = dataclasses.replace(space, mesh=None)
         self.spec = spec
         self.space = space
-        self.flat = isinstance(space, FlatSpace)
         self.N = space.num_workers
         self.M = space.num_blocks
         self.edge = np.asarray(spec.edge, bool)
         self.rho_sum = jnp.sum(
             jnp.where(spec.edge, spec.rho_vec[:, None], 0.0), axis=0)
-        if not self.flat:
-            bids = space.blocks.leaf_block_ids
-            self.block_leaves: List[Tuple[int, ...]] = [
-                tuple(k for k, b in enumerate(bids) if b == j)
-                for j in range(self.M)]
-            self._treedef = space.blocks.treedef
         # epoch rng chain: (r_delay, r_sel, r_batch) per round — the
         # delay key is burned unused (the runtime's delays are OBSERVED,
         # not drawn), which keeps the chain identical to a TraceDelay
@@ -145,26 +144,16 @@ class SpaceEngine:
         return z0r, y, w, x
 
     # ------------------------------------------------------------------
-    # block split / join of the consensus representation
+    # block split / join of the packed consensus representation
     # ------------------------------------------------------------------
     def split_blocks(self, z) -> list:
-        """z repr -> per-block contents (flat: (dblk,) rows; tree:
-        tuples of the block's leaves)."""
-        if self.flat:
-            return [z[j] for j in range(self.M)]
-        leaves = jax.tree.leaves(z)
-        return [tuple(leaves[k] for k in self.block_leaves[j])
-                for j in range(self.M)]
+        """Packed z (M, dblk) -> per-block contents ((dblk,) rows —
+        block j of either space IS row j of the packed table)."""
+        return [z[j] for j in range(self.M)]
 
     def join_blocks(self, contents: list):
-        """Per-block contents -> z repr."""
-        if self.flat:
-            return jnp.stack(contents)
-        leaves: List[Any] = [None] * sum(len(b) for b in self.block_leaves)
-        for j, content in enumerate(contents):
-            for pos, k in enumerate(self.block_leaves[j]):
-                leaves[k] = content[pos]
-        return jax.tree.unflatten(self._treedef, leaves)
+        """Per-block (dblk,) rows -> packed z (M, dblk)."""
+        return jnp.stack(contents)
 
     # ------------------------------------------------------------------
     # worker side — epoch-shaped calls with one live row
@@ -224,40 +213,29 @@ class SpaceEngine:
     # server side — per-block caches + commits
     # ------------------------------------------------------------------
     def block_cache(self, w_store, j: int):
-        """Block j's server-side stale-w~ cache, a column of the full
-        bundle (flat: (N, dblk); tree: tuple of (N,)+leaf columns)."""
-        if self.flat:
-            return w_store[:, j]
-        leaves = jax.tree.leaves(w_store)
-        return tuple(leaves[k] for k in self.block_leaves[j])
+        """Block j's server-side stale-w~ cache: column j of the packed
+        (N, M, dblk) bundle, an (N, dblk) slab."""
+        return w_store[:, j]
 
     def push_value(self, w_store, i: int, j: int):
         """Worker i's fresh w for block j (what a push carries)."""
-        if self.flat:
-            return w_store[i, j]
-        leaves = jax.tree.leaves(w_store)
-        return tuple(leaves[k][i] for k in self.block_leaves[j])
+        return w_store[i, j]
 
     def apply_push(self, cache, i: int, value):
         """Overwrite worker i's row of a block cache with a pushed w."""
-        if self.flat:
-            return cache.at[i].set(value)
-        return tuple(c.at[i].set(v) for c, v in zip(cache, value))
+        return cache.at[i].set(value)
 
     def commit_block(self, j: int, z_content, cache):
         """Block j's server update (13) — the REAL jitted
         ``server_consensus_update`` on the block's column (exact vs the
-        full-grid epoch call; see module docstring)."""
-        if self.flat:
-            fn = self._jit("commit_flat", self._build_commit_flat)
-            return fn(z_content, cache,
-                      jnp.asarray(self.edge[:, j:j + 1]),
-                      self.rho_sum[j:j + 1])
-        fn = self._jit(("commit_tree", j), lambda: self._build_commit_tree(j))
+        full-grid epoch call; see module docstring). ONE compilation
+        serves every block of either space — all columns share the
+        packed (N, dblk) shape."""
+        fn = self._jit("commit", self._build_commit)
         return fn(z_content, cache, jnp.asarray(self.edge[:, j:j + 1]),
                   self.rho_sum[j:j + 1])
 
-    def _build_commit_flat(self):
+    def _build_commit(self):
         spec, space = self.spec, self.space
 
         def commit(z_col, w_col, e_col, rs):
@@ -265,21 +243,6 @@ class SpaceEngine:
                 z_col[None], w_col[:, None, :], e_col, rs,
                 spec.gamma, spec.reg)
             return out[0]
-        return jax.jit(commit)
-
-    def _build_commit_tree(self, j: int):
-        spec = self.spec
-        n_leaves = len(self.block_leaves[j])
-        sub_def = jax.tree.structure(tuple(range(n_leaves)))
-        sub_space = dataclasses.replace(
-            self.space,
-            blocks=TreeBlocks(num_blocks=1,
-                              leaf_block_ids=(0,) * n_leaves,
-                              treedef=sub_def))
-
-        def commit(z_content, cache, e_col, rs):
-            return sub_space.server_consensus_update(
-                z_content, cache, e_col, rs, spec.gamma, spec.reg)
         return jax.jit(commit)
 
     # ------------------------------------------------------------------

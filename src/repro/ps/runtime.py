@@ -108,6 +108,7 @@ class PSRuntime:
         self.trace = DelayTrace.empty(num_rounds, eng.N, eng.M, self.bound,
                                       self.discipline)
         self.worker_service = self.timing_profile.worker_service()
+        self.net = self.timing_profile.network()
         self._losses = [[] for _ in range(num_rounds)] \
             if not self.timing_only else None
         self._data_cache: Dict[int, Any] = {}
@@ -199,6 +200,8 @@ class PSRuntime:
             seed=self.seed, makespan=makespan,
             discipline=self.discipline,
             minibatch=self.spec.minibatch,
+            net_latency=self.net.latency if self.net else 0.0,
+            net_jitter=self.net.jitter if self.net else 0.0,
             stall_count=metrics["stall_count"],
             max_served_tau=metrics["max_served_tau"])
         return PSRunResult(makespan=makespan, num_rounds=num_rounds,

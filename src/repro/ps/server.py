@@ -25,7 +25,12 @@ beyond the horizon would never be read.
 
 ``DISCIPLINES`` is the pluggable grouping registry (block ids ->
 lock domains); register custom groupings (e.g. shard-pair servers)
-with :func:`register_discipline`.
+with :func:`register_discipline`. Block ids follow the packed block
+layout's contract (``core.blocks.BlockLayout``): block j is row j of
+the canonical (M, dblk) table for BOTH spaces — a pytree model's lock
+domains are the same objects as a flat vector's, so ``lockfree`` vs
+``locked`` (and any custom grouping) behave identically in pytree
+mode.
 """
 from __future__ import annotations
 

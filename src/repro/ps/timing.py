@@ -8,6 +8,13 @@ server commit a service time drawn from a :class:`ServiceModel`:
 * ``pareto``    — heavy-tailed stragglers (the cluster profile behind
   the paper's Table-1 story and our ``ParetoDelay`` staleness model).
 
+:class:`NetworkModel` (``CostProfile(net=...)``) additionally charges a
+constant + jitter latency on every worker<->server message — pull
+responses and declaration/push bundles — so coordination studies can
+separate compute stragglers from network lag (``--net-latency`` /
+``--net-jitter`` on ``launch.train``). Observed staleness still lands
+in the ``DelayTrace``, so replay parity holds under any network model.
+
 :func:`measure_costs` grounds the simulation in reality: it times the
 REAL jitted ``VariableSpace`` hot-path ops (the same ``worker_grads`` /
 ``worker_select_update`` / ``server_consensus_update`` the epoch runs)
@@ -78,6 +85,44 @@ def as_service(v) -> ServiceModel:
 
 
 @dataclasses.dataclass(frozen=True)
+class NetworkModel:
+    """Per-message network latency between workers and block servers:
+    ``latency`` + U(-jitter, +jitter), floored at 0.
+
+    Charged once per worker<->server message — each pull *response*
+    (server -> worker, after the enforcer serves it) and each
+    declaration/push bundle (worker -> server). Latency shifts WHEN
+    messages land (and therefore which versions later pulls observe and
+    how long commits wait on declarations), but every observed
+    staleness row is still recorded into the ``DelayTrace`` at compute
+    time, so trace replay through ``asybadmm_epoch`` stays exact — the
+    network model changes the trace, never the replay contract."""
+    latency: float
+    jitter: float = 0.0
+
+    def __post_init__(self):
+        if self.latency < 0.0 or self.jitter < 0.0:
+            raise ValueError(f"network latency/jitter must be >= 0; got "
+                             f"latency={self.latency} jitter={self.jitter}")
+
+    def sample(self, rng: np.random.Generator) -> float:
+        if self.jitter <= 0.0:
+            return self.latency
+        return max(0.0, self.latency
+                   + self.jitter * (2.0 * float(rng.random()) - 1.0))
+
+
+def as_network(v) -> Optional[NetworkModel]:
+    """None / 0.0 -> no network model; float -> constant latency;
+    NetworkModel passes through (degenerate zero models drop to None so
+    the zero-latency scheduler path stays byte-identical)."""
+    if v is None:
+        return None
+    net = v if isinstance(v, NetworkModel) else NetworkModel(float(v))
+    return net if (net.latency > 0.0 or net.jitter > 0.0) else None
+
+
+@dataclasses.dataclass(frozen=True)
 class CostProfile:
     """Per-event costs fed to the scheduler.
 
@@ -87,13 +132,17 @@ class CostProfile:
                      block it holds under the lock;
     t_push         : server-side processing of one incoming w push
                      (queueing delay on the lock domain) — a plain
-                     float, charged deterministically per push.
+                     float, charged deterministically per push;
+    net            : worker<->server network latency per message —
+                     None (ideal network), a float (constant), or a
+                     :class:`NetworkModel` (constant + jitter).
     ``t_worker`` / ``t_server_block`` floats coerce to
     ConstantService; pass a ServiceModel for jitter.
     """
     t_worker: Any = 1.0
     t_server_block: Any = 0.25
     t_push: float = 0.0
+    net: Any = None
 
     def __post_init__(self):
         if hasattr(self.t_push, "sample"):
@@ -106,6 +155,9 @@ class CostProfile:
 
     def server_service(self) -> ServiceModel:
         return as_service(self.t_server_block)
+
+    def network(self) -> Optional[NetworkModel]:
+        return as_network(self.net)
 
 
 def measure_costs(spec, data, z0=None, *, repeats: int = 20

@@ -6,7 +6,13 @@ Each worker runs Algorithm 1's lines 3-9 as an event-driven cycle:
      (capped at its own round t, as the epoch model reads versions
      <= t). Pulls route through the :class:`StalenessEnforcer`: a
      domain lagging more than T versions stalls the worker until the
-     commit that restores Assumption 3.
+     commit that restores Assumption 3. With a
+     :class:`~repro.ps.timing.NetworkModel` on the cost profile, each
+     served pull's *response* additionally travels ``net.sample()``
+     simulated seconds before the worker sees it (the version is fixed
+     at serve time), and each round's declaration/push bundle travels
+     the same way back — latency shifts what the trace records, never
+     whether it replays.
   2. **compute** — once every pull resolves, the observed staleness row
      is recorded into the :class:`DelayTrace` and the worker's service
      time elapses (the scheduler's clock; stragglers come from the
@@ -50,10 +56,19 @@ class WorkerProc:
         self._pulled = {}
         self._issued = False
         self._pending = len(self.rt.domains)
+        net = self.rt.net
         for dom in self.rt.domains:
-            self.rt.enforcer.request(
-                dom, t, self.rt.sched.now,
-                lambda version, dom=dom: self._on_pull(dom, version))
+            if net is None:
+                resolve = (lambda version, dom=dom:
+                           self._on_pull(dom, version))
+            else:
+                # the enforcer fixes the served version NOW; the response
+                # then spends a network-latency sample in flight
+                def resolve(version, dom=dom):
+                    self.rt.sched.after(
+                        net.sample(self.rng),
+                        lambda: self._on_pull(dom, version))
+            self.rt.enforcer.request(dom, t, self.rt.sched.now, resolve)
         self._issued = True
         if self._pending == 0:
             self._start_compute()
@@ -94,13 +109,20 @@ class WorkerProc:
                 t, i, gnorm[i] if eng.needs_grads_for_select() else None)
             rt.y, rt.w, rt.x = eng.update(
                 i, g_buf, z_buf, rt.y, rt.w, rt.x, sel_row)
-        # declare to every edge domain; push fresh w where selected
+        # declare to every edge domain; push fresh w where selected (the
+        # declaration + its pushes travel as ONE message, so a round's
+        # pushes never overtake their own declaration under latency)
         sel_row = np.asarray(sel_row, bool) & eng.edge[i]
         for dom in rt.domains_of_worker[i]:
             pushes = [(j, None if rt.timing_only
                        else eng.push_value(rt.w, i, j))
                       for j in dom.block_ids if sel_row[j]]
-            dom.on_declare(i, t, pushes)
+            if rt.net is None:
+                dom.on_declare(i, t, pushes)
+            else:
+                rt.sched.after(rt.net.sample(self.rng),
+                               lambda dom=dom, pushes=pushes:
+                               dom.on_declare(i, t, pushes))
         self.rounds_done += 1
         rt.data_done(t)
         self._begin_round(t + 1)

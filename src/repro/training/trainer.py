@@ -38,7 +38,7 @@ import jax.numpy as jnp
 from ..configs.base import ADMMConfig
 from ..core.admm import server_update, worker_update
 from ..core.async_sim import push_history, subsample_worker_data
-from ..core.blocks import TreeBlocks, make_tree_blocks
+from ..core.blocks import TreeBlocks, make_block_layout, make_tree_blocks
 from ..core.space import (ConsensusSpec, ConsensusState, TreeSpace,
                           asybadmm_epoch, consensus_residual,
                           init_consensus_state, make_spec,
@@ -106,8 +106,9 @@ class ADMMTrainer:
         return make_tree_blocks(params, self.admm.num_blocks)
 
     def _space(self, params) -> TreeSpace:
-        return TreeSpace(blocks=self._blocks(params),
-                         num_workers=self.num_workers)
+        blocks = self._blocks(params)
+        return TreeSpace(blocks=blocks, num_workers=self.num_workers,
+                         layout=make_block_layout(params, blocks))
 
     def _spec(self, params) -> ConsensusSpec:
         return make_spec(self._space(params), self.admm, self.loss_fn,
@@ -115,13 +116,20 @@ class ADMMTrainer:
                          track_x=False, mesh=self.mesh)
 
     def init(self, params, *, cyclic: bool = False) -> ADMMTrainState:
-        g = init_consensus_state(self._spec(params), params)
+        spec = self._spec(params)
+        g = init_consensus_state(spec, params)
+        # the trainer's user-facing state stays in PARAMS representation
+        # (leaf dtypes, launch/shardings.py TP overlays, checkpoints);
+        # train_step lowers it onto the packed block table per epoch
+        unpack = spec.space.layout.from_blocks
+        z_hist, y, w_cache = (unpack(g.z_hist), unpack(g.y),
+                              unpack(g.w_cache))
         if cyclic:
             # Static Gauss-Seidel rounds (train_step_block) never read the
             # stale-w cache (every worker pushes the active block fresh) —
             # don't carry it.
-            g = g._replace(w_cache=())
-        return ADMMTrainState(z_hist=g.z_hist, y=g.y, w_cache=g.w_cache,
+            w_cache = ()
+        return ADMMTrainState(z_hist=z_hist, y=y, w_cache=w_cache,
                               step=g.t, rng=g.rng)
 
     # -----------------------------------------------------------------
@@ -140,12 +148,19 @@ class ADMMTrainer:
                 "init(params)")
         params0 = jax.tree.map(lambda a: a[0], state.z_hist)
         spec = self._spec(params0)
-        g = ConsensusState(z_hist=state.z_hist, y=state.y,
-                           w_cache=state.w_cache, x=(), t=state.step,
+        # lower the params-shaped state onto the packed block table (a
+        # reshape/concat boundary — the epoch's hot path, kernels and
+        # SPMD sharding all run on the packed (N, M, dblk) layout), then
+        # lift the result back to params representation
+        pack = spec.space.layout.to_blocks
+        unpack = spec.space.layout.from_blocks
+        g = ConsensusState(z_hist=pack(state.z_hist), y=pack(state.y),
+                           w_cache=pack(state.w_cache), x=(), t=state.step,
                            rng=state.rng)
         g, info = asybadmm_epoch(spec, g, batch)
-        return (ADMMTrainState(z_hist=g.z_hist, y=g.y, w_cache=g.w_cache,
-                               step=g.t, rng=g.rng), info)
+        return (ADMMTrainState(z_hist=unpack(g.z_hist), y=unpack(g.y),
+                               w_cache=unpack(g.w_cache), step=g.t,
+                               rng=g.rng), info)
 
     # -----------------------------------------------------------------
     def train_step_block(self, state: ADMMTrainState, batch, block_id: int
@@ -186,10 +201,13 @@ class ADMMTrainer:
         active_idx = [i for i, b in enumerate(leaves_ids) if b == block_id]
         treedef = blocks.treedef
 
-        # --- bounded-staleness pull (all leaves — forward needs them) ---
+        # --- bounded-staleness pull (all leaves — forward needs them);
+        #     per-leaf gather: this path keeps the params-shaped state,
+        #     it never lowers onto the packed block table ---
         delays = sample_delay_model(spec.delay_model, r_delay, N, M,
                                     state.step)
-        z_tilde = space.gather(state.z_hist, delays)
+        z_tilde = jax.tree.map(lambda zh, bid: zh[delays[:, bid]],
+                               state.z_hist, blocks.block_id_tree())
 
         zt_leaves = jax.tree.leaves(z_tilde)
         active_zt = [zt_leaves[i] for i in active_idx]
@@ -247,9 +265,15 @@ class ADMMTrainer:
         """||x_i - z||/||z|| proxy: since x = z~-(g+y')/rho and y' = -g at
         update time, the dual drift ||y_i + g_i|| collapses; we report the
         w-cache dispersion across workers instead (0 at consensus)."""
+        if isinstance(state.w_cache, tuple) and state.w_cache == ():
+            raise ValueError(
+                "state was built with init(cyclic=True), which drops the "
+                "w cache the consensus residual is computed from; use a "
+                "plain init(params) to track it")
         params0 = jax.tree.map(lambda a: a[0], state.z_hist)
         spec = self._spec(params0)
-        g = ConsensusState(z_hist=state.z_hist, y=state.y,
-                           w_cache=state.w_cache, x=(), t=state.step,
+        pack = spec.space.layout.to_blocks
+        g = ConsensusState(z_hist=pack(state.z_hist), y=pack(state.y),
+                           w_cache=pack(state.w_cache), x=(), t=state.step,
                            rng=state.rng)
         return consensus_residual(spec, g)

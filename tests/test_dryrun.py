@@ -60,6 +60,24 @@ def test_dryrun_lowers_and_compiles(arch, shape):
     assert res["flops_per_device"] > 0
 
 
+def test_dryrun_sharded_epoch_lowers_and_compiles():
+    """--variant sharded_epoch: the SPMD-sharded asybadmm_epoch itself
+    (shard_map, packed TreeSpace block servers over `model`) lowers and
+    compiles at production shape — the ConsensusSession runtime path,
+    not just the GSPMD trainer step."""
+    code = (
+        "from repro.launch.dryrun import run_one\n"
+        "row = run_one('qwen3-1.7b', 'train_4k', 'pod', 'sharded_epoch')\n"
+        "import json; print('RESULT ' + json.dumps({k: row[k] for k in "
+        "('status', 'bottleneck', 'flops_per_device')}))\n")
+    r = _run(code)
+    assert r.returncode == 0, r.stderr[-2000:]
+    line = [l for l in r.stdout.splitlines() if l.startswith("RESULT ")][0]
+    res = json.loads(line[len("RESULT "):])
+    assert res["status"] == "ok"
+    assert res["flops_per_device"] > 0
+
+
 def test_dryrun_multipod_lowers():
     code = (
         "from repro.launch.dryrun import run_one\n"

@@ -258,6 +258,50 @@ except ImportError:                     # pragma: no cover - optional extra
 
 
 # ---------------------------------------------------------------------------
+# network latency (constant + jitter on every worker<->server message)
+# ---------------------------------------------------------------------------
+
+def test_net_latency_slows_makespan_but_replays():
+    """A lagged network stretches the makespan (pull responses and
+    declaration/push bundles spend time in flight) and reshapes the
+    observed staleness — but the trace still records exactly what each
+    worker saw, so epoch replay parity is untouched."""
+    from repro.ps import NetworkModel
+    base = CostProfile(t_worker=ConstantService(1.0),
+                       t_server_block=ConstantService(0.25))
+    lag = CostProfile(t_worker=ConstantService(1.0),
+                      t_server_block=ConstantService(0.25),
+                      net=NetworkModel(0.5, 0.2))
+    res0 = _flat_session().run_ps(ROUNDS, timing=base)
+    res = _flat_session().run_ps(ROUNDS, timing=lag)
+    # each round's critical path pays >= one pull response + one declare
+    assert res.makespan >= res0.makespan + ROUNDS * 0.5
+    assert res.trace.meta["net_latency"] == 0.5
+    assert res.trace.meta["net_jitter"] == 0.2
+    assert res.trace.complete and res.metrics["max_served_tau"] <= 2
+    sess2 = _flat_session(delay_model=res.to_delay_model())
+    _assert_replay(res, sess2, CENTERS, lambda z: np.asarray(z).ravel(),
+                   bitwise=False)
+
+
+def test_net_latency_deterministic_and_coerced():
+    from repro.ps import NetworkModel, as_network
+    timing = CostProfile(net=0.25)               # float -> constant model
+    assert timing.network() == NetworkModel(0.25)
+    assert as_network(None) is None
+    assert as_network(0.0) is None               # ideal network: no model
+    assert as_network(NetworkModel(0.0, 0.0)) is None
+    with pytest.raises(ValueError):
+        NetworkModel(-1.0)
+    runs = [_flat_session().run_ps(
+        ROUNDS, timing=CostProfile(net=NetworkModel(0.3, 0.1)))
+        for _ in range(2)]
+    np.testing.assert_array_equal(runs[0].trace.delays,
+                                  runs[1].trace.delays)
+    assert runs[0].makespan == runs[1].makespan
+
+
+# ---------------------------------------------------------------------------
 # trace recording / persistence / TraceDelay
 # ---------------------------------------------------------------------------
 
@@ -434,3 +478,48 @@ def test_spmd_trace_replay():
             np.asarray(jax.device_get(sess.z(state))),
             np.asarray(res.z_versions[t + 1]), rtol=1e-5, atol=1e-5,
             err_msg=f"SPMD replay diverged at round {t}")
+
+
+@needs8
+def test_tree_spmd_trace_replay():
+    """Pytree models close the loop too since the packed-layout
+    lowering: a PS-runtime trace recorded for a pytree session replays
+    through the SPMD epoch with the z ring sharded over ``model`` —
+    the tree x SPMD cell of the support matrix, now native."""
+    from repro.launch.mesh import make_test_mesh
+
+    N8, M8 = 4, 8
+    dim = M8 * DBLK
+    centers = jnp.asarray(
+        np.random.RandomState(6).randn(N8, dim).astype(np.float32))
+    params = {f"w{j}": jnp.zeros((DBLK,), jnp.float32) for j in range(M8)}
+    tblocks = TreeBlocks(num_blocks=M8, leaf_block_ids=tuple(range(M8)),
+                         treedef=jax.tree.structure(params))
+    cfg = ADMMConfig(rho=2.0, gamma=0.1, max_delay=2, block_fraction=0.5,
+                     num_blocks=M8, l1_coef=1e-3, clip=0.8, seed=0)
+
+    def tree_loss(p, c):
+        z = jnp.concatenate([p[f"w{j}"] for j in range(M8)])
+        return 0.5 * jnp.sum(jnp.square(z - c))
+
+    def make(dm=None, mesh=None):
+        return ConsensusSession.pytree(
+            tree_loss, params, cfg, num_workers=N8, blocks=tblocks,
+            delay_model=dm, mesh=mesh, backend="pallas")
+
+    res = make().run_ps(ROUNDS, timing=STRAGGLER,
+                        batches=lambda t: centers)
+    sess = make(dm=res.to_delay_model(), mesh=make_test_mesh(8))
+    assert sess.init().z_hist.sharding.spec[1] == "model"
+    state = sess.init()
+    step = sess.step_fn()
+
+    def to_vec(zt):
+        return np.concatenate([np.asarray(jax.device_get(zt[f"w{j}"]))
+                               for j in range(M8)])
+    for t in range(ROUNDS):
+        state, _ = step(state, centers)
+        np.testing.assert_allclose(
+            to_vec(sess.z(state)), to_vec(res.z_versions[t + 1]),
+            rtol=1e-5, atol=1e-5,
+            err_msg=f"tree SPMD replay diverged at round {t}")

@@ -106,12 +106,12 @@ def test_pytree_edge_set_respected():
     centers = _centers()
     for _ in range(5):
         state, _ = step(state, centers)
+    y = np.asarray(state.y)          # packed (N, M, dblk) worker bundle
     for j in range(M):
-        y_j = np.asarray(state.y[f"w{j}"])                 # (N, DBLK)
         outside = ~EDGE[:, j]
-        assert np.all(y_j[outside] == 0.0), (j, y_j)
+        assert np.all(y[outside, j] == 0.0), (j, y)
         inside = EDGE[:, j]
-        assert np.any(y_j[inside] != 0.0), (j, y_j)
+        assert np.any(y[inside, j] != 0.0), (j, y)
 
 
 def test_pytree_heterogeneous_rho_changes_trajectory():

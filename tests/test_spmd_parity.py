@@ -114,9 +114,13 @@ def test_tree_spmd_parity(scheme):
         return np.asarray(jnp.concatenate([z[f"w{j}"] for j in range(4)]))
 
     state = _assert_parity(make, to_vec, centers)
-    # worker axis sharded over data; z replicated over model (tree fallback)
-    yspec = jax.tree.leaves(state.y)[0].sharding.spec
-    assert yspec[0] in ("data", ("data",))
+    # the packed-layout lowering: tree worker bundles shard (data, model)
+    # and the z ring shards its block axis over model — NATIVE block
+    # servers, no replicated-z fallback
+    yspec = state.y.sharding.spec
+    assert yspec[0] in ("data", ("data",)) and yspec[1] == "model"
+    assert state.z_hist.sharding.spec[1] == "model"
+    assert state.y.addressable_shards[0].data.shape == (1, 2, DBLK)
 
 
 @needs8
