@@ -25,17 +25,35 @@ units, M=16, so the full-vector lock's M-serial commit dominates) —
 and gates the lockfree/locked makespan ratio against
 ``min_lockfree_speedup_x8`` in benchmarks/kernels_baseline.json.
 
+``--scenario`` runs the elastic-PS chaos studies instead of Table 1:
+
+* ``churn``      — 8-worker REAL-compute run under per-push commits
+  with a deterministic crash+rejoin plan (``FaultPlan.churn``):
+  replays the chaos trace through the vectorized epoch (single device,
+  and the SPMD (data=4, model=2) mesh when 8 devices are up) and gates
+  rounds-to-tolerance chaos/fault-free vs ``max_churn_rounds_ratio``;
+* ``skew``       — timing-only zipf vs uniform block selection: hot
+  head blocks pile onto few lock domains (queue-occupancy spread);
+* ``heavy_tail`` — Pareto worker compute (the EC2 straggler tail):
+  stall-time concentration under lockfree vs per_push commits.
+
+All scenarios print the per-worker stall-time and per-domain queue
+occupancy histograms from ``PSRunResult.metrics["histograms"]``.
+
 CSV columns: name, us_per_call (simulated makespan), derived (speedup).
 """
 import argparse
 import json
 import pathlib
 
+import numpy as np
+
 from repro.api import ConsensusSession
 from repro.configs.base import ADMMConfig
 from repro.data import make_sparse_logreg
-from repro.ps import (ConstantService, CostProfile, LognormalService,
-                      PSRuntime, measure_costs)
+from repro.ps import (ConstantService, CostProfile, FaultPlan,
+                      LognormalService, ParetoService, PSRuntime,
+                      measure_costs)
 
 K_ITERS = 320
 WORKERS = [1, 4, 8, 16, 32]
@@ -43,10 +61,13 @@ M_BLOCKS = 16
 GATE_WORKERS = 8
 GATE_ROUNDS = 12
 BASELINE = pathlib.Path(__file__).parent / "kernels_baseline.json"
+CHURN_DIM = M_BLOCKS * 16
 
 
 def build_session(num_workers: int, dim: int = 2048, samples: int = 64,
-                  seed: int = 0) -> ConsensusSession:
+                  seed: int = 0, *, block_selection: str = "random",
+                  zipf_a: float = 1.1, delay_model=None,
+                  mesh=None) -> ConsensusSession:
     """The paper's sparse-logreg workload (eq. 22) on the unified API."""
     import jax.numpy as jnp
 
@@ -59,10 +80,11 @@ def build_session(num_workers: int, dim: int = 2048, samples: int = 64,
         return jnp.mean(jnp.log1p(jnp.exp(-y * (X @ z))))
 
     cfg = ADMMConfig(rho=2.0, gamma=0.1, max_delay=2, block_fraction=0.5,
-                     num_blocks=M_BLOCKS, l1_coef=1e-3, clip=1e4, seed=seed)
+                     num_blocks=M_BLOCKS, l1_coef=1e-3, clip=1e4, seed=seed,
+                     block_selection=block_selection, zipf_a=zipf_a)
     return ConsensusSession.flat(
         loss_fn, (jnp.asarray(data.X), jnp.asarray(data.y)), dim=dim,
-        cfg=cfg)
+        cfg=cfg, delay_model=delay_model, mesh=mesh)
 
 
 def measured_costs(dim: int = 2048, samples: int = 64) -> dict:
@@ -121,6 +143,144 @@ def smoke_gate(emit, costs: dict) -> bool:
     return ok
 
 
+# ---------------------------------------------------------------------------
+# elastic-PS chaos scenarios (--scenario churn | skew | heavy_tail)
+# ---------------------------------------------------------------------------
+
+def _emit_hist(emit, name: str, hist: dict) -> None:
+    """One histogram as a CSV row: total count, then edge:count bins."""
+    bins = "|".join(f"{hist['edges'][i]:.3g}:{c}"
+                    for i, c in enumerate(hist["counts"]))
+    emit(f"{name},{sum(hist['counts'])},bins={bins}")
+
+
+def _rounds_to_tolerance(losses, tol: float):
+    for t, loss in enumerate(losses):
+        if np.isfinite(loss) and loss <= tol:
+            return t + 1
+    return None
+
+
+def _replay_max_err(res, sess) -> float:
+    """Max |z_replay - z_runtime| over all rounds, replaying ``res``'s
+    trace through ``sess``'s vectorized epoch."""
+    state = sess.init()
+    step = sess.step_fn()
+    err = 0.0
+    for t in range(res.num_rounds):
+        state, _ = step(state, sess.data)
+        err = max(err, float(np.max(np.abs(
+            np.asarray(res.z_versions[t + 1]) - np.asarray(sess.z(state))))))
+    return err
+
+
+def churn_scenario(emit, smoke: bool = False) -> bool:
+    """Crash+rejoin at 8 workers, per-push commits, REAL numerics:
+    deterministic plan, replay-parity through the epoch (single device
+    + SPMD when 8 devices are up), and a rounds-to-tolerance gate —
+    chaos must converge within ``max_churn_rounds_ratio`` x the
+    fault-free round count (benchmarks/kernels_baseline.json)."""
+    import jax
+
+    R = 16 if smoke else 24
+    timing = CostProfile(t_worker=ConstantService(1.0),
+                         t_server_block=ConstantService(0.25))
+    plan = FaultPlan.churn(GATE_WORKERS, seed=0, crashes=2,
+                           window=(2.0, 8.0), down=(2.0, 5.0))
+    sess = build_session(GATE_WORKERS, dim=CHURN_DIM, samples=4)
+    ff = sess.run_ps(R, discipline="per_push", timing=timing)
+    ch = sess.run_ps(R, discipline="per_push", timing=timing, faults=plan)
+
+    # rounds-to-tolerance: the loss level the fault-free run reaches at
+    # 60% of its rounds; chaos must get there within max_ratio x as many
+    tol = ff.losses[int(0.6 * R) - 1]
+    r_ff = _rounds_to_tolerance(ff.losses, tol)
+    r_ch = _rounds_to_tolerance(ch.losses, tol)
+    ratio = float("inf") if r_ch is None else r_ch / r_ff
+    max_ratio = json.loads(BASELINE.read_text())["max_churn_rounds_ratio"]
+
+    emit(f"churn_faultfree_makespan,{ff.makespan*1e6:.0f},"
+         f"rounds_to_tol={r_ff}")
+    emit(f"churn_chaos_makespan,{ch.makespan*1e6:.0f},"
+         f"rounds_to_tol={r_ch}")
+    emit(f"churn_rounds_ratio,{ratio:.3f},max={max_ratio}"
+         f"|crashes={ch.metrics['crashes']}|rejoins={ch.metrics['rejoins']}")
+    _emit_hist(emit, "churn_worker_stall_hist",
+               ch.metrics["histograms"]["worker_stall_time"])
+    _emit_hist(emit, "churn_server_occupancy_hist",
+               ch.metrics["histograms"]["server_occupancy"])
+
+    # replay parity: the chaos trace (staleness + participation) must
+    # reproduce the runtime's z trajectory through the fast epoch
+    dm = ch.to_delay_model()
+    err1 = _replay_max_err(ch, build_session(GATE_WORKERS, dim=CHURN_DIM,
+                                             samples=4, delay_model=dm))
+    emit(f"churn_replay_err_1dev,{err1:.2e},tol=1e-05")
+    ok = err1 <= 1e-5
+    if jax.device_count() >= 8:
+        from repro.launch.mesh import make_test_mesh
+        err8 = _replay_max_err(
+            ch, build_session(GATE_WORKERS, dim=CHURN_DIM, samples=4,
+                              delay_model=dm, mesh=make_test_mesh(8)))
+        emit(f"churn_replay_err_spmd,{err8:.2e},mesh=data4xmodel2")
+        ok = ok and err8 <= 1e-5
+    else:
+        emit("churn_replay_err_spmd,skipped,need 8 devices "
+             "(XLA_FLAGS=--xla_force_host_platform_device_count=8)")
+    if ratio > max_ratio:
+        emit(f"churn_gate_FAILED,0,rounds ratio {ratio:.3f} > {max_ratio}")
+    if not ok:
+        emit("churn_gate_FAILED,0,replay parity error above 1e-5")
+    return ok and ratio <= max_ratio
+
+
+def skew_scenario(emit, smoke: bool = False) -> bool:
+    """Timing-only: zipf(a=1.5) vs uniform block selection at 8 workers
+    under per-push commits (commit work paid per push, so a domain's
+    busy time follows its push count). Skewed selection piles pushes
+    onto the head blocks' lock domains — visible as queue-occupancy
+    spread across the 16 per-block servers."""
+    R = 12 if smoke else 40
+    timing = CostProfile(t_worker=ConstantService(1.0),
+                         t_server_block=ConstantService(0.25),
+                         t_push=0.05)
+    for selection in ("random", "zipf"):
+        sess = build_session(GATE_WORKERS, dim=CHURN_DIM, samples=4,
+                             block_selection=selection, zipf_a=1.5)
+        res = PSRuntime(sess.spec, discipline="per_push", timing=timing,
+                        compute="timing").run(R)
+        bf = res.metrics["server_busy_frac"]
+        emit(f"skew_{selection}_makespan,{res.makespan*1e6:.0f},"
+             f"busy_max={max(bf):.3f}|busy_min={min(bf):.3f}")
+        _emit_hist(emit, f"skew_{selection}_occupancy_hist",
+                   res.metrics["histograms"]["server_occupancy"])
+    return True
+
+
+def heavy_tail_scenario(emit, smoke: bool = False) -> bool:
+    """Timing-only: Pareto(alpha=1.1) worker compute — Assumption 3's
+    straggler tail — under round-buffered vs per-push commits. Stall
+    time concentrates on the workers behind the straggler."""
+    R = 12 if smoke else 40
+    timing = CostProfile(t_worker=ParetoService(1.0, alpha=1.1),
+                         t_server_block=ConstantService(0.25))
+    for disc in ("lockfree", "per_push"):
+        sess = build_session(GATE_WORKERS, dim=CHURN_DIM, samples=4)
+        res = PSRuntime(sess.spec, discipline=disc, timing=timing,
+                        compute="timing").run(R)
+        m = res.metrics
+        emit(f"heavy_tail_{disc}_makespan,{res.makespan*1e6:.0f},"
+             f"stall_time={m['stall_time']:.2f}"
+             f"|max_served_tau={m['max_served_tau']}")
+        _emit_hist(emit, f"heavy_tail_{disc}_stall_hist",
+                   m["histograms"]["worker_stall_time"])
+    return True
+
+
+SCENARIOS = {"churn": churn_scenario, "skew": skew_scenario,
+             "heavy_tail": heavy_tail_scenario}
+
+
 def main(emit=print, smoke: bool = False) -> None:
     costs = measured_costs()
     emit(f"speedup_measured_costs,{costs['t_worker']*1e6:.1f},"
@@ -137,5 +297,16 @@ if __name__ == "__main__":
     ap = argparse.ArgumentParser()
     ap.add_argument("--smoke", action="store_true",
                     help="CI mode: deterministic locked-vs-lockfree gate "
-                         "at 8 workers + a reduced Table-1 sweep")
-    main(smoke=ap.parse_args().smoke)
+                         "at 8 workers + a reduced Table-1 sweep (or a "
+                         "reduced chaos scenario with --scenario)")
+    ap.add_argument("--scenario", default=None, choices=sorted(SCENARIOS),
+                    help="elastic-PS chaos study instead of Table 1: "
+                         "churn (crash+rejoin, replay parity + "
+                         "rounds-to-tolerance gate), skew (zipf block "
+                         "selection), heavy_tail (Pareto stragglers)")
+    args = ap.parse_args()
+    if args.scenario is not None:
+        if not SCENARIOS[args.scenario](print, smoke=args.smoke):
+            raise SystemExit(1)
+    else:
+        main(smoke=args.smoke)

@@ -31,6 +31,17 @@ echo "[ci] PS-runtime speedup gate (smoke)"
 env PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" \
     python benchmarks/speedup.py --smoke
 
+# Elastic-PS chaos smoke: crash+rejoin at 8 real-compute workers under
+# per-push commits. The deterministic chaos trace must replay its z
+# trajectory through the vectorized epoch — single-device AND the SPMD
+# (data=4, model=2) mesh (hence the forced 8 host devices) — and the
+# run must reach the fault-free tolerance within max_churn_rounds_ratio
+# x the fault-free round count (benchmarks/kernels_baseline.json)
+echo "[ci] elastic-PS churn gate (smoke, 8 host devices)"
+env PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" \
+    XLA_FLAGS="--xla_force_host_platform_device_count=8" \
+    python benchmarks/speedup.py --scenario churn --smoke
+
 # SPMD parity smoke: the sharded epoch needs an 8-host-device mesh, so
 # the parity suite runs in its own process with the device count forced
 # (inside the main tier-1 run below it skips) — single-device-only

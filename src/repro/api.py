@@ -151,7 +151,8 @@ class ConsensusSession:
                batches: Optional[Callable[[int], Any]] = None,
                compute: str = "real",
                seed: Optional[int] = None,
-               record_z: bool = True):
+               record_z: bool = True,
+               faults: Any = None):
         """Drive ``num_rounds`` rounds under the event-driven Parameter
         Server runtime (``repro.ps``) instead of the vectorized epoch:
         per-block ``lockfree`` servers (or the ``locked`` full-vector
@@ -169,11 +170,21 @@ class ConsensusSession:
         :class:`~repro.ps.runtime.PSRunResult` (``z_final`` /
         ``z_versions`` in user representation) — replay its trace
         through the fast epoch with
-        ``delay_model=result.to_delay_model()``."""
+        ``delay_model=result.to_delay_model()``.
+
+        ``faults`` is a :class:`~repro.ps.chaos.FaultPlan` (or a path
+        to its JSON) injecting worker crash/rejoin, joins/leaves,
+        slowdowns and server commit spikes — the run stays
+        deterministic and its trace (staleness + participation) still
+        replays through the epoch; see API.md's elastic-PS section."""
         from .ps import PSRuntime
+        from .ps.chaos import FaultPlan
+        if isinstance(faults, (str, bytes)) or hasattr(faults, "__fspath__"):
+            faults = FaultPlan.load(faults)
         rt = PSRuntime(self.spec, data=self.data, batches=batches,
                        discipline=discipline, timing=timing,
-                       compute=compute, seed=seed, record_z=record_z)
+                       compute=compute, seed=seed, record_z=record_z,
+                       faults=faults)
         return rt.run(num_rounds, z0=z0 if z0 is not None else self.z0)
 
     def run(self, num_epochs: int, z0: Any = None, *,

@@ -168,7 +168,9 @@ class ADMMConfig:
     l1_coef: float = 0.0        # λ for h(z) = λ||z||_1
     clip: Optional[float] = None  # box constraint ||z||_inf <= C
     num_blocks: int = 16        # M logical blocks (== model-axis size on pod)
-    block_selection: str = "random"  # random | cyclic | gauss_southwell
+    block_selection: str = "random"  # random | cyclic | gauss_southwell | zipf
+    zipf_a: float = 1.1         # skew exponent for block_selection="zipf"
+                                # (block j sampled with weight (j+1)^-a)
     # incremental/stochastic workers (Hong 2014): fraction of each
     # worker's samples drawn fresh per epoch; None/1.0 = full batch
     minibatch: Optional[float] = None

@@ -53,7 +53,7 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 from ..launch.mesh import data_axes, model_axis_size, num_workers
 from .async_sim import minibatch_rows, validate_minibatch_data
 from .space import (ConsensusSpec, ConsensusState, SelectorContext,
-                    epoch_keys, sample_delay_model)
+                    epoch_keys, participation_mask_for, sample_delay_model)
 
 
 def _splits_model(space) -> bool:
@@ -242,6 +242,13 @@ def _epoch_body(spec: ConsensusSpec, space_l, coll, Nl: int, Ml: int,
         block_fraction=spec.block_fraction,
         grad_sqnorm=lambda: coll.all_gather_data(space_l.grad_sqnorm(g)))
     sel = spec.selector(ctx)
+
+    # --- partial participation (chaos replay): same full-(N, 1) mask
+    #     the single-device epoch ANDs in, applied before slicing so the
+    #     local tile sees the identical selection ---
+    pmask = participation_mask_for(spec.delay_model, state.t)
+    if pmask is not None:
+        sel = sel & pmask
 
     # --- worker update (11)(12)(9) + select writes on the local tile ---
     y, w_cache, x = space_l.worker_select_update(

@@ -133,6 +133,16 @@ def sample_delay_model(dm, rng, n_workers: int, n_blocks: int, t):
     return dm.sample(rng, n_workers, n_blocks)
 
 
+def participation_mask_for(dm, t) -> Optional[jax.Array]:
+    """(N, 1) bool participation mask for epoch ``t``, or None when the
+    delay model has no notion of partial participation (every model but
+    :class:`TraceDelay` with recorded absences). Shared by the
+    single-device and SPMD epochs so both apply the identical
+    ``sel & mask`` contraction."""
+    fn = getattr(dm, "participation_mask", None)
+    return fn(t) if fn is not None else None
+
+
 @dataclasses.dataclass(frozen=True)
 class UniformDelay:
     """tau_ij ~ U{0..max_delay} i.i.d. per epoch — the seed's semantics."""
@@ -198,8 +208,21 @@ class TraceDelay:
     runtime's z trajectory exactly — pinned by tests/test_ps_runtime.py
     for both spaces, both backends, and the SPMD epoch. Epochs past the
     end of the trace clamp to its final round (replays are meant to run
-    exactly ``num_rounds`` epochs)."""
+    exactly ``num_rounds`` epochs).
+
+    ``participation`` (optional, (rounds, N) bool) encodes partial
+    participation from elastic/chaos runs: where False, worker i was
+    absent for round t (crashed, left, or not yet joined) and
+    contributed no edge updates. The epoch ANDs the mask into the
+    block-selection matrix, so an absent worker's y / w_cache / x rows
+    — and its server-cache contribution — stay frozen for that round,
+    exactly matching what a dead worker leaves behind on the servers
+    (the partial-participation regime of Chang et al.,
+    arXiv:1509.02597). Delay entries of absent rows may be recorded as
+    -1 (unobserved) and are sanitized to 0 here; they only feed the
+    gather for a row whose effect the mask discards."""
     delays: Any                       # (rounds, N, M) int array
+    participation: Any = None         # (rounds, N) bool, or None = all
     max_delay: int = dataclasses.field(init=False)
 
     def __post_init__(self):
@@ -207,7 +230,20 @@ class TraceDelay:
         if d.ndim != 3 or d.shape[0] < 1:
             raise ValueError(f"trace delays must be (rounds, N, M); "
                              f"got shape {d.shape}")
-        if d.min() < 0:
+        if self.participation is not None:
+            p = np.asarray(self.participation, bool)
+            if p.shape != d.shape[:2]:
+                raise ValueError(
+                    f"participation must be (rounds, N) = {d.shape[:2]}; "
+                    f"got shape {p.shape}")
+            if d[p].size and d[p].min() < 0:
+                raise ValueError("trace contains negative delays for "
+                                 "participating (round, worker) entries")
+            d = np.where(p[:, :, None], d, 0)
+            # normalize full participation to None so fault-free traces
+            # trace the exact pre-elasticity epoch graph
+            object.__setattr__(self, "participation", None if p.all() else p)
+        elif d.min() < 0:
             raise ValueError("trace contains negative delays")
         object.__setattr__(self, "delays", d)
         object.__setattr__(self, "max_delay", int(d.max()))
@@ -223,7 +259,18 @@ class TraceDelay:
     @classmethod
     def load(cls, path) -> "TraceDelay":
         from ..ps.trace import DelayTrace      # lazy: ps imports core.space
-        return cls(DelayTrace.load(path).delays)
+        return DelayTrace.load(path).to_delay_model()
+
+    def participation_mask(self, t) -> Optional[jax.Array]:
+        """(N, 1) bool mask for epoch ``t`` (clamped like ``sample``),
+        or None when the trace has full participation — the epoch then
+        skips the AND entirely, keeping fault-free replay graphs
+        identical to the pre-elasticity ones."""
+        if self.participation is None:
+            return None
+        R = self.participation.shape[0]
+        idx = jnp.clip(jnp.asarray(t, jnp.int32), 0, R - 1)
+        return jnp.asarray(self.participation)[idx][:, None]
 
     def sample(self, rng, n_workers, n_blocks, *, t=None):
         if t is None:
@@ -300,6 +347,39 @@ def cyclic_selector(ctx: SelectorContext) -> jax.Array:
     fallback = (~jnp.any(sel, axis=1, keepdims=True)
                 & select_blocks(ctx.rng, ctx.edge, ctx.block_fraction))
     return sel | fallback
+
+
+def make_zipf_selector(a: float = 1.1) -> BlockSelector:
+    """Hot/cold block skew: each worker still picks ~frac*M blocks from
+    its edge neighborhood, but block j is drawn with weight
+    ``(j+1)^-a`` — low-index blocks are hot, the tail is cold. This is
+    weighted sampling WITHOUT replacement via the Gumbel-top-k trick
+    (add log-weights to the Gumbel scores, then take the same top-k the
+    uniform selector uses), so determinism and the exact-count property
+    carry over from ``random_selector`` unchanged.
+
+    ``a`` is the Zipf exponent: 0 recovers the uniform selector's
+    distribution, ~1.1 matches web-style traffic skew, larger values
+    concentrate almost all traffic on the first few blocks. Registered
+    as ``"zipf"`` with the default exponent; pass
+    ``make_zipf_selector(a)`` (or ``ADMMConfig(zipf_a=...)``) to tune."""
+    if not np.isfinite(a) or a < 0.0:
+        raise ValueError(f"zipf exponent must be finite and >= 0; got {a}")
+
+    def zipf_selector(ctx: SelectorContext) -> jax.Array:
+        N, M = ctx.edge.shape
+        k = max(1, min(M, int(round(ctx.block_fraction * M))))
+        logw = -a * jnp.log(jnp.arange(1, M + 1, dtype=jnp.float32))
+        g = jax.random.gumbel(ctx.rng, (N, M)) + logw[None, :]
+        scored = jnp.where(ctx.edge, g, -jnp.inf)
+        thresh = jax.lax.top_k(scored, k)[0][:, -1:]
+        return (scored >= thresh) & ctx.edge
+
+    zipf_selector.gradient_free = True
+    return zipf_selector
+
+
+register_block_selector("zipf")(make_zipf_selector())
 
 
 @register_block_selector("gauss_southwell")
@@ -639,8 +719,13 @@ def make_spec(space, cfg, loss_fn, *, edge=None, rho_scale=None, reg=None,
         rho_vec = cfg.rho * jnp.asarray(rho_scale)
     if reg is None:
         reg = make_prox(cfg.l1_coef, cfg.clip)
-    sel = resolve_block_selector(
-        selector if selector is not None else cfg.block_selection)
+    sel_arg = selector if selector is not None else cfg.block_selection
+    if sel_arg == "zipf":
+        # honor the config's exponent — the registry entry carries the
+        # default a=1.1 only
+        sel = make_zipf_selector(getattr(cfg, "zipf_a", 1.1))
+    else:
+        sel = resolve_block_selector(sel_arg)
     if delay_model is None:
         delay_model = UniformDelay(cfg.max_delay)
     if minibatch is None:
@@ -711,6 +796,14 @@ def asybadmm_epoch(spec: ConsensusSpec, state: ConsensusState, data
                           block_fraction=spec.block_fraction,
                           grad_sqnorm=lambda: space.grad_sqnorm(g))
     sel = spec.selector(ctx)
+
+    # --- partial participation (elastic/chaos replay): absent workers
+    #     contribute no edge updates this round — their y/w_cache/x rows
+    #     and server-cache contributions stay frozen, matching what a
+    #     crashed worker leaves behind on the block servers ---
+    pmask = participation_mask_for(spec.delay_model, state.t)
+    if pmask is not None:
+        sel = sel & pmask
 
     # --- worker update (11)(12)(9) + the sel-masked merges, one fused
     #     pass over the worker bundles on the pallas backend ---

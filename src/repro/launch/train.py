@@ -41,7 +41,7 @@ def run_ps_training(session, args, pipe, enc_kw) -> None:
     t0 = time.time()
     result = session.run_ps(
         args.steps, discipline=args.discipline, record_z=False,
-        timing=timing,
+        timing=timing, faults=args.faults,
         batches=lambda t: pipe.batch(t, num_workers=args.workers, **enc_kw))
     for step in range(0, args.steps, max(args.log_every, 1)):
         print(json.dumps({"round": step,
@@ -56,6 +56,7 @@ def run_ps_training(session, args, pipe, enc_kw) -> None:
         "stall_time": round(m["stall_time"], 3),
         "max_served_tau": m["max_served_tau"],
         "commits": m["commits"], "pushes": m["pushes"],
+        "crashes": m.get("crashes", 0), "rejoins": m.get("rejoins", 0),
         "elapsed_s": round(time.time() - t0, 1)}), flush=True)
     if args.save_trace:
         path = result.trace.save(args.save_trace)
@@ -82,7 +83,11 @@ def main() -> None:
     ap.add_argument("--block-fraction", type=float, default=1.0)
     ap.add_argument("--num-blocks", type=int, default=8)
     ap.add_argument("--block-selection", default="random",
-                    choices=["random", "cyclic", "gauss_southwell"])
+                    choices=["random", "cyclic", "gauss_southwell", "zipf"])
+    ap.add_argument("--zipf-a", type=float, default=1.1,
+                    help="skew exponent for --block-selection zipf "
+                         "(block j sampled with weight (j+1)^-a; higher "
+                         "= hotter head blocks)")
     ap.add_argument("--backend", default="auto",
                     choices=["auto", "jnp", "pallas"],
                     help="epoch hot-path backend: fused Pallas kernels "
@@ -117,10 +122,16 @@ def main() -> None:
                          "stall-enforced bounded staleness, delay-trace "
                          "recording")
     ap.add_argument("--discipline", default="lockfree",
-                    choices=["lockfree", "locked"],
+                    choices=["lockfree", "locked", "per_push"],
                     help="--runtime ps coordination: per-block lock-free "
-                         "servers (the paper) vs one locked full-vector "
-                         "server (the prior-work baseline)")
+                         "servers (the paper), one locked full-vector "
+                         "server (the prior-work baseline), or per-block "
+                         "servers paying commit work eagerly per push")
+    ap.add_argument("--faults", default=None,
+                    help="--runtime ps: FaultPlan JSON injecting worker "
+                         "crash/rejoin, join/leave churn, slowdowns and "
+                         "server commit spikes (see API.md's elastic-PS "
+                         "section for the schema)")
     ap.add_argument("--save-trace", default=None,
                     help="path to save the --runtime ps DelayTrace "
                          "(.npz) for later --delay-model trace replay")
@@ -159,6 +170,7 @@ def main() -> None:
                           block_fraction=args.block_fraction,
                           num_blocks=args.num_blocks,
                           block_selection=args.block_selection,
+                          zipf_a=args.zipf_a,
                           backend=args.backend,
                           mesh=args.mesh,
                           minibatch=args.minibatch,

@@ -6,13 +6,18 @@ into executable, measurable, replayable scenarios:
 
 * :class:`EventScheduler` — deterministic discrete-event clock;
 * :class:`BlockServerProc` + ``DISCIPLINES`` — per-block ``lockfree``
-  servers vs the ``locked`` full-vector baseline (paper §1);
+  servers vs the ``locked`` full-vector baseline (paper §1), plus the
+  eager ``per_push`` commit discipline;
 * :class:`WorkerProc` — workers running the REAL jitted
   ``VariableSpace`` hot path (jnp and pallas);
 * :class:`StalenessEnforcer` — stalls pulls that would violate
   ``tau <= T`` instead of silently clipping;
-* :class:`DelayTrace` — records what happened; replays through the
-  fast ``asybadmm_epoch`` via ``core.space.TraceDelay`` exactly;
+* :class:`FaultPlan` / :class:`FaultInjector` +
+  :class:`MembershipManager` — deterministic chaos (crash / rejoin /
+  join / leave / slowdown / server spikes) over an elastic fleet;
+* :class:`DelayTrace` — records what happened (staleness + partial
+  participation + chaos events); replays through the fast
+  ``asybadmm_epoch`` via ``core.space.TraceDelay`` exactly;
 * :class:`PSRuntime` / :class:`PSRunResult` — the front door, also
   reachable as ``ConsensusSession.run_ps(...)`` and
   ``repro.launch.train --runtime ps``.
@@ -20,11 +25,13 @@ into executable, measurable, replayable scenarios:
 See API.md's "PS runtime" section for the scheduler model, the trace
 format, and the runtime-vs-epoch decision guide.
 """
+from .chaos import FaultEvent, FaultInjector, FaultPlan
 from .engine import SpaceEngine
 from .events import EventScheduler
+from .membership import MembershipManager
 from .runtime import PSRunResult, PSRuntime
-from .server import (BlockServerProc, DISCIPLINES, register_discipline,
-                     resolve_discipline)
+from .server import (BlockServerProc, Discipline, DISCIPLINES,
+                     register_discipline, resolve_discipline)
 from .staleness import StalenessEnforcer
 from .timing import (SERVICE_MODELS, ConstantService, CostProfile,
                      LognormalService, NetworkModel, ParetoService,
@@ -34,9 +41,10 @@ from .worker import WorkerProc
 
 __all__ = [
     "SpaceEngine", "EventScheduler", "PSRunResult", "PSRuntime",
-    "BlockServerProc", "DISCIPLINES", "register_discipline",
+    "BlockServerProc", "Discipline", "DISCIPLINES", "register_discipline",
     "resolve_discipline", "StalenessEnforcer", "SERVICE_MODELS",
     "ConstantService", "CostProfile", "LognormalService", "NetworkModel",
     "ParetoService", "ServiceModel", "as_network", "as_service",
     "measure_costs", "DelayTrace", "WorkerProc",
+    "FaultEvent", "FaultInjector", "FaultPlan", "MembershipManager",
 ]

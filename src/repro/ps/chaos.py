@@ -1,0 +1,277 @@
+"""Deterministic fault injection for the PS runtime.
+
+A :class:`FaultPlan` is a declarative, JSON-serializable timeline of
+chaos events; the :class:`FaultInjector` turns it into scheduler events
+and service-time multipliers inside one ``PSRuntime.run``. Everything
+is deterministic: event times are fixed by the plan, stochastic plan
+*generation* (:meth:`FaultPlan.churn`) uses the runtime's seeded
+per-entity rng convention (``np.random.default_rng([seed, tag])``), and
+multipliers scale the draws the per-entity generators were already
+making — so a chaos run is exactly as replayable as a fault-free one,
+and its recorded :class:`~repro.ps.trace.DelayTrace` (staleness +
+participation) reproduces the z trajectory through ``asybadmm_epoch``.
+
+Event kinds
+-----------
+``crash``        worker ``worker`` dies at sim time ``at``; with
+                 ``duration`` it restarts after that much downtime
+                 (membership resumes it at the service frontier),
+                 without it stays down for good.
+``leave``        permanent departure (sugar for a crash without
+                 restart, recorded distinctly in the trace events).
+``join``         ``worker`` is NOT in the initial fleet; it boots cold
+                 at ``at`` and joins at the frontier. Join workers must
+                 still be counted in the spec's N — they own edge rows;
+                 membership just keeps them absent until activation.
+``slowdown``     worker's compute service draws are multiplied by
+                 ``factor`` during [at, at+duration) — a transient
+                 straggler.
+``server_spike`` commit-service draws of the lock domain holding block
+                 ``block`` are multiplied by ``factor`` during
+                 [at, at+duration) — a slow/hot server.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+from collections import defaultdict
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+FAULT_KINDS = ("crash", "leave", "join", "slowdown", "server_spike")
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultEvent:
+    kind: str
+    at: float
+    worker: Optional[int] = None
+    block: Optional[int] = None
+    duration: Optional[float] = None
+    factor: Optional[float] = None
+
+    def validate(self, num_workers: Optional[int] = None,
+                 num_blocks: Optional[int] = None) -> "FaultEvent":
+        if self.kind not in FAULT_KINDS:
+            raise ValueError(f"unknown fault kind {self.kind!r}; expected "
+                             f"one of {FAULT_KINDS}")
+        if not np.isfinite(self.at) or self.at < 0.0:
+            raise ValueError(f"fault time must be finite and >= 0; got "
+                             f"at={self.at} for {self.kind}")
+        needs_worker = self.kind in ("crash", "leave", "join", "slowdown")
+        if needs_worker:
+            if self.worker is None:
+                raise ValueError(f"{self.kind} event needs a worker id")
+            if num_workers is not None and not 0 <= self.worker < num_workers:
+                raise ValueError(f"{self.kind} worker {self.worker} outside "
+                                 f"[0, {num_workers})")
+        if self.kind == "server_spike":
+            if self.block is None:
+                raise ValueError("server_spike event needs a block id")
+            if num_blocks is not None and not 0 <= self.block < num_blocks:
+                raise ValueError(f"server_spike block {self.block} outside "
+                                 f"[0, {num_blocks})")
+        if self.kind in ("slowdown", "server_spike"):
+            if self.duration is None or self.duration <= 0.0:
+                raise ValueError(f"{self.kind} needs duration > 0; got "
+                                 f"{self.duration}")
+            if self.factor is None or not np.isfinite(self.factor) \
+                    or self.factor <= 0.0:
+                raise ValueError(f"{self.kind} needs a finite factor > 0; "
+                                 f"got {self.factor}")
+        if self.kind == "crash" and self.duration is not None \
+                and self.duration <= 0.0:
+            raise ValueError(f"crash downtime must be > 0 (or omitted for "
+                             f"a permanent crash); got {self.duration}")
+        return self
+
+    def to_dict(self) -> Dict:
+        return {k: v for k, v in dataclasses.asdict(self).items()
+                if v is not None}
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultPlan:
+    events: Tuple[FaultEvent, ...] = ()
+
+    def __post_init__(self):
+        evs = tuple(e if isinstance(e, FaultEvent) else FaultEvent(**e)
+                    for e in self.events)
+        object.__setattr__(self, "events", evs)
+
+    def validate(self, num_workers: Optional[int] = None,
+                 num_blocks: Optional[int] = None) -> "FaultPlan":
+        for e in self.events:
+            e.validate(num_workers, num_blocks)
+        # one membership timeline per worker: a worker is either in the
+        # initial fleet or a cold joiner, never both
+        joiners = self.cold_workers
+        for e in self.events:
+            if e.kind == "join" and sum(
+                    1 for x in self.events
+                    if x.kind == "join" and x.worker == e.worker) > 1:
+                raise ValueError(f"worker {e.worker} has multiple join "
+                                 f"events; use crash+duration for churn")
+        for e in self.events:
+            if e.kind in ("crash", "leave") and e.worker in joiners \
+                    and e.at <= min(x.at for x in self.events
+                                    if x.kind == "join"
+                                    and x.worker == e.worker):
+                raise ValueError(f"worker {e.worker} crashes/leaves before "
+                                 f"its join event")
+        return self
+
+    @property
+    def cold_workers(self) -> frozenset:
+        """Workers that boot cold (join events) — excluded from the
+        initial fleet by the runtime."""
+        return frozenset(e.worker for e in self.events if e.kind == "join")
+
+    # ---- construction helpers ---------------------------------------------
+    @classmethod
+    def of(cls, *events: FaultEvent) -> "FaultPlan":
+        return cls(tuple(events)).validate()
+
+    @staticmethod
+    def crash(worker: int, at: float, down: Optional[float] = None
+              ) -> FaultEvent:
+        return FaultEvent("crash", at, worker=worker, duration=down)
+
+    @staticmethod
+    def leave(worker: int, at: float) -> FaultEvent:
+        return FaultEvent("leave", at, worker=worker)
+
+    @staticmethod
+    def join(worker: int, at: float) -> FaultEvent:
+        return FaultEvent("join", at, worker=worker)
+
+    @staticmethod
+    def slowdown(worker: int, at: float, duration: float, factor: float
+                 ) -> FaultEvent:
+        return FaultEvent("slowdown", at, worker=worker, duration=duration,
+                          factor=factor)
+
+    @staticmethod
+    def server_spike(block: int, at: float, duration: float, factor: float
+                     ) -> FaultEvent:
+        return FaultEvent("server_spike", at, block=block, duration=duration,
+                          factor=factor)
+
+    @classmethod
+    def churn(cls, num_workers: int, *, seed: int = 0, crashes: int = 2,
+              window: Tuple[float, float] = (2.0, 10.0),
+              down: Tuple[float, float] = (2.0, 6.0)) -> "FaultPlan":
+        """A deterministic random crash+rejoin plan: ``crashes`` distinct
+        workers crash at times ~ U(window) and restart after downtime
+        ~ U(down). Draws come from the runtime's per-entity rng
+        convention (``default_rng([seed, 77])``), so the same seed
+        yields the same plan everywhere."""
+        if crashes > num_workers:
+            raise ValueError(f"cannot crash {crashes} of {num_workers} "
+                             f"workers")
+        rng = np.random.default_rng([seed, 77])
+        victims = rng.choice(num_workers, size=crashes, replace=False)
+        evs = []
+        for i in victims:
+            at = float(rng.uniform(*window))
+            dt = float(rng.uniform(*down))
+            evs.append(cls.crash(int(i), at, dt))
+        return cls(tuple(evs)).validate(num_workers)
+
+    # ---- persistence ------------------------------------------------------
+    def to_json(self) -> str:
+        return json.dumps({"events": [e.to_dict() for e in self.events]},
+                          indent=2)
+
+    @classmethod
+    def from_json(cls, text: str) -> "FaultPlan":
+        obj = json.loads(text)
+        return cls(tuple(FaultEvent(**e) for e in obj.get("events", ())
+                         )).validate()
+
+    def save(self, path: str) -> str:
+        with open(path, "w") as f:
+            f.write(self.to_json())
+        return path
+
+    @classmethod
+    def load(cls, path: str) -> "FaultPlan":
+        with open(path) as f:
+            return cls.from_json(f.read())
+
+
+class FaultInjector:
+    """Drives one runtime's chaos: schedules the plan's membership
+    transitions and answers multiplier queries for service draws.
+
+    The injector never touches numerics — it only moves membership
+    state (through ``PSRuntime._crash_worker`` / ``_rejoin_worker``)
+    and scales the durations the per-entity rngs already drew, so the
+    recorded trace stays the single source of replay truth."""
+
+    def __init__(self, plan: Optional[FaultPlan], runtime):
+        self.plan = plan if plan is not None else FaultPlan()
+        self.rt = runtime
+        self._worker_windows = defaultdict(list)   # i -> [(s, e, factor)]
+        self._block_windows = defaultdict(list)    # j -> [(s, e, factor)]
+        for e in self.plan.events:
+            if e.kind == "slowdown":
+                self._worker_windows[e.worker].append(
+                    (e.at, e.at + e.duration, e.factor))
+            elif e.kind == "server_spike":
+                self._block_windows[e.block].append(
+                    (e.at, e.at + e.duration, e.factor))
+
+    def install(self) -> None:
+        """Schedule the plan's membership transitions (before t=0
+        worker starts, so same-time ties resolve plan-first —
+        deterministically either way, by insertion seq)."""
+        sched = self.rt.sched
+        for e in self.plan.events:
+            if e.kind in ("slowdown", "server_spike"):
+                # factor windows are queried, not scheduled — log them
+                # into the trace timeline up front
+                self.rt.trace.add_event(e.kind, **{
+                    k: v for k, v in e.to_dict().items() if k != "kind"})
+            if e.kind == "crash":
+                sched.at(e.at, lambda i=e.worker:
+                         self.rt._crash_worker(i))
+                if e.duration is not None:
+                    sched.at(e.at + e.duration, lambda i=e.worker:
+                             self.rt._rejoin_worker(i))
+            elif e.kind == "leave":
+                sched.at(e.at, lambda i=e.worker:
+                         self.rt._crash_worker(i, permanent=True))
+            elif e.kind == "join":
+                sched.at(e.at, lambda i=e.worker:
+                         self.rt._rejoin_worker(i, cold=True))
+
+    # ---- multiplier queries -----------------------------------------------
+    @staticmethod
+    def _factor(windows, now: float) -> float:
+        f = 1.0
+        for (s, e, fac) in windows:
+            if s <= now < e:
+                f *= fac
+        return f
+
+    def worker_factor(self, i: int, now: float) -> float:
+        """Compute-service multiplier for worker i at sim time ``now``."""
+        w = self._worker_windows.get(i)
+        return self._factor(w, now) if w else 1.0
+
+    def server_factor(self, block_ids, now: float) -> float:
+        """Commit-service multiplier for a lock domain holding
+        ``block_ids`` at sim time ``now`` (spikes compose across the
+        held blocks — a locked full-vector domain feels every spike)."""
+        f = 1.0
+        for j in block_ids:
+            w = self._block_windows.get(j)
+            if w:
+                f *= self._factor(w, now)
+        return f
+
+    @property
+    def empty(self) -> bool:
+        return not self.plan.events

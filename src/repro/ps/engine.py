@@ -81,15 +81,21 @@ class SpaceEngine:
         return self._keys[t]
 
     def needs_grads_for_select(self) -> bool:
-        """Whether the selector must see real gradient norms. Only the
-        built-in ``random``/``cyclic`` policies are known gradient-free;
-        everything else (gauss_southwell, custom registrations) is
-        conservatively fed worker i's true grad_sqnorm row — the
+        """Whether the selector must see real gradient norms. The
+        built-in ``random``/``cyclic`` policies are known gradient-free,
+        as is any selector carrying a truthy ``gradient_free`` attribute
+        (the ``zipf`` family sets it — ``make_zipf_selector`` returns
+        fresh closures, so identity against the registry can't cover
+        them); everything else (gauss_southwell, custom registrations)
+        is conservatively fed worker i's true grad_sqnorm row — the
         runtime evaluates the selector at full (N, M) shape with only
         that row live, so any selector whose row i depends only on row
         i of grad_sqnorm replays exactly."""
-        return self.spec.selector not in (BLOCK_SELECTORS.get("random"),
-                                          BLOCK_SELECTORS.get("cyclic"))
+        sel = self.spec.selector
+        if getattr(sel, "gradient_free", False):
+            return False
+        return sel not in (BLOCK_SELECTORS.get("random"),
+                           BLOCK_SELECTORS.get("cyclic"))
 
     def select(self, t: int, i: int, gnorm_row) -> np.ndarray:
         """Worker i's round-t block selection — the epoch's selector

@@ -14,6 +14,16 @@ One call, two products:
 Numerics run through :class:`~repro.ps.engine.SpaceEngine` (the real
 jitted ``VariableSpace`` ops); ``compute="timing"`` skips them for
 pure coordination studies (``benchmarks/speedup.py``).
+
+Chaos/elasticity (``faults=``): a :class:`~repro.ps.chaos.FaultPlan`
+injects worker crash/restart, permanent leaves, cold joins, transient
+compute slowdowns and server commit-latency spikes into the run. The
+:class:`~repro.ps.membership.MembershipManager` keeps commit gates and
+participation straight (rounds a worker missed contribute no edge
+updates), the StalenessEnforcer treats rejoin as a version reset, and
+the recorded trace carries the participation matrix + the chaos event
+timeline — replay parity holds for chaos runs exactly as for
+fault-free ones.
 """
 from __future__ import annotations
 
@@ -23,8 +33,10 @@ from typing import Any, Dict, List, Optional
 import numpy as np
 
 from ..core.space import ConsensusSpec
+from .chaos import FaultInjector, FaultPlan
 from .engine import SpaceEngine
 from .events import EventScheduler
+from .membership import MembershipManager
 from .server import BlockServerProc, resolve_discipline
 from .staleness import StalenessEnforcer
 from .timing import CostProfile
@@ -44,11 +56,19 @@ class PSRunResult:
     trace: DelayTrace
     z_final: Optional[Any]               # final consensus value (real mode)
     z_versions: Optional[List[Any]]      # z per version 0..R (record_z)
-    losses: Optional[List[float]]        # mean worker loss per round
+    losses: Optional[List[float]]        # mean participant loss per round
     metrics: Dict[str, Any]
 
     def to_delay_model(self):
         return self.trace.to_delay_model()
+
+
+def _hist(values, bins: int = 8) -> Dict[str, list]:
+    vals = np.asarray(list(values), np.float64)
+    if vals.size == 0:
+        vals = np.zeros(1)
+    counts, edges = np.histogram(vals, bins=bins)
+    return {"counts": counts.tolist(), "edges": [float(e) for e in edges]}
 
 
 class PSRuntime:
@@ -60,14 +80,17 @@ class PSRuntime:
                  compute: str = "real",
                  seed: Optional[int] = None,
                  staleness_bound: Optional[int] = None,
-                 record_z: bool = True):
+                 record_z: bool = True,
+                 faults: Optional[FaultPlan] = None):
         if compute not in ("real", "timing"):
             raise ValueError(f"compute must be 'real' or 'timing'; "
                              f"got {compute!r}")
         self.spec = spec
         self.engine = SpaceEngine(spec)
         self.discipline = discipline
-        self.groups = resolve_discipline(discipline)(self.engine.M)
+        disc = resolve_discipline(discipline)
+        self.groups = disc.groups(self.engine.M)
+        self.per_push = disc.per_push
         covered = sorted(j for g in self.groups for j in g)
         if covered != list(range(self.engine.M)):
             raise ValueError(f"discipline {discipline!r} does not "
@@ -85,6 +108,8 @@ class PSRuntime:
         # serves staler, so its trace replays within the same depth
         self.bound = (spec.delay_model.depth - 1 if staleness_bound is None
                       else int(staleness_bound))
+        self.faults = faults.validate(self.engine.N, self.engine.M) \
+            if faults is not None else None
         self._fixed_data = data
         self._batches = batches
         if not self.timing_only and data is None and batches is None:
@@ -94,8 +119,8 @@ class PSRuntime:
             raise ValueError(
                 "this block selector may read gradient norms "
                 "(gauss_southwell / custom policies); run the PS runtime "
-                "with compute='real', or pick the gradient-free random/"
-                "cyclic selectors for timing studies)")
+                "with compute='real', or pick a gradient-free selector "
+                "(random/cyclic/zipf) for timing studies)")
 
     # ------------------------------------------------------------------
     def run(self, num_rounds: int, z0=None) -> PSRunResult:
@@ -113,6 +138,13 @@ class PSRuntime:
             if not self.timing_only else None
         self._data_cache: Dict[int, Any] = {}
         self._data_refs: Dict[int, int] = {}
+
+        # --- chaos + elastic membership ---
+        self.injector = FaultInjector(self.faults, self)
+        cold = self.faults.cold_workers if self.faults is not None \
+            else frozenset()
+        self.membership = MembershipManager(eng.N, num_rounds, cold=cold)
+        elastic = self.faults is not None and bool(self.faults.events)
 
         # --- numeric state (Algorithm 1 lines 1-2) ---
         if self.timing_only:
@@ -140,7 +172,10 @@ class PSRuntime:
                 contents0={j: contents0[j] for j in block_ids},
                 caches0={j: caches0[j] for j in block_ids}
                 if not self.timing_only else {},
-                timing_only=self.timing_only))
+                timing_only=self.timing_only, per_push=self.per_push,
+                membership=self.membership if elastic else None,
+                fault_factor=self.injector.server_factor
+                if not self.injector.empty else None))
         self.domain_of_block = [None] * eng.M
         for dom in self.domains:
             for j in dom.block_ids:
@@ -150,10 +185,12 @@ class PSRuntime:
             for i in range(eng.N)]
 
         # --- launch ---
-        workers = self._workers = [WorkerProc(i, self)
+        workers = self._workers = [WorkerProc(i, self, cold=i in cold)
                                    for i in range(eng.N)]
+        self.injector.install()
         for wk in workers:
-            self.sched.at(0.0, wk.start)
+            if wk.alive:
+                self.sched.at(0.0, wk.start)
         for dom in self.domains:
             # blocks with an empty edge neighborhood still commit every
             # round (prox-only decay, as the epoch does)
@@ -162,14 +199,16 @@ class PSRuntime:
 
         # --- invariants ---
         for wk in workers:
-            if wk.rounds_done != num_rounds:
+            expect = self.membership.participated_rounds(wk.i)
+            if wk.rounds_done != expect:
                 raise RuntimeError(f"worker {wk.i} finished "
-                                   f"{wk.rounds_done}/{num_rounds} rounds "
-                                   f"— runtime deadlock?")
+                                   f"{wk.rounds_done}/{expect} participated "
+                                   f"rounds — runtime deadlock?")
         for dom in self.domains:
             if dom.version != num_rounds:
                 raise RuntimeError(f"lock domain {dom.sid} committed "
                                    f"{dom.version}/{num_rounds} versions")
+        self.trace.set_participation(self.membership.participation_matrix())
         self.trace.validate()
         assert self.enforcer.idle
 
@@ -186,8 +225,20 @@ class PSRuntime:
             if self.record_z:
                 z_versions = [z_at(v) for v in range(num_rounds + 1)]
             z_final = z_versions[-1] if z_versions else z_at(num_rounds)
-            losses = [float(np.mean(l)) for l in self._losses]
+            # mean over the round's PARTICIPANTS (all workers when
+            # fault-free); a round everyone missed reports nan
+            losses = [float(np.mean(l)) if l else float("nan")
+                      for l in self._losses]
 
+        N = eng.N
+        stall_time_pw = [self.enforcer.stall_time_by_worker.get(i, 0.0)
+                         for i in range(N)]
+        stall_count_pw = [self.enforcer.stall_count_by_worker.get(i, 0)
+                          for i in range(N)]
+        busy_frac = [d.busy_time / makespan if makespan > 0 else 0.0
+                     for d in self.domains]
+        participated = [self.membership.participated_rounds(i)
+                        for i in range(N)]
         metrics = dict(self.enforcer.stats())
         metrics.update(
             makespan=makespan,
@@ -195,7 +246,17 @@ class PSRuntime:
             commits=sum(d.commits for d in self.domains),
             pushes=sum(d.pushes for d in self.domains),
             server_busy_time=[d.busy_time for d in self.domains],
-            worker_iterations=eng.N * num_rounds)
+            server_busy_frac=busy_frac,
+            server_wait_time=[d.wait_time for d in self.domains],
+            stall_time_per_worker=stall_time_pw,
+            stall_count_per_worker=stall_count_pw,
+            participated_rounds=participated,
+            worker_iterations=sum(participated),
+            crashes=self.membership.crashes,
+            rejoins=self.membership.rejoins,
+            histograms={
+                "worker_stall_time": _hist(stall_time_pw),
+                "server_occupancy": _hist(busy_frac)})
         self.trace.meta.update(
             seed=self.seed, makespan=makespan,
             discipline=self.discipline,
@@ -204,10 +265,56 @@ class PSRuntime:
             net_jitter=self.net.jitter if self.net else 0.0,
             stall_count=metrics["stall_count"],
             max_served_tau=metrics["max_served_tau"])
+        if elastic:
+            self.trace.meta.update(
+                fault_events=len(self.faults.events),
+                crashes=self.membership.crashes,
+                rejoins=self.membership.rejoins)
         return PSRunResult(makespan=makespan, num_rounds=num_rounds,
                            discipline=self.discipline, trace=self.trace,
                            z_final=z_final, z_versions=z_versions,
                            losses=losses, metrics=metrics)
+
+    # ------------------------------------------------------------------
+    # chaos transitions (driven by the FaultInjector's scheduled events)
+    # ------------------------------------------------------------------
+    def _crash_worker(self, i: int, permanent: bool = False) -> None:
+        wk = self._workers[i]
+        if not wk.alive or wk.t >= self.num_rounds:
+            return                     # already down / already finished
+        r = wk.t                       # the round it never declared
+        wk.kill()
+        self.membership.deactivate(i, r)
+        self.enforcer.drop_worker(i)
+        self.trace.add_event("leave" if permanent else "crash",
+                             worker=i, round=r, time=self.sched.now)
+        # gates waiting on this worker's declaration must re-check
+        for dom in self.domains_of_worker[i]:
+            dom._maybe_commit()
+        self._maybe_evict_data(r)
+
+    def _rejoin_worker(self, i: int, cold: bool = False) -> None:
+        wk = self._workers[i]
+        if wk.alive:
+            return                     # crash was a no-op (already done)
+        doms = self.domains_of_worker[i]
+        # service frontier: one past the newest version any edge domain
+        # has committed OR is committing — strictly-future gates only,
+        # so resumption never races an in-flight commit whose gate
+        # already passed without this worker
+        frontier = max((d.version + (1 if d._committing else 0)
+                        for d in doms), default=0)
+        r = max(wk.t, frontier + 1)
+        kind = "join" if cold else "rejoin"
+        if r >= self.num_rounds:
+            # nothing left to participate in — stays absent to the end
+            self.trace.add_event(kind, worker=i, round=None,
+                                 time=self.sched.now, effective=False)
+            return
+        self.membership.activate(i, r)
+        self.enforcer.note_rejoin()
+        self.trace.add_event(kind, worker=i, round=r, time=self.sched.now)
+        wk.revive(r)
 
     # ------------------------------------------------------------------
     # per-round data (minibatched through the epoch's key chain)
@@ -223,9 +330,17 @@ class PSRuntime:
     def data_done(self, t: int) -> None:
         if t in self._data_refs:
             self._data_refs[t] += 1
-            if self._data_refs[t] >= self.engine.N:
-                del self._data_cache[t]
-                del self._data_refs[t]
+            self._maybe_evict_data(t)
+
+    def _expected_consumers(self, t: int) -> int:
+        return sum(1 for i in range(self.engine.N)
+                   if self.membership.required(i, t))
+
+    def _maybe_evict_data(self, t: int) -> None:
+        if t in self._data_refs \
+                and self._data_refs[t] >= self._expected_consumers(t):
+            del self._data_cache[t]
+            del self._data_refs[t]
 
     def record_loss(self, t: int, i: int, loss) -> None:
         self._losses[t].append(float(loss))
@@ -233,10 +348,15 @@ class PSRuntime:
     def on_worker_progress(self) -> None:
         """A worker advanced a round: without full-trajectory recording,
         drop block versions no worker can legally read anymore
-        (< min worker round - T)."""
+        (< min worker round - T). Absent workers resume at one past the
+        newest committed version, so counting ``1 + max version`` for
+        them keeps every version a future rejoiner could read."""
         if self.record_z or self.timing_only:
             return
-        thr = min(wk.t for wk in self._workers) - self.bound
+        live = [wk.t for wk in self._workers if wk.alive]
+        if len(live) < len(self._workers):
+            live.append(1 + max(d.version for d in self.domains))
+        thr = min(live) - self.bound
         if thr > 0:
             for dom in self.domains:
                 dom.prune(thr)

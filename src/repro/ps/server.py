@@ -4,54 +4,86 @@ The paper's headline architectural claim is that block-wise servers
 need NO global lock: a push to block j occupies only server j, so
 different blocks commit concurrently, while all prior async consensus
 ADMM (Chang et al. 2015; Zhang & Kwok 2014) serializes every update
-through one full-vector lock. Both disciplines here are the SAME
-server implementation grouped differently:
+through one full-vector lock. All disciplines here are the SAME server
+implementation grouped (and commit-scheduled) differently:
 
-* ``lockfree`` — M lock domains, one block each; commit cost is one
-  block's prox service time;
+* ``lockfree`` — M lock domains, one block each; round-buffered: the
+  round's pushes apply and the block proxes once, at the round-v
+  commit, paying one commit service time;
 * ``locked``   — ONE lock domain holding every block; all pushes queue
   on it and each commit pays the per-block service time M times, under
-  the lock.
+  the lock;
+* ``per_push`` — M per-block domains with **per-push commits**: the
+  server does its fold/prox work eagerly as each push is processed
+  through the queue (each push pays ``push_cost`` + one commit-service
+  draw), so the round-boundary version *publish* is a pointer bump —
+  free when the round folded at least one push, one commit-service
+  draw for push-less (prox-only) rounds. The commit *fold* is the same
+  round-ordered application lockfree does (given the same pushes, the
+  published version is bit-identical), but the commit latency moves
+  off the round boundary into the push stream — versions publish at
+  different sim times, workers observe different staleness, and the
+  run explores a different (still deterministic, still
+  replay-exact) trajectory than lockfree. That timing shift is the
+  point: fewer round-boundary stalls when declarations arrive spread
+  out, longer queues on hot blocks under skew.
 
 A lock domain commits version v+1 of its blocks once (a) it has heard
 a round-v declaration (push or skip) from every worker in its edge
-neighborhood, (b) all round-v pushes have been processed through its
-queue, and (c) version v is committed. Pushes that arrive EARLY (a
+neighborhood that is ACTIVE for round v (elastic membership: crashed /
+departed / not-yet-joined workers are excluded, so churn never
+deadlocks a gate), (b) all round-v pushes have been processed through
+its queue, and (c) version v is committed. Pushes that arrive EARLY (a
 worker running up to T rounds ahead under bounded staleness) buffer
 per round and apply to the stale-w~ cache only at their round's commit
 — that round-ordering is what makes a recorded trace replay through
 the vectorized epoch exactly. Commits cap at ``num_rounds``: versions
 beyond the horizon would never be read.
 
-``DISCIPLINES`` is the pluggable grouping registry (block ids ->
-lock domains); register custom groupings (e.g. shard-pair servers)
-with :func:`register_discipline`. Block ids follow the packed block
-layout's contract (``core.blocks.BlockLayout``): block j is row j of
-the canonical (M, dblk) table for BOTH spaces — a pytree model's lock
-domains are the same objects as a flat vector's, so ``lockfree`` vs
-``locked`` (and any custom grouping) behave identically in pytree
-mode.
+``DISCIPLINES`` maps names to :class:`Discipline` entries (a block ->
+lock-domain grouping plus the commit mode); register custom groupings
+(e.g. shard-pair servers) with :func:`register_discipline`. Block ids
+follow the packed block layout's contract
+(``core.blocks.BlockLayout``): block j is row j of the canonical
+(M, dblk) table for BOTH spaces — a pytree model's lock domains are
+the same objects as a flat vector's, so every discipline behaves
+identically in pytree mode.
 """
 from __future__ import annotations
 
+import dataclasses
 from collections import defaultdict
-from typing import Callable, Dict, List, Sequence, Tuple
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
 
 # ---------------------------------------------------------------------------
-# coordination disciplines = block -> lock-domain groupings
+# coordination disciplines = block -> lock-domain groupings + commit mode
 # ---------------------------------------------------------------------------
 
 DisciplineFn = Callable[[int], List[Tuple[int, ...]]]
 
-DISCIPLINES: Dict[str, DisciplineFn] = {}
+
+@dataclasses.dataclass(frozen=True)
+class Discipline:
+    """A named coordination discipline: how blocks group into lock
+    domains (``groups(num_blocks)``) and whether commit work is paid
+    per push (eager) or per round (buffered)."""
+    groups: DisciplineFn
+    per_push: bool = False
 
 
-def register_discipline(name: str):
+DISCIPLINES: Dict[str, Discipline] = {}
+
+
+def register_discipline(name: str, *, per_push: bool = False):
+    """Register a grouping fn under ``name``. The decorated callable
+    keeps its plain ``fn(num_blocks) -> groups`` signature (existing
+    custom registrations stay valid); ``per_push=True`` marks the
+    discipline's commit work as paid eagerly per push."""
     def deco(fn: DisciplineFn) -> DisciplineFn:
-        DISCIPLINES[name] = fn
+        DISCIPLINES[name] = Discipline(fn, per_push)
         return fn
     return deco
 
@@ -68,7 +100,13 @@ def locked_domains(num_blocks: int) -> List[Tuple[int, ...]]:
     return [tuple(range(num_blocks))]
 
 
-def resolve_discipline(name: str) -> DisciplineFn:
+@register_discipline("per_push", per_push=True)
+def per_push_domains(num_blocks: int) -> List[Tuple[int, ...]]:
+    """Per-block servers with eager (per-push) commit work."""
+    return [(j,) for j in range(num_blocks)]
+
+
+def resolve_discipline(name: str) -> Discipline:
     try:
         return DISCIPLINES[name]
     except KeyError:
@@ -91,7 +129,8 @@ class BlockServerProc:
                  enforcer, commit_service, push_cost: float,
                  rng: np.random.Generator, num_rounds: int,
                  edge_workers: frozenset, contents0: dict, caches0: dict,
-                 timing_only: bool):
+                 timing_only: bool, per_push: bool = False,
+                 membership=None, fault_factor=None):
         self.sid = sid
         self.block_ids = tuple(block_ids)
         self.engine = engine
@@ -103,6 +142,10 @@ class BlockServerProc:
         self.num_rounds = num_rounds
         self.edge_workers = edge_workers
         self.timing_only = timing_only
+        self.per_push = per_push
+        self.membership = membership
+        # chaos hook: commit-latency multiplier at a sim time
+        self._fault_factor = fault_factor
 
         self.version = 0
         # contents[j][v] = block j's committed content at version v
@@ -117,18 +160,29 @@ class BlockServerProc:
         self._committing = False
         self.busy_until = 0.0
         self.busy_time = 0.0
+        self.wait_time = 0.0
+        self.wait_count = 0
         self.commits = 0
         self.pushes = 0
 
     # ---- queue occupancy --------------------------------------------------
     def _occupy(self, duration: float) -> float:
         """Serialize ``duration`` of work through this lock domain's
-        queue; returns the completion time."""
+        queue; returns the completion time. Accounts the queueing delay
+        of the newly enqueued item (time it sat behind earlier work)."""
         start = max(self.sched.now, self.busy_until)
         done = start + duration
+        self.wait_time += start - self.sched.now
+        self.wait_count += 1
         self.busy_until = done
         self.busy_time += duration
         return done
+
+    def _commit_sample(self) -> float:
+        dur = self.commit_service.sample(self.rng)
+        if self._fault_factor is not None:
+            dur *= self._fault_factor(self.block_ids, self.sched.now)
+        return dur
 
     # ---- worker-facing API ------------------------------------------------
     def on_declare(self, i: int, t: int, pushes: list) -> None:
@@ -142,7 +196,13 @@ class BlockServerProc:
         for (j, value) in pushes:
             self.pushes += 1
             self._unprocessed[t] += 1
-            done = self._occupy(self.push_cost)
+            # per-push discipline: the server folds/proxes eagerly as it
+            # processes the push, so the commit-service draw is paid
+            # HERE instead of at the round-boundary publish
+            cost = self.push_cost
+            if self.per_push:
+                cost += self._commit_sample()
+            done = self._occupy(cost)
             self.sched.at(done, lambda t=t, i=i, j=j, v=value:
                           self._push_processed(t, i, j, v))
         self._maybe_commit()
@@ -153,24 +213,39 @@ class BlockServerProc:
         self._maybe_commit()
 
     # ---- commit machinery -------------------------------------------------
+    def _required_declarations(self, v: int) -> frozenset:
+        """Who round v's gate waits on: the edge neighborhood, minus
+        workers elastic membership marks absent for round v."""
+        if self.membership is None:
+            return self.edge_workers
+        return frozenset(i for i in self.edge_workers
+                         if self.membership.required(i, v))
+
     def _maybe_commit(self) -> None:
         v = self.version
         if self._committing or v >= self.num_rounds:
             return
-        if not self._decl[v] >= self.edge_workers:
+        if not self._decl[v] >= self._required_declarations(v):
             return
         if self._unprocessed[v] > 0:
             return
         self._committing = True
-        dur = sum(self.commit_service.sample(self.rng)
-                  for _ in self.block_ids)
+        if self.per_push:
+            # commit work was paid per push; the version publish is a
+            # pointer bump — unless the round folded nothing (prox-only
+            # decay still runs the server update once)
+            dur = 0.0 if self._push_buf.get(v) else self._commit_sample()
+        else:
+            dur = sum(self._commit_sample() for _ in self.block_ids)
         self.sched.at(self._occupy(dur), self._finish_commit)
 
     def _finish_commit(self) -> None:
         v = self.version
         # apply round-v pushes to the stale-w~ caches in processed order
         # (round-buffered: early pushes from workers running ahead under
-        # bounded staleness must not leak into this commit)
+        # bounded staleness must not leak into this commit; per_push
+        # pays its commit latency eagerly but folds at the SAME point,
+        # so the published version is bit-identical across disciplines)
         pushes = self._push_buf.pop(v, [])
         if not self.timing_only:
             for (i, j, value) in pushes:

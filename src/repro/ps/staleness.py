@@ -14,9 +14,20 @@ Serving discipline, for determinism: waiters resolve in FIFO order
 inside the commit event that satisfies them. Every served pull is
 asserted ``0 <= tau <= T`` — the property tests/test_ps_runtime.py
 sweeps disciplines and straggler models against.
+
+Elasticity (chaos runs): a crashed worker's parked pulls are dropped
+(:meth:`drop_worker` — they will never be consumed), and a rejoin is
+accounted as a **version reset**, not a tau violation: the membership
+manager resumes the worker at the current service frontier (one past
+the newest committed version), so its first pulls are ordinary
+requests whose staleness is within the bound by construction. The
+enforcer never compares a resumed round index against the worker's
+pre-crash pull history — it only ever validates the (t, version) pair
+it serves.
 """
 from __future__ import annotations
 
+from collections import defaultdict
 from typing import Callable, Dict, List, Tuple
 
 
@@ -31,11 +42,15 @@ class StalenessEnforcer:
         self.max_served_tau = 0
         self.stall_count = 0
         self.stall_time = 0.0
-        # server sid -> FIFO [(worker round t, issue time, resolve)]
-        self._waiting: Dict[int, List[Tuple[int, float, Callable]]] = {}
+        self.dropped_pulls = 0
+        self.version_resets = 0
+        self.stall_time_by_worker: Dict[int, float] = defaultdict(float)
+        self.stall_count_by_worker: Dict[int, int] = defaultdict(int)
+        # server sid -> FIFO [(worker id, round t, issue time, resolve)]
+        self._waiting: Dict[int, List[Tuple[int, int, float, Callable]]] = {}
 
     def request(self, server, t: int, now: float,
-                resolve: Callable[[int], None]) -> bool:
+                resolve: Callable[[int], None], *, worker: int = -1) -> bool:
         """Worker round-t pull against ``server``. Resolves immediately
         (returning True) with version ``min(newest, t)`` when that
         read's staleness is within the bound; otherwise parks the pull
@@ -44,7 +59,9 @@ class StalenessEnforcer:
             self._serve(t, min(server.version, t), resolve)
             return True
         self.stall_count += 1
-        self._waiting.setdefault(server.sid, []).append((t, now, resolve))
+        self.stall_count_by_worker[worker] += 1
+        self._waiting.setdefault(server.sid, []).append(
+            (worker, t, now, resolve))
         return False
 
     def notify(self, server, now: float) -> None:
@@ -55,16 +72,35 @@ class StalenessEnforcer:
         if not waiters:
             return
         keep = []
-        for (t, issued, resolve) in waiters:
+        for (worker, t, issued, resolve) in waiters:
             if server.version >= t - self.bound:
                 self.stall_time += now - issued
+                self.stall_time_by_worker[worker] += now - issued
                 self._serve(t, min(server.version, t), resolve)
             else:
-                keep.append((t, issued, resolve))
+                keep.append((worker, t, issued, resolve))
         if keep:
             self._waiting[server.sid] = keep
         else:
             del self._waiting[server.sid]
+
+    def drop_worker(self, worker: int) -> None:
+        """A worker crashed: discard its parked pulls (the resolutions
+        would land on a dead incarnation). The stall that ends in a
+        crash is counted in ``dropped_pulls``, not ``stall_time``."""
+        for sid in list(self._waiting):
+            keep = [e for e in self._waiting[sid] if e[0] != worker]
+            self.dropped_pulls += len(self._waiting[sid]) - len(keep)
+            if keep:
+                self._waiting[sid] = keep
+            else:
+                del self._waiting[sid]
+
+    def note_rejoin(self) -> None:
+        """Membership resumed a worker at the service frontier — count
+        the version reset (tau accounting restarts from the resumed
+        round; no violation is recorded)."""
+        self.version_resets += 1
 
     def _serve(self, t: int, version: int, resolve) -> None:
         tau = t - version
@@ -85,4 +121,6 @@ class StalenessEnforcer:
                 "pulls_served": self.pulls_served,
                 "max_served_tau": self.max_served_tau,
                 "stall_count": self.stall_count,
-                "stall_time": self.stall_time}
+                "stall_time": self.stall_time,
+                "dropped_pulls": self.dropped_pulls,
+                "version_resets": self.version_resets}

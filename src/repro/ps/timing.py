@@ -78,10 +78,22 @@ SERVICE_MODELS = {"constant": ConstantService, "lognormal": LognormalService,
 
 
 def as_service(v) -> ServiceModel:
-    """Coerce a float to ConstantService; pass ServiceModels through."""
+    """Coerce a float to ConstantService; pass ServiceModels through.
+
+    Constants are validated eagerly: a negative or non-finite service
+    time would silently run the scheduler's clock backwards (``after``
+    rejects negative delays only at event time, deep inside a run), so
+    it fails here with an actionable message instead."""
     if hasattr(v, "sample"):
         return v
-    return ConstantService(float(v))
+    t = float(v)
+    if not np.isfinite(t) or t < 0.0:
+        raise ValueError(
+            f"as_service: constant service time must be finite and >= 0 "
+            f"(simulated seconds per event); got {v!r} — fix the "
+            f"CostProfile field (t_worker / t_server_block), or pass a "
+            f"ServiceModel for stochastic draws")
+    return ConstantService(t)
 
 
 @dataclasses.dataclass(frozen=True)

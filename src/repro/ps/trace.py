@@ -12,15 +12,27 @@ lets every scheduling/straggler scenario discovered under the
 event-driven runtime re-run at SPMD speed (pinned by
 tests/test_ps_runtime.py).
 
+Elastic runs add **partial participation**: ``participation[t, i]`` is
+False for rounds worker i missed (crashed, left, or not yet joined) —
+its delay row stays -1 (nothing was pulled) and replay contributes no
+edge updates for that (round, worker), via the selection mask in
+:class:`~repro.core.space.TraceDelay`. Chaos timeline entries
+(``events``: crash / rejoin / join / leave / slowdown / server_spike
+dicts) ride along for analysis and are round-trip persisted.
+
 File format (``.npz``): ``delays`` (rounds, N, M) int32, ``bound`` (the
-Assumption-3 T the enforcer guaranteed), ``discipline``, and a JSON
-``meta`` blob (timing config, seeds, makespan).
+Assumption-3 T the enforcer guaranteed), ``discipline``, a JSON
+``meta`` blob (timing config, seeds, makespan), and — only when the run
+was elastic — ``participation`` (rounds, N) bool and a JSON ``events``
+list. Pre-chaos files simply lack the new keys; ``load`` defaults them
+(full participation, no events), so old traces keep loading — pinned by
+tests/test_ps_chaos.py.
 """
 from __future__ import annotations
 
 import dataclasses
 import json
-from typing import Any, Dict
+from typing import Any, Dict, List, Optional
 
 import numpy as np
 
@@ -31,6 +43,11 @@ class DelayTrace:
     bound: int                         # Assumption 3's T enforced at record time
     discipline: str = "lockfree"
     meta: Dict[str, Any] = dataclasses.field(default_factory=dict)
+    # (rounds, N) bool; None = full participation (pre-chaos traces)
+    participation: Optional[np.ndarray] = None
+    # chaos timeline: [{"kind": "crash"|"rejoin"|"join"|"leave"|
+    #                   "slowdown"|"server_spike", ...}]
+    events: List[Dict[str, Any]] = dataclasses.field(default_factory=list)
 
     @classmethod
     def empty(cls, num_rounds: int, n_workers: int, n_blocks: int,
@@ -44,17 +61,42 @@ class DelayTrace:
         """Record worker i's round-t staleness row (M,)."""
         self.delays[t, i, :] = np.asarray(row, np.int32)
 
+    def set_participation(self, part) -> None:
+        """Install the (rounds, N) participation matrix from an elastic
+        run and erase any partially-recorded rows of absent (t, i)
+        pairs (a worker that crashed mid-compute recorded its staleness
+        row but never declared — the round did not happen for it)."""
+        p = np.asarray(part, bool)
+        if p.shape != self.delays.shape[:2]:
+            raise ValueError(
+                f"participation must be (rounds, N) = "
+                f"{self.delays.shape[:2]}; got shape {p.shape}")
+        self.delays[~p] = -1
+        self.participation = None if p.all() else p
+
+    def add_event(self, kind: str, **fields) -> None:
+        self.events.append({"kind": kind, **fields})
+
     @property
     def num_rounds(self) -> int:
         return self.delays.shape[0]
 
+    def _participation_full(self) -> np.ndarray:
+        if self.participation is None:
+            return np.ones(self.delays.shape[:2], bool)
+        return self.participation
+
     @property
     def complete(self) -> bool:
-        return bool((self.delays >= 0).all())
+        """All participating (round, worker) pulls recorded — and no
+        phantom rows recorded for absent pairs."""
+        p = self._participation_full()[:, :, None]
+        return bool(((self.delays >= 0) == p).all())
 
     def validate(self) -> "DelayTrace":
         if not self.complete:
-            raise ValueError("trace has unrecorded (round, worker) pulls")
+            raise ValueError("trace has unrecorded (round, worker) pulls "
+                             "(or recorded rows for absent workers)")
         mx = int(self.delays.max())
         if mx > self.bound:
             raise ValueError(f"trace violates its own staleness bound: "
@@ -64,17 +106,25 @@ class DelayTrace:
     # ---- replay ----------------------------------------------------------
     def to_delay_model(self):
         """The :class:`~repro.core.space.TraceDelay` that replays this
-        trace through ``asybadmm_epoch`` (any space/backend/mesh)."""
+        trace through ``asybadmm_epoch`` (any space/backend/mesh) —
+        carrying the partial-participation mask when the run was
+        elastic."""
         from ..core.space import TraceDelay
-        return TraceDelay(self.validate().delays)
+        self.validate()
+        return TraceDelay(self.delays, participation=self.participation)
 
     # ---- persistence -----------------------------------------------------
     def save(self, path: str) -> str:
         if not str(path).endswith(".npz"):
             path = f"{path}.npz"
+        extra = {}
+        if self.participation is not None:
+            extra["participation"] = self.participation
+        if self.events:
+            extra["events"] = np.str_(json.dumps(self.events))
         np.savez(path, delays=self.delays, bound=np.int32(self.bound),
                  discipline=np.str_(self.discipline),
-                 meta=np.str_(json.dumps(self.meta)))
+                 meta=np.str_(json.dumps(self.meta)), **extra)
         return path
 
     @staticmethod
@@ -84,4 +134,8 @@ class DelayTrace:
                 delays=np.asarray(f["delays"], np.int32),
                 bound=int(f["bound"]),
                 discipline=str(f["discipline"]),
-                meta=json.loads(str(f["meta"])) if "meta" in f else {})
+                meta=json.loads(str(f["meta"])) if "meta" in f else {},
+                participation=(np.asarray(f["participation"], bool)
+                               if "participation" in f else None),
+                events=(json.loads(str(f["events"]))
+                        if "events" in f else []))

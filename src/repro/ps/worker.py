@@ -16,7 +16,8 @@ Each worker runs Algorithm 1's lines 3-9 as an event-driven cycle:
   2. **compute** — once every pull resolves, the observed staleness row
      is recorded into the :class:`DelayTrace` and the worker's service
      time elapses (the scheduler's clock; stragglers come from the
-     timing model). The numerics — the REAL jitted ``worker_grads`` +
+     timing model, transient chaos slowdowns multiply the draw). The
+     numerics — the REAL jitted ``worker_grads`` +
      ``worker_select_update`` at the epoch's full shape with this
      worker's row live — run at completion.
   3. **declare/push** — the selection row (the epoch's selector on the
@@ -26,6 +27,17 @@ Each worker runs Algorithm 1's lines 3-9 as an event-driven cycle:
 In ``timing_only`` mode step 2 skips the numerics (selection still
 runs — it shapes server load) so coordination scalability can be
 simulated at sizes where real gradients would dominate wall-clock.
+
+Elasticity: a worker can die mid-cycle (:meth:`kill`) and resume later
+(:meth:`revive`) at the round the membership manager hands it. Death
+bumps an **incarnation counter**; every event the worker schedules
+(compute completions, delayed pull responses, declaration deliveries
+already in flight are fine — they belong to completed rounds) is
+guarded on the incarnation it was scheduled under, so a dead
+incarnation's events no-op instead of corrupting the resumed cycle.
+The worker's y row and its w~ rows on the servers stay stale across
+the outage until its first post-resume declare — exactly the frozen
+rows the epoch's partial-participation mask reproduces on replay.
 """
 from __future__ import annotations
 
@@ -35,15 +47,43 @@ import numpy as np
 
 
 class WorkerProc:
-    def __init__(self, i: int, runtime):
+    def __init__(self, i: int, runtime, *, cold: bool = False):
         self.i = i
         self.rt = runtime
         self.rng = np.random.default_rng([runtime.seed, 1000 + i])
         self.t = 0
         self.rounds_done = 0
+        self.alive = not cold
+        self.gen = 0                   # incarnation counter
         self._pulled = {}
         self._pending = 0
         self._issued = False
+
+    # ---- elasticity -------------------------------------------------------
+    def kill(self) -> None:
+        """Crash/leave: invalidate every in-flight event of this
+        incarnation (the enforcer separately drops parked pulls)."""
+        self.alive = False
+        self.gen += 1
+        self._pulled = {}
+        self._pending = 0
+        self._issued = False
+
+    def revive(self, t: int) -> None:
+        """Resume the cycle at round ``t`` (the membership manager's
+        service frontier). Fresh z comes from the first pulls; y/w~
+        stay whatever the last completed round left."""
+        self.alive = True
+        self.gen += 1
+        self._begin_round(t)
+
+    def _guarded(self, fn):
+        gen = self.gen
+
+        def run(*args):
+            if self.alive and self.gen == gen:
+                fn(*args)
+        return run
 
     # ---- the cycle --------------------------------------------------------
     def start(self) -> None:
@@ -63,12 +103,14 @@ class WorkerProc:
                            self._on_pull(dom, version))
             else:
                 # the enforcer fixes the served version NOW; the response
-                # then spends a network-latency sample in flight
+                # then spends a network-latency sample in flight (guarded:
+                # a response landing on a dead incarnation is dropped)
                 def resolve(version, dom=dom):
                     self.rt.sched.after(
                         net.sample(self.rng),
-                        lambda: self._on_pull(dom, version))
-            self.rt.enforcer.request(dom, t, self.rt.sched.now, resolve)
+                        self._guarded(lambda: self._on_pull(dom, version)))
+            self.rt.enforcer.request(dom, t, self.rt.sched.now, resolve,
+                                     worker=self.i)
         self._issued = True
         if self._pending == 0:
             self._start_compute()
@@ -93,7 +135,9 @@ class WorkerProc:
                 j, self._pulled[rt.domain_of_block[j].sid])
                 for j in range(rt.engine.M)]
         dur = rt.worker_service.sample(self.rng)
-        rt.sched.after(dur, lambda: self._finish_round(t, contents))
+        dur *= rt.injector.worker_factor(self.i, rt.sched.now)
+        rt.sched.after(dur, self._guarded(
+            lambda: self._finish_round(t, contents)))
 
     def _finish_round(self, t: int, contents) -> None:
         rt, i = self.rt, self.i
@@ -111,7 +155,9 @@ class WorkerProc:
                 i, g_buf, z_buf, rt.y, rt.w, rt.x, sel_row)
         # declare to every edge domain; push fresh w where selected (the
         # declaration + its pushes travel as ONE message, so a round's
-        # pushes never overtake their own declaration under latency)
+        # pushes never overtake their own declaration under latency;
+        # deliveries stay valid even if the worker dies after sending —
+        # the round completed, so they are NOT incarnation-guarded)
         sel_row = np.asarray(sel_row, bool) & eng.edge[i]
         for dom in rt.domains_of_worker[i]:
             pushes = [(j, None if rt.timing_only

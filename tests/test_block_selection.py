@@ -7,7 +7,8 @@ import pytest
 
 from repro.configs.base import ADMMConfig
 from repro.core import init_state, make_problem, make_step_fn, run
-from repro.core.space import BLOCK_SELECTORS, SelectorContext
+from repro.core.space import (BLOCK_SELECTORS, SelectorContext,
+                              make_zipf_selector)
 
 
 def _problem(rho_scale=None, seed=0):
@@ -26,7 +27,8 @@ def _problem(rho_scale=None, seed=0):
                         rho_scale=rho_scale)
 
 
-@pytest.mark.parametrize("scheme", ["random", "cyclic", "gauss_southwell"])
+@pytest.mark.parametrize("scheme", ["random", "cyclic", "gauss_southwell",
+                                    "zipf"])
 def test_all_selection_schemes_converge(scheme):
     prob = _problem()
     obj0 = float(prob.objective(jnp.zeros(prob.dim)))
@@ -82,6 +84,50 @@ def test_gauss_southwell_exact_count_under_ties():
     # and the draw is reproducible
     sel2 = np.asarray(BLOCK_SELECTORS["gauss_southwell"](ctx))
     assert (sel == sel2).all()
+
+
+def _zipf_ctx(key, edge, frac):
+    return SelectorContext(rng=jax.random.PRNGKey(key), edge=edge,
+                           t=jnp.zeros((), jnp.int32), block_fraction=frac,
+                           grad_sqnorm=lambda: None)
+
+
+def test_zipf_deterministic_exact_count_respects_edge():
+    """Satellite pin: zipf is a registered, gradient-free selector;
+    same key -> same selection; exactly min(k, |edge row|) blocks per
+    worker; never outside the edge set."""
+    sel_fn = BLOCK_SELECTORS["zipf"]
+    assert getattr(sel_fn, "gradient_free", False)
+    N, M, k = 3, 8, 2
+    edge = jnp.ones((N, M), bool).at[2, 4:].set(False)   # worker 2: 4 blocks
+    ctx = _zipf_ctx(0, edge, k / M)
+    sel = np.asarray(sel_fn(ctx))
+    assert (sel.sum(axis=1) == k).all(), sel
+    assert (sel & ~np.asarray(edge)).sum() == 0
+    np.testing.assert_array_equal(sel, np.asarray(sel_fn(ctx)))
+    # a different key draws a different selection (it IS sampling)
+    assert (sel != np.asarray(sel_fn(_zipf_ctx(1, edge, k / M)))).any()
+    # an edge row smaller than k selects the whole row, no more
+    tiny = jnp.zeros((1, M), bool).at[0, 3].set(True)
+    assert np.asarray(sel_fn(_zipf_ctx(0, tiny, k / M))).sum() == 1
+
+
+def test_zipf_skews_toward_head_blocks():
+    """The point of the scheme: under weight (j+1)^-a the head blocks
+    are selected far more often than the tail — the hot-block workload
+    benchmarks/speedup.py --scenario skew stresses the servers with."""
+    sel_fn = make_zipf_selector(3.0)
+    N, M = 4, 8
+    edge = jnp.ones((N, M), bool)
+    counts = np.zeros(M)
+    for s in range(40):
+        counts += np.asarray(sel_fn(_zipf_ctx(s, edge, 0.25))).sum(axis=0)
+    assert counts[0] > 4 * counts[-1]
+    assert counts[0] > counts[M // 2]
+    with pytest.raises(ValueError):
+        make_zipf_selector(-1.0)
+    with pytest.raises(ValueError):
+        make_zipf_selector(float("nan"))
 
 
 def test_heterogeneous_rho_converges():

@@ -1,0 +1,445 @@
+"""Elastic PS service: fault injection, worker churn, and
+partial-participation replay (repro.ps.chaos / membership).
+
+The headline pin: a chaos run — crashes, rejoins, cold joins,
+permanent leaves, transient slowdowns and server commit spikes — is
+exactly as deterministic and replayable as a fault-free one. The
+recorded :class:`DelayTrace` carries the staleness matrix AND the
+(rounds, N) participation matrix; replaying it through the vectorized
+``asybadmm_epoch`` masks the absent (round, worker) pairs out of block
+selection (their y / w~ rows stay frozen, exactly what an absent
+worker leaves behind on the servers), reproducing the runtime's z
+trajectory — bitwise on pallas, fp32-ulp on jnp, and through the SPMD
+mesh under ci.sh's forced-8-device step.
+"""
+import json
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.api import ConsensusSession
+from repro.configs.base import ADMMConfig
+from repro.core.blocks import TreeBlocks
+from repro.ps import (ConstantService, CostProfile, DelayTrace, FaultEvent,
+                      FaultPlan, MembershipManager, PSRuntime, as_service)
+from repro.ps.chaos import FaultInjector
+
+N, M, DBLK = 4, 8, 5
+DIM = M * DBLK
+ROUNDS = 10
+
+_r = np.random.RandomState(11)
+CENTERS = jnp.asarray(_r.randn(N, DIM).astype(np.float32))
+
+TIMING = CostProfile(t_worker=ConstantService(1.0),
+                     t_server_block=ConstantService(0.25))
+
+# crash+rejoin, a cold join, a transient straggler and a hot server —
+# every event kind in one deterministic plan
+PLAN = FaultPlan.of(FaultPlan.crash(1, 3.5, 3.0),
+                    FaultPlan.join(3, 2.5),
+                    FaultPlan.slowdown(0, 1.0, 4.0, 3.0),
+                    FaultPlan.server_spike(2, 2.0, 5.0, 4.0))
+
+
+def _cfg(max_delay=2, **kw):
+    return ADMMConfig(rho=2.0, gamma=0.1, max_delay=max_delay,
+                      block_fraction=0.5, num_blocks=M, l1_coef=1e-3,
+                      clip=0.8, seed=0, **kw)
+
+
+def _flat_loss(z, c):
+    return 0.5 * jnp.sum(jnp.square(z - c))
+
+
+def _flat_session(backend="jnp", delay_model=None, cfg=None, mesh=None):
+    return ConsensusSession.flat(
+        _flat_loss, CENTERS, dim=DIM, cfg=cfg or _cfg(), backend=backend,
+        delay_model=delay_model, mesh=mesh)
+
+
+def _assert_replay(res, sess2, data, bitwise, to_vec=None):
+    to_vec = to_vec or (lambda z: np.asarray(z).ravel())
+    state = sess2.init()
+    step = sess2.step_fn()
+    for t in range(res.num_rounds):
+        state, _ = step(state, data)
+        replay, runtime = to_vec(sess2.z(state)), to_vec(res.z_versions[t + 1])
+        if bitwise:
+            np.testing.assert_array_equal(
+                replay, runtime, err_msg=f"chaos replay diverged at round {t}")
+        else:
+            np.testing.assert_allclose(
+                replay, runtime, rtol=1e-5, atol=1e-6,
+                err_msg=f"chaos replay diverged at round {t}")
+
+
+# ---------------------------------------------------------------------------
+# the acceptance pin: chaos runs replay through the epoch
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("discipline", ["lockfree", "per_push"])
+@pytest.mark.parametrize("backend", ["jnp", "pallas"])
+def test_chaos_replay_parity(backend, discipline):
+    sess = _flat_session(backend)
+    res = sess.run_ps(ROUNDS, discipline=discipline, timing=TIMING,
+                      faults=PLAN)
+    # the chaos actually happened and was recorded
+    assert res.metrics["crashes"] >= 1 and res.metrics["rejoins"] >= 1
+    assert res.trace.participation is not None
+    assert not res.trace.participation.all()
+    kinds = {e["kind"] for e in res.trace.events}
+    assert {"crash", "rejoin", "join", "slowdown", "server_spike"} <= kinds
+    # staleness stays within Assumption 3's T through the churn
+    assert res.metrics["max_served_tau"] <= 2
+    assert res.trace.complete
+    sess2 = _flat_session(backend, delay_model=res.to_delay_model())
+    _assert_replay(res, sess2, CENTERS, bitwise=backend == "pallas")
+
+
+def test_tree_chaos_replay_parity():
+    params = {f"w{j}": jnp.zeros((DBLK,), jnp.float32) for j in range(M)}
+    tblocks = TreeBlocks(num_blocks=M, leaf_block_ids=tuple(range(M)),
+                         treedef=jax.tree.structure(params))
+
+    def tree_loss(p, c):
+        z = jnp.concatenate([p[f"w{j}"] for j in range(M)])
+        return 0.5 * jnp.sum(jnp.square(z - c))
+
+    def make(dm=None):
+        return ConsensusSession.pytree(tree_loss, params, _cfg(),
+                                       num_workers=N, blocks=tblocks,
+                                       delay_model=dm)
+    res = make().run_ps(ROUNDS, discipline="per_push", timing=TIMING,
+                        faults=PLAN, batches=lambda t: CENTERS)
+    assert res.metrics["crashes"] >= 1
+
+    def to_vec(zt):
+        return np.concatenate([np.asarray(zt[f"w{j}"]).ravel()
+                               for j in range(M)])
+    _assert_replay(res, make(res.to_delay_model()), CENTERS, bitwise=False,
+                   to_vec=to_vec)
+
+
+def test_chaos_run_deterministic():
+    """Same session + same plan -> identical makespan, staleness,
+    participation, event timeline and z trajectory."""
+    runs = [_flat_session().run_ps(ROUNDS, timing=TIMING, faults=PLAN)
+            for _ in range(2)]
+    assert runs[0].makespan == runs[1].makespan
+    np.testing.assert_array_equal(runs[0].trace.delays, runs[1].trace.delays)
+    np.testing.assert_array_equal(runs[0].trace.participation,
+                                  runs[1].trace.participation)
+    assert runs[0].trace.events == runs[1].trace.events
+    np.testing.assert_array_equal(np.asarray(runs[0].z_final),
+                                  np.asarray(runs[1].z_final))
+
+
+def test_run_ps_accepts_fault_plan_path(tmp_path):
+    path = PLAN.save(str(tmp_path / "plan.json"))
+    res = _flat_session().run_ps(ROUNDS, timing=TIMING, faults=path)
+    ref = _flat_session().run_ps(ROUNDS, timing=TIMING, faults=PLAN)
+    assert res.makespan == ref.makespan
+    np.testing.assert_array_equal(res.trace.delays, ref.trace.delays)
+
+
+# ---------------------------------------------------------------------------
+# membership semantics
+# ---------------------------------------------------------------------------
+
+def test_membership_intervals_and_queries():
+    mm = MembershipManager(3, 10, cold=(2,))
+    assert mm.is_active(0) and not mm.is_active(2)
+    mm.deactivate(0, 4)                      # crashed while working round 4
+    assert not mm.is_active(0)
+    mm.activate(0, 7)                        # resumed at the frontier
+    assert mm.required(0, 3) and not mm.required(0, 5) and mm.required(0, 8)
+    mm.activate(2, 6)                        # cold join
+    assert not mm.required(2, 5) and mm.required(2, 6)
+    P = mm.participation_matrix()
+    assert P.shape == (10, 3)
+    assert P[:, 1].all()                     # untouched worker: everywhere
+    assert list(np.nonzero(~P[:, 0])[0]) == [4, 5, 6]
+    assert mm.participated_rounds(0) == 7
+    assert mm.participated_rounds(2) == 4
+    assert mm.crashes == 1 and mm.rejoins == 2 and mm.elastic
+    mm.deactivate(0, 8)
+    with pytest.raises(RuntimeError):        # double-deactivate
+        mm.deactivate(0, 9)
+    m2 = MembershipManager(1, 10)
+    m2.deactivate(0, 4)
+    with pytest.raises(RuntimeError):        # resume inside absence window
+        m2.activate(0, 2)
+    with pytest.raises(ValueError):          # cold id out of range
+        MembershipManager(2, 10, cold=(5,))
+
+
+def test_membership_empty_interval_popped():
+    """Crash + rejoin while the frontier is still at/behind the crashed
+    round: the absence interval is empty and the worker misses nothing."""
+    mm = MembershipManager(2, 10)
+    mm.deactivate(0, 3)
+    mm.activate(0, 3)                        # resumed at the same round
+    assert mm.participation_matrix()[:, 0].all()
+    assert mm.participated_rounds(0) == 10
+
+
+def test_leave_is_permanent():
+    plan = FaultPlan.of(FaultPlan.leave(2, 4.0))
+    res = _flat_session().run_ps(ROUNDS, timing=TIMING, faults=plan)
+    P = res.trace.participation
+    gone = np.nonzero(~P[:, 2])[0]
+    assert gone.size > 0 and list(gone) == list(range(gone[0], ROUNDS))
+    assert res.metrics["rejoins"] == 0
+    assert any(e["kind"] == "leave" for e in res.trace.events)
+    # absent rounds average the loss over the remaining participants
+    assert np.isfinite(res.losses).all()
+    _assert_replay(res, _flat_session(delay_model=res.to_delay_model()),
+                   CENTERS, bitwise=False)
+
+
+def test_ineffective_rejoin_stays_absent():
+    """A rejoin landing past the round horizon records an ineffective
+    event and the worker stays absent to the end — no deadlock, no
+    partial interval."""
+    plan = FaultPlan.of(FaultPlan.crash(1, 2.0, 1000.0))
+    res = _flat_session().run_ps(ROUNDS, timing=TIMING, faults=plan)
+    ev = [e for e in res.trace.events if e["kind"] == "rejoin"]
+    assert ev and ev[0].get("effective") is False
+    assert not res.trace.participation[-1, 1]
+    assert res.metrics["rejoins"] == 0
+
+
+def test_rejoin_is_version_reset_not_tau_violation():
+    """The enforcer books a rejoin as a version reset; parked pulls of
+    a crashed worker are dropped, and served staleness never exceeds T
+    (the rejoiner re-enters at the service frontier, so its first pull
+    is fresh by construction)."""
+    res = _flat_session().run_ps(ROUNDS, timing=TIMING, faults=PLAN)
+    assert res.metrics["version_resets"] == res.metrics["rejoins"]
+    assert res.metrics["max_served_tau"] <= 2
+    assert int(res.trace.delays.max()) <= 2
+
+
+# ---------------------------------------------------------------------------
+# slowdown / server-spike timing faults
+# ---------------------------------------------------------------------------
+
+def test_slowdown_and_spike_stretch_makespan():
+    base = _flat_session().run_ps(ROUNDS, timing=TIMING)
+    slow = _flat_session().run_ps(
+        ROUNDS, timing=TIMING,
+        faults=FaultPlan.of(FaultPlan.slowdown(0, 0.0, 8.0, 5.0)))
+    spike = _flat_session().run_ps(
+        ROUNDS, timing=TIMING,
+        faults=FaultPlan.of(FaultPlan.server_spike(0, 0.0, 8.0, 20.0)))
+    assert slow.makespan > base.makespan
+    assert spike.makespan > base.makespan
+    # pure timing faults: full participation, so the numerics match the
+    # fault-free run version-for-version only if staleness agrees —
+    # participation must NOT be marked elastic
+    assert slow.trace.participation is None
+    assert spike.trace.participation is None
+
+
+def test_injector_factor_windows():
+    plan = FaultPlan.of(FaultPlan.slowdown(0, 1.0, 2.0, 3.0),
+                        FaultPlan.slowdown(0, 2.0, 2.0, 2.0),
+                        FaultPlan.server_spike(1, 1.0, 1.0, 4.0))
+    inj = FaultInjector(plan, None)
+    assert inj.worker_factor(0, 0.5) == 1.0
+    assert inj.worker_factor(0, 1.5) == 3.0
+    assert inj.worker_factor(0, 2.5) == 6.0      # overlapping windows compose
+    assert inj.worker_factor(0, 3.5) == 2.0
+    assert inj.worker_factor(1, 1.5) == 1.0
+    assert inj.server_factor((1,), 1.5) == 4.0
+    assert inj.server_factor((0, 1), 1.5) == 4.0  # locked domain feels it
+    assert inj.server_factor((0,), 1.5) == 1.0
+    assert not inj.empty and FaultInjector(None, None).empty
+
+
+# ---------------------------------------------------------------------------
+# per-push commit discipline
+# ---------------------------------------------------------------------------
+
+def test_per_push_faultfree_replays_and_times_differently():
+    """per_push pays commit work eagerly in the push stream: same fold
+    numerics as lockfree given the same pushes, but versions publish at
+    different sim times — a different (still replay-exact) trajectory
+    and a different makespan."""
+    pp = _flat_session().run_ps(ROUNDS, discipline="per_push", timing=TIMING)
+    lf = _flat_session().run_ps(ROUNDS, discipline="lockfree", timing=TIMING)
+    assert pp.makespan != lf.makespan
+    assert pp.trace.discipline == "per_push"
+    _assert_replay(pp, _flat_session(delay_model=pp.to_delay_model()),
+                   CENTERS, bitwise=False)
+
+
+# ---------------------------------------------------------------------------
+# FaultPlan construction / validation / persistence
+# ---------------------------------------------------------------------------
+
+def test_fault_plan_json_roundtrip(tmp_path):
+    text = PLAN.to_json()
+    again = FaultPlan.from_json(text)
+    assert again == PLAN
+    path = PLAN.save(str(tmp_path / "plan.json"))
+    assert FaultPlan.load(path) == PLAN
+    # dicts coerce (the schema API.md documents)
+    assert FaultPlan(({"kind": "crash", "at": 1.0, "worker": 0},)) == \
+        FaultPlan.of(FaultPlan.crash(0, 1.0))
+
+
+def test_fault_plan_validation_errors():
+    with pytest.raises(ValueError, match="unknown fault kind"):
+        FaultEvent("meteor", 1.0).validate()
+    with pytest.raises(ValueError, match="finite and >= 0"):
+        FaultEvent("crash", -1.0, worker=0).validate()
+    with pytest.raises(ValueError, match="needs a worker id"):
+        FaultEvent("crash", 1.0).validate()
+    with pytest.raises(ValueError, match="outside"):
+        FaultEvent("crash", 1.0, worker=9).validate(num_workers=4)
+    with pytest.raises(ValueError, match="outside"):
+        FaultEvent("server_spike", 1.0, block=9, duration=1.0,
+                   factor=2.0).validate(num_blocks=4)
+    with pytest.raises(ValueError, match="duration"):
+        FaultEvent("slowdown", 1.0, worker=0, factor=2.0).validate()
+    with pytest.raises(ValueError, match="factor"):
+        FaultEvent("server_spike", 1.0, block=0, duration=1.0,
+                   factor=-2.0).validate()
+    with pytest.raises(ValueError, match="downtime"):
+        FaultEvent("crash", 1.0, worker=0, duration=-3.0).validate()
+    with pytest.raises(ValueError, match="multiple join"):
+        FaultPlan.of(FaultPlan.join(0, 1.0), FaultPlan.join(0, 2.0))
+    with pytest.raises(ValueError, match="before"):
+        FaultPlan.of(FaultPlan.join(0, 5.0), FaultPlan.crash(0, 2.0))
+    # the runtime validates the plan against the spec's N and M
+    with pytest.raises(ValueError, match="outside"):
+        _flat_session().run_ps(
+            ROUNDS, timing=TIMING,
+            faults=FaultPlan.of(FaultPlan.crash(N + 3, 1.0)))
+
+
+def test_fault_plan_churn_deterministic():
+    a = FaultPlan.churn(8, seed=3, crashes=3)
+    b = FaultPlan.churn(8, seed=3, crashes=3)
+    assert a == b
+    assert len({e.worker for e in a.events}) == 3    # distinct victims
+    assert all(e.kind == "crash" and e.duration > 0 for e in a.events)
+    assert FaultPlan.churn(8, seed=4, crashes=3) != a
+    with pytest.raises(ValueError):
+        FaultPlan.churn(2, crashes=3)
+
+
+# ---------------------------------------------------------------------------
+# trace persistence: new keys + forward compatibility
+# ---------------------------------------------------------------------------
+
+def test_chaos_trace_npz_roundtrip(tmp_path):
+    res = _flat_session().run_ps(ROUNDS, timing=TIMING, faults=PLAN)
+    path = res.trace.save(str(tmp_path / "chaos_trace"))
+    loaded = DelayTrace.load(path)
+    np.testing.assert_array_equal(loaded.delays, res.trace.delays)
+    np.testing.assert_array_equal(loaded.participation,
+                                  res.trace.participation)
+    assert loaded.events == res.trace.events
+    assert loaded.meta["crashes"] == res.metrics["crashes"]
+    assert loaded.complete
+    # the loaded trace replays identically to the in-memory one
+    _assert_replay(res, _flat_session(delay_model=loaded.to_delay_model()),
+                   CENTERS, bitwise=False)
+
+
+def test_pre_chaos_trace_loads_with_defaults(tmp_path):
+    """Forward compatibility pin: an npz written before the elastic-PS
+    keys existed (delays/bound/discipline/meta only) still loads — full
+    participation, empty event list, same replay."""
+    res = _flat_session().run_ps(ROUNDS, timing=TIMING)
+    path = str(tmp_path / "old_trace.npz")
+    np.savez(path, delays=res.trace.delays,
+             bound=np.int32(res.trace.bound),
+             discipline=np.str_(res.trace.discipline),
+             meta=np.str_(json.dumps(res.trace.meta)))
+    loaded = DelayTrace.load(path)
+    assert loaded.participation is None and loaded.events == []
+    assert loaded.complete
+    _assert_replay(res, _flat_session(delay_model=loaded.to_delay_model()),
+                   CENTERS, bitwise=False)
+
+
+def test_faultfree_trace_omits_chaos_keys(tmp_path):
+    """Fault-free saves stay byte-compatible with pre-chaos readers:
+    no participation/events keys are written."""
+    res = _flat_session().run_ps(ROUNDS, timing=TIMING)
+    path = res.trace.save(str(tmp_path / "ff_trace"))
+    with np.load(path, allow_pickle=False) as f:
+        assert "participation" not in f and "events" not in f
+
+
+def test_set_participation_validates_and_erases():
+    tr = DelayTrace.empty(3, 2, M, bound=2)
+    tr.delays[:] = 1
+    with pytest.raises(ValueError, match="rounds, N"):
+        tr.set_participation(np.ones((3, 5), bool))
+    part = np.ones((3, 2), bool)
+    part[1, 0] = False
+    tr.set_participation(part)
+    assert (tr.delays[1, 0] == -1).all()     # absent row erased
+    assert tr.complete
+    # full participation normalizes to None (fault-free fast path)
+    tr2 = DelayTrace.empty(3, 2, M, bound=2)
+    tr2.delays[:] = 0
+    tr2.set_participation(np.ones((3, 2), bool))
+    assert tr2.participation is None
+
+
+# ---------------------------------------------------------------------------
+# satellite: as_service rejects negative / non-finite constants
+# ---------------------------------------------------------------------------
+
+def test_as_service_rejects_bad_constants():
+    with pytest.raises(ValueError, match="finite and >= 0"):
+        as_service(-1.0)
+    with pytest.raises(ValueError, match="finite and >= 0"):
+        as_service(float("nan"))
+    with pytest.raises(ValueError, match="finite and >= 0"):
+        as_service(float("inf"))
+    assert as_service(0.0).sample(np.random.default_rng(0)) == 0.0
+    # the CostProfile accessors surface the same actionable message
+    with pytest.raises(ValueError, match="t_worker"):
+        CostProfile(t_worker=-2.0).worker_service()
+
+
+# ---------------------------------------------------------------------------
+# SPMD chaos replay (runs under scripts/ci.sh's forced-8-device step)
+# ---------------------------------------------------------------------------
+
+needs8 = pytest.mark.skipif(
+    jax.device_count() < 8,
+    reason="needs XLA_FLAGS=--xla_force_host_platform_device_count=8 "
+           "(scripts/ci.sh runs this file's spmd tests under it)")
+
+
+@needs8
+def test_spmd_chaos_trace_replay():
+    """Crash+rejoin participation masks apply identically inside the
+    SPMD-sharded epoch: the chaos trace replays over the (data=4,
+    model=2) mesh at the SPMD parity tolerance."""
+    from repro.launch.mesh import make_test_mesh
+
+    def make(dm=None, mesh=None):
+        return _flat_session("pallas", delay_model=dm, mesh=mesh)
+    res = make().run_ps(ROUNDS, discipline="per_push", timing=TIMING,
+                        faults=PLAN)
+    assert res.metrics["crashes"] >= 1
+    sess = make(dm=res.to_delay_model(), mesh=make_test_mesh(8))
+    state = sess.init()
+    step = sess.step_fn()
+    for t in range(ROUNDS):
+        state, _ = step(state, CENTERS)
+        np.testing.assert_allclose(
+            np.asarray(jax.device_get(sess.z(state))),
+            np.asarray(res.z_versions[t + 1]), rtol=1e-5, atol=1e-5,
+            err_msg=f"SPMD chaos replay diverged at round {t}")
