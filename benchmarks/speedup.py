@@ -32,10 +32,16 @@ and gates the lockfree/locked makespan ratio against
   replays the chaos trace through the vectorized epoch (single device,
   and the SPMD (data=4, model=2) mesh when 8 devices are up) and gates
   rounds-to-tolerance chaos/fault-free vs ``max_churn_rounds_ratio``;
+* ``lossy``      — 8-worker REAL-compute run over an unreliable
+  transport (5% drop / 2% dup / 10% reorder, ack+retry reliability):
+  gates rounds-to-tolerance lossy/reliable vs
+  ``max_lossy_rounds_ratio`` and replay parity of the lossy trace;
 * ``skew``       — timing-only zipf vs uniform block selection: hot
-  head blocks pile onto few lock domains (queue-occupancy spread);
+  head blocks pile onto few lock domains (queue-occupancy spread,
+  gated vs ``min_skew_occupancy_ratio``);
 * ``heavy_tail`` — Pareto worker compute (the EC2 straggler tail):
-  stall-time concentration under lockfree vs per_push commits.
+  stall-time concentration under lockfree vs per_push commits (gated
+  vs ``min_heavy_tail_stall``).
 
 All scenarios print the per-worker stall-time and per-domain queue
 occupancy histograms from ``PSRunResult.metrics["histograms"]``.
@@ -234,51 +240,141 @@ def churn_scenario(emit, smoke: bool = False) -> bool:
     return ok and ratio <= max_ratio
 
 
+def lossy_scenario(emit, smoke: bool = False) -> bool:
+    """Unreliable transport at 8 workers, REAL numerics: 5% drop, 2%
+    duplication, 10% reorder on every worker<->server link, with the
+    runtime's ack/retry/backoff reliability layer on. Gates
+    rounds-to-tolerance lossy/reliable vs ``max_lossy_rounds_ratio``
+    (benchmarks/kernels_baseline.json) and replay parity of the lossy
+    trace through the vectorized epoch (single device + SPMD when 8
+    devices are up)."""
+    import jax
+
+    from repro.ps import Transport
+
+    R = 16 if smoke else 24
+    tw, ts = ConstantService(1.0), ConstantService(0.25)
+    tr = Transport(0.0, 0.0, drop_rate=0.05, dup_rate=0.02,
+                   reorder_rate=0.1, ack_timeout=0.5)
+    sess = build_session(GATE_WORKERS, dim=CHURN_DIM, samples=4)
+    rel = sess.run_ps(R, timing=CostProfile(t_worker=tw, t_server_block=ts))
+    lo = sess.run_ps(R, timing=CostProfile(t_worker=tw, t_server_block=ts,
+                                           net=tr))
+
+    tol = rel.losses[int(0.6 * R) - 1]
+    r_rel = _rounds_to_tolerance(rel.losses, tol)
+    r_lo = _rounds_to_tolerance(lo.losses, tol)
+    ratio = float("inf") if r_lo is None else r_lo / r_rel
+    max_ratio = json.loads(BASELINE.read_text())["max_lossy_rounds_ratio"]
+
+    t = lo.metrics["transport"]
+    emit(f"lossy_reliable_makespan,{rel.makespan*1e6:.0f},"
+         f"rounds_to_tol={r_rel}")
+    emit(f"lossy_transport_makespan,{lo.makespan*1e6:.0f},"
+         f"rounds_to_tol={r_lo}")
+    emit(f"lossy_rounds_ratio,{ratio:.3f},max={max_ratio}"
+         f"|delivery_rate={t['delivery_rate']:.3f}"
+         f"|drops={t['drops']}|dups={t['dups']}|reorders={t['reorders']}"
+         f"|retransmits={t['retransmits']}|dups_dropped={t['dups_dropped']}"
+         f"|timeout_fallbacks={t['timeout_fallbacks']}")
+
+    dm = lo.to_delay_model()
+    err1 = _replay_max_err(lo, build_session(GATE_WORKERS, dim=CHURN_DIM,
+                                             samples=4, delay_model=dm))
+    emit(f"lossy_replay_err_1dev,{err1:.2e},tol=1e-05")
+    ok = err1 <= 1e-5
+    if jax.device_count() >= 8:
+        from repro.launch.mesh import make_test_mesh
+        err8 = _replay_max_err(
+            lo, build_session(GATE_WORKERS, dim=CHURN_DIM, samples=4,
+                              delay_model=dm, mesh=make_test_mesh(8)))
+        emit(f"lossy_replay_err_spmd,{err8:.2e},mesh=data4xmodel2")
+        ok = ok and err8 <= 1e-5
+    else:
+        emit("lossy_replay_err_spmd,skipped,need 8 devices "
+             "(XLA_FLAGS=--xla_force_host_platform_device_count=8)")
+    if ratio > max_ratio:
+        emit(f"lossy_gate_FAILED,0,rounds ratio {ratio:.3f} > {max_ratio}")
+    if not ok:
+        emit("lossy_gate_FAILED,0,replay parity error above 1e-5")
+    return ok and ratio <= max_ratio
+
+
 def skew_scenario(emit, smoke: bool = False) -> bool:
     """Timing-only: zipf(a=1.5) vs uniform block selection at 8 workers
     under per-push commits (commit work paid per push, so a domain's
     busy time follows its push count). Skewed selection piles pushes
     onto the head blocks' lock domains — visible as queue-occupancy
-    spread across the 16 per-block servers."""
+    spread across the 16 per-block servers. Gated: the zipf run's
+    occupancy spread (busiest/mean domain busy fraction) must exceed
+    the uniform run's by ``min_skew_occupancy_ratio``."""
     R = 12 if smoke else 40
     timing = CostProfile(t_worker=ConstantService(1.0),
                          t_server_block=ConstantService(0.25),
                          t_push=0.05)
+    spread = {}
     for selection in ("random", "zipf"):
         sess = build_session(GATE_WORKERS, dim=CHURN_DIM, samples=4,
                              block_selection=selection, zipf_a=1.5)
         res = PSRuntime(sess.spec, discipline="per_push", timing=timing,
                         compute="timing").run(R)
         bf = res.metrics["server_busy_frac"]
+        spread[selection] = max(bf) / (sum(bf) / len(bf))
         emit(f"skew_{selection}_makespan,{res.makespan*1e6:.0f},"
-             f"busy_max={max(bf):.3f}|busy_min={min(bf):.3f}")
+             f"busy_max={max(bf):.3f}|busy_min={min(bf):.3f}"
+             f"|spread={spread[selection]:.3f}")
         _emit_hist(emit, f"skew_{selection}_occupancy_hist",
                    res.metrics["histograms"]["server_occupancy"])
+    min_ratio = json.loads(BASELINE.read_text())["min_skew_occupancy_ratio"]
+    ratio = spread["zipf"] / spread["random"]
+    emit(f"skew_spread_ratio,{ratio:.3f},min={min_ratio}")
+    if ratio < min_ratio:
+        emit(f"skew_gate_FAILED,0,zipf/random occupancy spread "
+             f"{ratio:.3f} < {min_ratio}")
+        return False
     return True
 
 
 def heavy_tail_scenario(emit, smoke: bool = False) -> bool:
     """Timing-only: Pareto(alpha=1.1) worker compute — Assumption 3's
     straggler tail — under round-buffered vs per-push commits. Stall
-    time concentrates on the workers behind the straggler."""
+    time concentrates on the workers behind the straggler. Gated: the
+    straggler tail must actually bite (lockfree stall time >=
+    ``min_heavy_tail_stall``) while every served read stays within the
+    enforced staleness bound."""
     R = 12 if smoke else 40
     timing = CostProfile(t_worker=ParetoService(1.0, alpha=1.1),
                          t_server_block=ConstantService(0.25))
+    stalls = {}
+    ok = True
     for disc in ("lockfree", "per_push"):
         sess = build_session(GATE_WORKERS, dim=CHURN_DIM, samples=4)
         res = PSRuntime(sess.spec, discipline=disc, timing=timing,
                         compute="timing").run(R)
         m = res.metrics
+        stalls[disc] = m["stall_time"]
+        ok = ok and m["max_served_tau"] <= m["bound"]
         emit(f"heavy_tail_{disc}_makespan,{res.makespan*1e6:.0f},"
              f"stall_time={m['stall_time']:.2f}"
              f"|max_served_tau={m['max_served_tau']}")
         _emit_hist(emit, f"heavy_tail_{disc}_stall_hist",
                    m["histograms"]["worker_stall_time"])
+    min_stall = json.loads(BASELINE.read_text())["min_heavy_tail_stall"]
+    emit(f"heavy_tail_lockfree_stall,{stalls['lockfree']:.2f},"
+         f"min={min_stall}")
+    if not ok:
+        emit("heavy_tail_gate_FAILED,0,served tau above the bound")
+        return False
+    if stalls["lockfree"] < min_stall:
+        emit(f"heavy_tail_gate_FAILED,0,lockfree stall time "
+             f"{stalls['lockfree']:.2f} < {min_stall} — straggler tail "
+             f"not biting; timing model regressed?")
+        return False
     return True
 
 
-SCENARIOS = {"churn": churn_scenario, "skew": skew_scenario,
-             "heavy_tail": heavy_tail_scenario}
+SCENARIOS = {"churn": churn_scenario, "lossy": lossy_scenario,
+             "skew": skew_scenario, "heavy_tail": heavy_tail_scenario}
 
 
 def main(emit=print, smoke: bool = False) -> None:
@@ -302,8 +398,11 @@ if __name__ == "__main__":
     ap.add_argument("--scenario", default=None, choices=sorted(SCENARIOS),
                     help="elastic-PS chaos study instead of Table 1: "
                          "churn (crash+rejoin, replay parity + "
-                         "rounds-to-tolerance gate), skew (zipf block "
-                         "selection), heavy_tail (Pareto stragglers)")
+                         "rounds-to-tolerance gate), lossy (unreliable "
+                         "transport: drop/dup/reorder + ack/retry, "
+                         "rounds-to-tolerance + replay gates), skew "
+                         "(zipf block selection), heavy_tail (Pareto "
+                         "stragglers)")
     args = ap.parse_args()
     if args.scenario is not None:
         if not SCENARIOS[args.scenario](print, smoke=args.smoke):

@@ -42,6 +42,28 @@ env PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" \
     XLA_FLAGS="--xla_force_host_platform_device_count=8" \
     python benchmarks/speedup.py --scenario churn --smoke
 
+# Lossy-transport gate: 8 real-compute workers over an unreliable
+# network (5% drop / 2% dup / 10% reorder with ack/retry/backoff
+# reliability). The lossy trace must replay through the vectorized
+# epoch (single-device AND the SPMD mesh — hence the forced 8 host
+# devices) and reach the reliable run's tolerance within
+# max_lossy_rounds_ratio x its round count (kernels_baseline.json)
+echo "[ci] lossy-transport gate (smoke, 8 host devices)"
+env PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" \
+    XLA_FLAGS="--xla_force_host_platform_device_count=8" \
+    python benchmarks/speedup.py --scenario lossy --smoke
+
+# Selection-skew and straggler-tail scenario gates (timing-only,
+# deterministic seeded draws): zipf selection must pile occupancy onto
+# the head lock domains (min_skew_occupancy_ratio) and the Pareto
+# compute tail must trigger bounded-staleness stalls without ever
+# serving past the bound (min_heavy_tail_stall)
+echo "[ci] skew + heavy-tail scenario gates (smoke)"
+env PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" \
+    python benchmarks/speedup.py --scenario skew --smoke
+env PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" \
+    python benchmarks/speedup.py --scenario heavy_tail --smoke
+
 # SPMD parity smoke: the sharded epoch needs an 8-host-device mesh, so
 # the parity suite runs in its own process with the device count forced
 # (inside the main tier-1 run below it skips) — single-device-only
@@ -56,6 +78,15 @@ echo "[ci] PS-trace -> SPMD-epoch replay parity, flat + tree (8 host devices)"
 env PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" \
     XLA_FLAGS="--xla_force_host_platform_device_count=8" \
     python -m pytest -x -q tests/test_ps_runtime.py -k spmd
+
+# Lossy-transport replay-parity cells: the drop/dup/reorder trace must
+# replay bitwise on pallas / fp32-ulp on jnp for BOTH spaces, plus the
+# SPMD cell (needs the forced 8 host devices; it skips inside the main
+# tier-1 run below)
+echo "[ci] lossy-transport replay parity, flat + tree x jnp + pallas + SPMD (8 host devices)"
+env PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" \
+    XLA_FLAGS="--xla_force_host_platform_device_count=8" \
+    python -m pytest -x -q tests/test_ps_transport.py -k "replay or spmd"
 
 exec env PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" \
     python -m pytest -x -q "$@"

@@ -152,7 +152,9 @@ class ConsensusSession:
                compute: str = "real",
                seed: Optional[int] = None,
                record_z: bool = True,
-               faults: Any = None):
+               faults: Any = None,
+               transport: Any = None,
+               check_finite: bool = False):
         """Drive ``num_rounds`` rounds under the event-driven Parameter
         Server runtime (``repro.ps``) instead of the vectorized epoch:
         per-block ``lockfree`` servers (or the ``locked`` full-vector
@@ -176,15 +178,35 @@ class ConsensusSession:
         to its JSON) injecting worker crash/rejoin, joins/leaves,
         slowdowns and server commit spikes — the run stays
         deterministic and its trace (staleness + participation) still
-        replays through the epoch; see API.md's elastic-PS section."""
+        replays through the epoch; see API.md's elastic-PS section.
+
+        ``transport`` is a :class:`~repro.ps.timing.Transport`
+        (unreliable network: drop/dup/reorder probabilities +
+        ack/retry/backoff) — convenience for setting ``timing.net``
+        when no other cost tuning is needed; with every knob at zero it
+        is inert (byte-identical to no transport). ``check_finite=True``
+        arms the divergence watchdog: the run halts with a
+        ``FloatingPointError`` naming the round/block the moment a
+        committed z goes NaN/Inf. See API.md's transport-reliability
+        section."""
+        import dataclasses as _dc
+
         from .ps import PSRuntime
         from .ps.chaos import FaultPlan
+        from .ps.timing import CostProfile
         if isinstance(faults, (str, bytes)) or hasattr(faults, "__fspath__"):
             faults = FaultPlan.load(faults)
+        if transport is not None:
+            if timing is not None and timing.net is not None:
+                raise ValueError(
+                    "pass the Transport either as transport= or as "
+                    "timing.net, not both")
+            timing = _dc.replace(timing if timing is not None
+                                 else CostProfile(), net=transport)
         rt = PSRuntime(self.spec, data=self.data, batches=batches,
                        discipline=discipline, timing=timing,
                        compute=compute, seed=seed, record_z=record_z,
-                       faults=faults)
+                       faults=faults, check_finite=check_finite)
         return rt.run(num_rounds, z0=z0 if z0 is not None else self.z0)
 
     def run(self, num_epochs: int, z0: Any = None, *,

@@ -767,6 +767,35 @@ def init_consensus_state(spec: ConsensusSpec, z0=None) -> ConsensusState:
     return state
 
 
+# Divergence watchdog (debug): when enabled, every epoch checks the
+# freshly committed z table for NaN/Inf and halts with the offending
+# round + block ids (FloatingPointError from the host callback) instead
+# of silently training on garbage. Off by default — the check syncs a
+# device->host copy per epoch. The PS runtime has its own per-commit
+# flavor (``PSRuntime(check_finite=True)``).
+_EPOCH_CHECK_FINITE = False
+
+
+def set_epoch_check_finite(enabled: bool) -> bool:
+    """Toggle the epoch-level NaN/Inf watchdog; returns the previous
+    setting (so tests/callers can restore it)."""
+    global _EPOCH_CHECK_FINITE
+    prev = _EPOCH_CHECK_FINITE
+    _EPOCH_CHECK_FINITE = bool(enabled)
+    return prev
+
+
+def _raise_nonfinite(t, bad_blocks) -> None:
+    bad = np.asarray(bad_blocks)
+    if bad.any():
+        blocks = np.nonzero(bad)[0].tolist()
+        raise FloatingPointError(
+            f"asybadmm_epoch divergence watchdog: the round-{int(t)} z "
+            f"update produced NaN/Inf in block(s) {blocks} — the run is "
+            f"training on garbage. Check rho / gamma / step sizes; "
+            f"disable with set_epoch_check_finite(False).")
+
+
 def asybadmm_epoch(spec: ConsensusSpec, state: ConsensusState, data
                    ) -> Tuple[ConsensusState, Dict[str, jax.Array]]:
     """One epoch of Algorithm 1 across all workers + servers — THE single
@@ -818,6 +847,11 @@ def asybadmm_epoch(spec: ConsensusSpec, state: ConsensusState, data
     z_new = space.server_consensus_update(
         space.current(state.z_hist), w_cache, spec.edge, rho_sum,
         spec.gamma, spec.reg)
+
+    if _EPOCH_CHECK_FINITE:
+        bad = ~jnp.all(jnp.isfinite(z_new.reshape(z_new.shape[0], -1)),
+                       axis=1)
+        jax.debug.callback(_raise_nonfinite, state.t, bad)
 
     info = {"loss": jnp.mean(losses),
             "selected_fraction": jnp.mean(sel.astype(jnp.float32))}

@@ -32,9 +32,19 @@ def run_ps_training(session, args, pipe, enc_kw) -> None:
     (repro.ps) instead of the vectorized epoch — real jitted numerics
     under lock-free (or locked) block servers, bounded staleness
     enforced by stalling, optional network latency on every
-    worker<->server message, and a replayable DelayTrace out."""
+    worker<->server message (an unreliable lossy transport with
+    ack/retry when --drop-rate/--dup-rate/--reorder-rate are set), and
+    a replayable DelayTrace out."""
     timing = None
-    if args.net_latency > 0.0 or args.net_jitter > 0.0:
+    lossy = (args.drop_rate > 0.0 or args.dup_rate > 0.0
+             or args.reorder_rate > 0.0)
+    if lossy:
+        from ..ps import CostProfile, Transport
+        timing = CostProfile(net=Transport(
+            args.net_latency, args.net_jitter,
+            drop_rate=args.drop_rate, dup_rate=args.dup_rate,
+            reorder_rate=args.reorder_rate, ack_timeout=args.ack_timeout))
+    elif args.net_latency > 0.0 or args.net_jitter > 0.0:
         from ..ps import CostProfile, NetworkModel
         timing = CostProfile(net=NetworkModel(args.net_latency,
                                               args.net_jitter))
@@ -142,6 +152,21 @@ def main() -> None:
     ap.add_argument("--net-jitter", type=float, default=0.0,
                     help="--runtime ps: +/- uniform jitter around "
                          "--net-latency per message")
+    ap.add_argument("--drop-rate", type=float, default=0.0,
+                    help="--runtime ps: probability a worker<->server "
+                         "message is lost (engages the ack/retry "
+                         "transport layer; see API.md transport section)")
+    ap.add_argument("--dup-rate", type=float, default=0.0,
+                    help="--runtime ps: probability a delivered message "
+                         "arrives twice (commit-gate dedup folds it once)")
+    ap.add_argument("--reorder-rate", type=float, default=0.0,
+                    help="--runtime ps: probability a delivered message "
+                         "is held back an extra random delay (reordered "
+                         "past later traffic on the same link)")
+    ap.add_argument("--ack-timeout", type=float, default=1.0,
+                    help="--runtime ps: sim seconds before an unacked "
+                         "message retransmits (capped exponential "
+                         "backoff on retries)")
     ap.add_argument("--lr", type=float, default=1e-3)
     ap.add_argument("--ckpt", default=None)
     ap.add_argument("--log-every", type=int, default=10)

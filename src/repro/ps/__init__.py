@@ -15,9 +15,14 @@ into executable, measurable, replayable scenarios:
 * :class:`FaultPlan` / :class:`FaultInjector` +
   :class:`MembershipManager` — deterministic chaos (crash / rejoin /
   join / leave / slowdown / server spikes) over an elastic fleet;
+* :class:`Transport` + :class:`TransportFabric` — unreliable
+  worker<->server links (drop / duplicate / reorder, seeded per link)
+  with ack/retry/backoff reliability, exactly-once commit folds, and
+  graceful pull-timeout degradation within Assumption 3's bound;
 * :class:`DelayTrace` — records what happened (staleness + partial
-  participation + chaos events); replays through the fast
-  ``asybadmm_epoch`` via ``core.space.TraceDelay`` exactly;
+  participation + chaos events + transport delivery log); replays
+  through the fast ``asybadmm_epoch`` via ``core.space.TraceDelay``
+  exactly;
 * :class:`PSRuntime` / :class:`PSRunResult` — the front door, also
   reachable as ``ConsensusSession.run_ps(...)`` and
   ``repro.launch.train --runtime ps``.
@@ -35,8 +40,10 @@ from .server import (BlockServerProc, Discipline, DISCIPLINES,
 from .staleness import StalenessEnforcer
 from .timing import (SERVICE_MODELS, ConstantService, CostProfile,
                      LognormalService, NetworkModel, ParetoService,
-                     ServiceModel, as_network, as_service, measure_costs)
+                     ServiceModel, Transport, as_network, as_service,
+                     measure_costs)
 from .trace import DelayTrace
+from .transport import LinkChannel, TransportFabric
 from .worker import WorkerProc
 
 __all__ = [
@@ -44,7 +51,8 @@ __all__ = [
     "BlockServerProc", "Discipline", "DISCIPLINES", "register_discipline",
     "resolve_discipline", "StalenessEnforcer", "SERVICE_MODELS",
     "ConstantService", "CostProfile", "LognormalService", "NetworkModel",
-    "ParetoService", "ServiceModel", "as_network", "as_service",
-    "measure_costs", "DelayTrace", "WorkerProc",
+    "ParetoService", "ServiceModel", "Transport", "as_network",
+    "as_service", "measure_costs", "DelayTrace", "LinkChannel",
+    "TransportFabric", "WorkerProc",
     "FaultEvent", "FaultInjector", "FaultPlan", "MembershipManager",
 ]

@@ -29,6 +29,14 @@ Event kinds
 ``server_spike`` commit-service draws of the lock domain holding block
                  ``block`` are multiplied by ``factor`` during
                  [at, at+duration) — a slow/hot server.
+``link_loss``    a windowed loss burst: every message sent during
+                 [at, at+duration) is dropped with probability
+                 ``factor`` (composed with the Transport's base
+                 drop_rate as ``1-(1-p)(1-q)``), scoped to worker
+                 ``worker`` and/or the lock domain holding block
+                 ``block`` when given, fleet-wide otherwise. A plan
+                 with link_loss events engages the ack/retry transport
+                 layer even when the base network is reliable.
 """
 from __future__ import annotations
 
@@ -39,7 +47,8 @@ from typing import Dict, List, Optional, Tuple
 
 import numpy as np
 
-FAULT_KINDS = ("crash", "leave", "join", "slowdown", "server_spike")
+FAULT_KINDS = ("crash", "leave", "join", "slowdown", "server_spike",
+               "link_loss")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -80,6 +89,23 @@ class FaultEvent:
                     or self.factor <= 0.0:
                 raise ValueError(f"{self.kind} needs a finite factor > 0; "
                                  f"got {self.factor}")
+        if self.kind == "link_loss":
+            if self.duration is None or self.duration <= 0.0:
+                raise ValueError(f"link_loss needs duration > 0; got "
+                                 f"{self.duration}")
+            if self.factor is None or not np.isfinite(self.factor) \
+                    or not 0.0 < self.factor <= 1.0:
+                raise ValueError(
+                    f"link_loss factor is the window's drop probability "
+                    f"and must be in (0, 1]; got {self.factor}")
+            if self.worker is not None and num_workers is not None \
+                    and not 0 <= self.worker < num_workers:
+                raise ValueError(f"link_loss worker {self.worker} outside "
+                                 f"[0, {num_workers})")
+            if self.block is not None and num_blocks is not None \
+                    and not 0 <= self.block < num_blocks:
+                raise ValueError(f"link_loss block {self.block} outside "
+                                 f"[0, {num_blocks})")
         if self.kind == "crash" and self.duration is not None \
                 and self.duration <= 0.0:
             raise ValueError(f"crash downtime must be > 0 (or omitted for "
@@ -123,6 +149,12 @@ class FaultPlan:
         return self
 
     @property
+    def has_link_loss(self) -> bool:
+        """Whether any event is a link_loss burst — the runtime engages
+        the unreliable-transport layer when so."""
+        return any(e.kind == "link_loss" for e in self.events)
+
+    @property
     def cold_workers(self) -> frozenset:
         """Workers that boot cold (join events) — excluded from the
         initial fleet by the runtime."""
@@ -157,6 +189,16 @@ class FaultPlan:
                      ) -> FaultEvent:
         return FaultEvent("server_spike", at, block=block, duration=duration,
                           factor=factor)
+
+    @staticmethod
+    def link_loss(at: float, duration: float, drop: float, *,
+                  worker: Optional[int] = None,
+                  block: Optional[int] = None) -> FaultEvent:
+        """A loss burst: messages during [at, at+duration) drop with
+        probability ``drop``, scoped to ``worker``'s links and/or the
+        lock domain holding ``block`` when given."""
+        return FaultEvent("link_loss", at, worker=worker, block=block,
+                          duration=duration, factor=drop)
 
     @classmethod
     def churn(cls, num_workers: int, *, seed: int = 0, crashes: int = 2,
@@ -215,6 +257,8 @@ class FaultInjector:
         self.rt = runtime
         self._worker_windows = defaultdict(list)   # i -> [(s, e, factor)]
         self._block_windows = defaultdict(list)    # j -> [(s, e, factor)]
+        # [(s, e, drop_p, worker|None, block|None)] — queried per send
+        self._link_windows = []
         for e in self.plan.events:
             if e.kind == "slowdown":
                 self._worker_windows[e.worker].append(
@@ -222,6 +266,9 @@ class FaultInjector:
             elif e.kind == "server_spike":
                 self._block_windows[e.block].append(
                     (e.at, e.at + e.duration, e.factor))
+            elif e.kind == "link_loss":
+                self._link_windows.append(
+                    (e.at, e.at + e.duration, e.factor, e.worker, e.block))
 
     def install(self) -> None:
         """Schedule the plan's membership transitions (before t=0
@@ -229,7 +276,7 @@ class FaultInjector:
         deterministically either way, by insertion seq)."""
         sched = self.rt.sched
         for e in self.plan.events:
-            if e.kind in ("slowdown", "server_spike"):
+            if e.kind in ("slowdown", "server_spike", "link_loss"):
                 # factor windows are queried, not scheduled — log them
                 # into the trace timeline up front
                 self.rt.trace.add_event(e.kind, **{
@@ -271,6 +318,23 @@ class FaultInjector:
             if w:
                 f *= self._factor(w, now)
         return f
+
+    def link_drop(self, worker: int, block_ids, now: float) -> float:
+        """Burst drop probability for a (worker, lock domain) link at
+        sim time ``now``: overlapping windows compose as independent
+        loss processes, ``1 - prod(1 - p_k)``. A window scoped to a
+        worker/block applies only to links touching it; unscoped
+        windows apply fleet-wide."""
+        keep = 1.0
+        for (s, e, p, w, b) in self._link_windows:
+            if not s <= now < e:
+                continue
+            if w is not None and w != worker:
+                continue
+            if b is not None and b not in block_ids:
+                continue
+            keep *= 1.0 - p
+        return 1.0 - keep
 
     @property
     def empty(self) -> bool:

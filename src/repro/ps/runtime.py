@@ -39,8 +39,9 @@ from .events import EventScheduler
 from .membership import MembershipManager
 from .server import BlockServerProc, resolve_discipline
 from .staleness import StalenessEnforcer
-from .timing import CostProfile
+from .timing import CostProfile, Transport
 from .trace import DelayTrace
+from .transport import TransportFabric
 from .worker import WorkerProc
 
 
@@ -81,7 +82,8 @@ class PSRuntime:
                  seed: Optional[int] = None,
                  staleness_bound: Optional[int] = None,
                  record_z: bool = True,
-                 faults: Optional[FaultPlan] = None):
+                 faults: Optional[FaultPlan] = None,
+                 check_finite: bool = False):
         if compute not in ("real", "timing"):
             raise ValueError(f"compute must be 'real' or 'timing'; "
                              f"got {compute!r}")
@@ -110,6 +112,9 @@ class PSRuntime:
                       else int(staleness_bound))
         self.faults = faults.validate(self.engine.N, self.engine.M) \
             if faults is not None else None
+        # divergence watchdog: halt the run (FloatingPointError naming
+        # the round/block) the moment a committed z goes NaN/Inf
+        self.check_finite = bool(check_finite) and not self.timing_only
         self._fixed_data = data
         self._batches = batches
         if not self.timing_only and data is None and batches is None:
@@ -146,6 +151,30 @@ class PSRuntime:
         self.membership = MembershipManager(eng.N, num_rounds, cold=cold)
         elastic = self.faults is not None and bool(self.faults.events)
 
+        # --- unreliable transport (inert unless a knob or fault turns
+        # loss on: reliable runs keep the exact pre-transport paths) ---
+        raw_net = self.timing_profile.net
+        base_tr = raw_net if isinstance(raw_net, Transport) else None
+        lossy_faults = self.faults is not None and self.faults.has_link_loss
+        if base_tr is not None and (base_tr.unreliable or lossy_faults):
+            self.transport = base_tr
+        elif lossy_faults:
+            # link_loss bursts need the ack/retry layer even when the
+            # base network is reliable — synthesize a zero-knob
+            # Transport carrying the base latency model
+            self.transport = Transport(
+                latency=self.net.latency if self.net else 0.0,
+                jitter=self.net.jitter if self.net else 0.0)
+        else:
+            self.transport = None
+        self.fabric = None
+        if self.transport is not None:
+            self.fabric = TransportFabric(
+                self.transport, self.sched, self.seed,
+                recorder=self.trace.add_transport,
+                burst_drop=self.injector.link_drop
+                if not self.injector.empty else None)
+
         # --- numeric state (Algorithm 1 lines 1-2) ---
         if self.timing_only:
             self.y = self.w = self.x = None
@@ -175,7 +204,8 @@ class PSRuntime:
                 timing_only=self.timing_only, per_push=self.per_push,
                 membership=self.membership if elastic else None,
                 fault_factor=self.injector.server_factor
-                if not self.injector.empty else None))
+                if not self.injector.empty else None,
+                runtime=self))
         self.domain_of_block = [None] * eng.M
         for dom in self.domains:
             for j in dom.block_ids:
@@ -270,10 +300,30 @@ class PSRuntime:
                 fault_events=len(self.faults.events),
                 crashes=self.membership.crashes,
                 rejoins=self.membership.rejoins)
+        if self.transport is not None:
+            tstats = self.fabric.stats()
+            tstats["dups_dropped"] = sum(d.dups_dropped
+                                         for d in self.domains)
+            tstats["timeout_fallbacks"] = self.enforcer.timeout_fallbacks
+            metrics["transport"] = tstats
+            self.trace.meta.update(transport={
+                "drop_rate": self.transport.drop_rate,
+                "dup_rate": self.transport.dup_rate,
+                "reorder_rate": self.transport.reorder_rate,
+                "ack_timeout": self.transport.ack_timeout,
+                **{k: tstats[k] for k in
+                   ("sent", "delivered", "drops", "dups", "reorders",
+                    "retransmits", "dups_dropped", "timeout_fallbacks",
+                    "delivery_rate")}})
         return PSRunResult(makespan=makespan, num_rounds=num_rounds,
                            discipline=self.discipline, trace=self.trace,
                            z_final=z_final, z_versions=z_versions,
                            losses=losses, metrics=metrics)
+
+    # ------------------------------------------------------------------
+    def worker_proc(self, i: int) -> WorkerProc:
+        """Routing handle for server->worker messages (transport mode)."""
+        return self._workers[i]
 
     # ------------------------------------------------------------------
     # chaos transitions (driven by the FaultInjector's scheduled events)
@@ -286,6 +336,12 @@ class PSRuntime:
         wk.kill()
         self.membership.deactivate(i, r)
         self.enforcer.drop_worker(i)
+        if self.transport is not None:
+            # pending pull requests died with the incarnation; clearing
+            # the servers' dedup state lets a revived worker's
+            # re-request for the same round be served as new
+            for dom in self.domains:
+                dom.forget_pending_pulls(i)
         self.trace.add_event("leave" if permanent else "crash",
                              worker=i, round=r, time=self.sched.now)
         # gates waiting on this worker's declaration must re-check

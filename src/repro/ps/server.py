@@ -130,7 +130,7 @@ class BlockServerProc:
                  rng: np.random.Generator, num_rounds: int,
                  edge_workers: frozenset, contents0: dict, caches0: dict,
                  timing_only: bool, per_push: bool = False,
-                 membership=None, fault_factor=None):
+                 membership=None, fault_factor=None, runtime=None):
         self.sid = sid
         self.block_ids = tuple(block_ids)
         self.engine = engine
@@ -146,6 +146,16 @@ class BlockServerProc:
         self.membership = membership
         # chaos hook: commit-latency multiplier at a sim time
         self._fault_factor = fault_factor
+        # unreliable-transport state (None/unused on reliable runs):
+        # the owning runtime (for routing responses/acks back through
+        # its fabric), per-(worker, round) pull dedup, dup counter, and
+        # the exactly-once fold log the property tests pin
+        self.rt = runtime
+        self._pull_state: Dict[Tuple[int, int], Optional[int]] = {}
+        self.dups_dropped = 0
+        self.fold_log: Optional[list] = \
+            [] if runtime is not None and runtime.transport is not None \
+            else None
 
         self.version = 0
         # contents[j][v] = block j's committed content at version v
@@ -212,6 +222,67 @@ class BlockServerProc:
         self._unprocessed[t] -= 1
         self._maybe_commit()
 
+    # ---- unreliable-transport endpoints -----------------------------------
+    # Only reachable when the runtime routes messages through a lossy
+    # Transport; reliable runs never enter these paths.
+
+    def on_pull_request(self, i: int, t: int) -> None:
+        """Worker i's round-t pull REQUEST arrived over the lossy link.
+        The served version is fixed exactly once per (worker, round) —
+        a retransmitted request whose original is still pending is
+        dropped (the pending resolution will answer both), and one
+        whose response was already sent gets the SAME version resent
+        (the response, not the request, must have been lost)."""
+        key = (i, t)
+        if key in self._pull_state:
+            self.dups_dropped += 1
+            v = self._pull_state[key]
+            if v is not None:
+                self._send_pull_response(i, t, v)
+            return
+        self._pull_state[key] = None       # pending at the enforcer
+        self.enforcer.request(
+            self, t, self.sched.now,
+            lambda version, i=i, t=t: self._pull_served(i, t, version),
+            worker=i)
+
+    def _pull_served(self, i: int, t: int, version: int) -> None:
+        self._pull_state[(i, t)] = version
+        self._send_pull_response(i, t, version)
+
+    def _send_pull_response(self, i: int, t: int, version: int) -> None:
+        wk = self.rt.worker_proc(i)
+        self.rt.fabric.link(i, self).send(
+            lambda: wk.on_pull_response(self, t, version),
+            msg="pull_resp", t=t)
+
+    def forget_pending_pulls(self, i: int) -> None:
+        """Worker i crashed: its pending pull requests died with it (the
+        enforcer already dropped the parked resolutions). Clearing the
+        dedup state lets the revived incarnation's re-request for the
+        same round be treated as NEW instead of an eternal duplicate."""
+        for key in [k for k, v in self._pull_state.items()
+                    if k[0] == i and v is None]:
+            del self._pull_state[key]
+
+    def on_declare_msg(self, i: int, t: int, pushes: list) -> None:
+        """Worker i's round-t declaration bundle arrived over the lossy
+        link. The commit gate dedups by (worker, round): a bundle for an
+        already-committed round (t < version) or one already declared
+        this round folds ZERO more times — but is re-acked either way,
+        because a duplicate here usually means the original ack was
+        lost and the worker is still retransmitting."""
+        if t < self.version or i in self._decl[t]:
+            self.dups_dropped += 1
+        else:
+            self.on_declare(i, t, pushes)
+        self._send_ack(i, t)
+
+    def _send_ack(self, i: int, t: int) -> None:
+        wk = self.rt.worker_proc(i)
+        self.rt.fabric.link(i, self).send(
+            lambda: wk.on_declare_ack(self, t), msg="ack", t=t)
+
     # ---- commit machinery -------------------------------------------------
     def _required_declarations(self, v: int) -> frozenset:
         """Who round v's gate waits on: the edge neighborhood, minus
@@ -247,6 +318,8 @@ class BlockServerProc:
         # pays its commit latency eagerly but folds at the SAME point,
         # so the published version is bit-identical across disciplines)
         pushes = self._push_buf.pop(v, [])
+        if self.fold_log is not None:
+            self.fold_log.extend((v, i, j) for (i, j, _) in pushes)
         if not self.timing_only:
             for (i, j, value) in pushes:
                 self.caches[j] = self.engine.apply_push(self.caches[j], i,
@@ -254,6 +327,16 @@ class BlockServerProc:
             for j in self.block_ids:
                 self.contents[j][v + 1] = self.engine.commit_block(
                     j, self.contents[j][v], self.caches[j])
+            if self.rt is not None and self.rt.check_finite:
+                for j in self.block_ids:
+                    if not np.all(np.isfinite(
+                            np.asarray(self.contents[j][v + 1]))):
+                        raise FloatingPointError(
+                            f"divergence watchdog: committed z for block "
+                            f"{j} at round {v} (version {v + 1}) contains "
+                            f"NaN/Inf — the run is training on garbage. "
+                            f"Check rho / step sizes; rerun with "
+                            f"check_finite=False to disable this halt.")
         self.version = v + 1
         self.commits += 1
         self._decl.pop(v, None)

@@ -24,6 +24,13 @@ requests whose staleness is within the bound by construction. The
 enforcer never compares a resumed round index against the worker's
 pre-crash pull history — it only ever validates the (t, version) pair
 it serves.
+
+Unreliable transport: a pull whose response keeps getting lost degrades
+gracefully — after the retransmission budget the worker proceeds on its
+cached z (:meth:`fallback`), which the enforcer validates against the
+SAME tau <= T bound and accounts as ``timeout_fallbacks`` (extra
+staleness steps, not violations). A cache too stale to satisfy the
+bound is not a legal fallback; the worker keeps retransmitting.
 """
 from __future__ import annotations
 
@@ -44,6 +51,7 @@ class StalenessEnforcer:
         self.stall_time = 0.0
         self.dropped_pulls = 0
         self.version_resets = 0
+        self.timeout_fallbacks = 0
         self.stall_time_by_worker: Dict[int, float] = defaultdict(float)
         self.stall_count_by_worker: Dict[int, int] = defaultdict(int)
         # server sid -> FIFO [(worker id, round t, issue time, resolve)]
@@ -96,6 +104,24 @@ class StalenessEnforcer:
             else:
                 del self._waiting[sid]
 
+    def fallback(self, t: int, version: int, *, worker: int = -1) -> None:
+        """A worker's round-t pull timed out through every retry on an
+        unreliable transport, and it is proceeding on its CACHED version
+        instead of deadlocking (graceful degradation). The read must
+        still satisfy Assumption 3 — the extra staleness steps count
+        against the same tau <= T bound every served pull is held to
+        (validated here; the caller checks eligibility before falling
+        back) — so the recorded trace stays within its declared bound
+        and replays unchanged."""
+        tau = t - version
+        if not 0 <= tau <= self.bound:
+            raise AssertionError(
+                f"timeout fallback for worker {worker} would read "
+                f"tau={tau} outside [0, {self.bound}] — the worker must "
+                f"keep retransmitting instead")
+        self.timeout_fallbacks += 1
+        self.max_served_tau = max(self.max_served_tau, tau)
+
     def note_rejoin(self) -> None:
         """Membership resumed a worker at the service frontier — count
         the version reset (tau accounting restarts from the resumed
@@ -123,4 +149,5 @@ class StalenessEnforcer:
                 "stall_count": self.stall_count,
                 "stall_time": self.stall_time,
                 "dropped_pulls": self.dropped_pulls,
-                "version_resets": self.version_resets}
+                "version_resets": self.version_resets,
+                "timeout_fallbacks": self.timeout_fallbacks}

@@ -124,13 +124,102 @@ class NetworkModel:
                    + self.jitter * (2.0 * float(rng.random()) - 1.0))
 
 
+@dataclasses.dataclass(frozen=True)
+class Transport(NetworkModel):
+    """An *unreliable* network between workers and block servers.
+
+    Extends :class:`NetworkModel` (constant + jitter latency per
+    message) with per-link delivery faults, drawn from seeded per-link
+    rngs so lossy runs stay exactly as deterministic and replayable as
+    reliable ones:
+
+    drop_rate    : probability a sent message is lost;
+    dup_rate     : probability a delivered message arrives twice;
+    reorder_rate : probability a delivered copy is held back an extra
+                   U(0, reorder window) — enough to land after later
+                   traffic on the same link;
+    ack_timeout  : how long the sender waits for the response/ack
+                   before retransmitting;
+    max_retries  : pull retransmissions before the worker degrades
+                   gracefully to its cached z (when that read still
+                   satisfies Assumption 3's tau <= T); declarations
+                   retransmit without bound — a round's pushes must
+                   eventually commit;
+    backoff      : exponential retransmission backoff multiplier,
+                   capped at ``max_backoff`` timeouts;
+    reorder_window : extra-delay window for reordered copies
+                   (0.0 = one ack_timeout).
+
+    With every fault knob at zero the transport is INERT: the runtime
+    routes messages through the plain :class:`NetworkModel` path (or no
+    network model at all), byte-identical to pre-transport behavior.
+    The reliability machinery — sequence numbers, acks, retransmits,
+    commit-gate dedup — engages only when a knob is on (or a
+    ``link_loss`` fault window makes a link lossy mid-run).
+    """
+    drop_rate: float = 0.0
+    dup_rate: float = 0.0
+    reorder_rate: float = 0.0
+    ack_timeout: float = 1.0
+    max_retries: int = 3
+    backoff: float = 2.0
+    max_backoff: float = 8.0
+    reorder_window: float = 0.0
+
+    def __post_init__(self):
+        super().__post_init__()
+        for name in ("drop_rate", "dup_rate", "reorder_rate"):
+            p = getattr(self, name)
+            if not (0.0 <= p < 1.0) or not np.isfinite(p):
+                raise ValueError(
+                    f"transport {name} must be a probability in [0, 1) "
+                    f"(1.0 would never deliver); got {p}")
+        if not np.isfinite(self.ack_timeout) or self.ack_timeout <= 0.0:
+            raise ValueError(f"transport ack_timeout must be finite and "
+                             f"> 0; got {self.ack_timeout}")
+        if self.max_retries < 0:
+            raise ValueError(f"transport max_retries must be >= 0; got "
+                             f"{self.max_retries}")
+        if not np.isfinite(self.backoff) or self.backoff < 1.0:
+            raise ValueError(f"transport backoff multiplier must be >= 1; "
+                             f"got {self.backoff}")
+        if self.max_backoff < 1.0:
+            raise ValueError(f"transport max_backoff must be >= 1 "
+                             f"ack_timeout; got {self.max_backoff}")
+        if self.reorder_window < 0.0:
+            raise ValueError(f"transport reorder_window must be >= 0; got "
+                             f"{self.reorder_window}")
+
+    @property
+    def unreliable(self) -> bool:
+        """Whether any fault knob is on — the switch between the plain
+        NetworkModel path and the ack/retry reliability sublayer."""
+        return (self.drop_rate > 0.0 or self.dup_rate > 0.0
+                or self.reorder_rate > 0.0)
+
+    def timeout(self, retry: int) -> float:
+        """Retransmission timeout for attempt ``retry`` (0-based):
+        capped exponential backoff."""
+        return self.ack_timeout * min(self.backoff ** retry,
+                                      self.max_backoff)
+
+    def reorder_extra(self, rng: np.random.Generator) -> float:
+        window = self.reorder_window if self.reorder_window > 0.0 \
+            else self.ack_timeout
+        return window * float(rng.random())
+
+
 def as_network(v) -> Optional[NetworkModel]:
     """None / 0.0 -> no network model; float -> constant latency;
     NetworkModel passes through (degenerate zero models drop to None so
-    the zero-latency scheduler path stays byte-identical)."""
+    the zero-latency scheduler path stays byte-identical). An
+    *unreliable* :class:`Transport` always passes through — loss alone
+    engages the messaging layer even at zero latency."""
     if v is None:
         return None
     net = v if isinstance(v, NetworkModel) else NetworkModel(float(v))
+    if isinstance(net, Transport) and net.unreliable:
+        return net
     return net if (net.latency > 0.0 or net.jitter > 0.0) else None
 
 
@@ -146,8 +235,10 @@ class CostProfile:
                      (queueing delay on the lock domain) — a plain
                      float, charged deterministically per push;
     net            : worker<->server network latency per message —
-                     None (ideal network), a float (constant), or a
-                     :class:`NetworkModel` (constant + jitter).
+                     None (ideal network), a float (constant), a
+                     :class:`NetworkModel` (constant + jitter), or a
+                     :class:`Transport` (unreliable: drop / duplicate /
+                     reorder with ack+retransmit reliability).
     ``t_worker`` / ``t_server_block`` floats coerce to
     ConstantService; pass a ServiceModel for jitter.
     """

@@ -24,9 +24,13 @@ File format (``.npz``): ``delays`` (rounds, N, M) int32, ``bound`` (the
 Assumption-3 T the enforcer guaranteed), ``discipline``, a JSON
 ``meta`` blob (timing config, seeds, makespan), and — only when the run
 was elastic — ``participation`` (rounds, N) bool and a JSON ``events``
-list. Pre-chaos files simply lack the new keys; ``load`` defaults them
-(full participation, no events), so old traces keep loading — pinned by
-tests/test_ps_chaos.py.
+list, and — only when the run went over an unreliable transport — a
+JSON ``transport`` delivery log. Older files simply lack the newer
+keys; ``load`` defaults them (full participation, no events, no
+transport log), so old traces keep loading — pinned by
+tests/test_ps_chaos.py. ``load`` validates the archive eagerly and
+raises an actionable ``ValueError`` (file, offending key, shape) on
+truncated/corrupt files.
 """
 from __future__ import annotations
 
@@ -46,8 +50,15 @@ class DelayTrace:
     # (rounds, N) bool; None = full participation (pre-chaos traces)
     participation: Optional[np.ndarray] = None
     # chaos timeline: [{"kind": "crash"|"rejoin"|"join"|"leave"|
-    #                   "slowdown"|"server_spike", ...}]
+    #                   "slowdown"|"server_spike"|"link_loss", ...}]
     events: List[Dict[str, Any]] = dataclasses.field(default_factory=list)
+    # unreliable-transport delivery log: every drop / dup / reorder /
+    # retransmit / pull-timeout decision, in decision order. Debugging
+    # detail only — the staleness matrix + participation mask (the
+    # EFFECTIVE committed schedule) are what replay consumes, so lossy
+    # traces replay through ``asybadmm_epoch`` exactly like reliable
+    # ones. Empty (and unsaved) on reliable runs.
+    transport: List[Dict[str, Any]] = dataclasses.field(default_factory=list)
 
     @classmethod
     def empty(cls, num_rounds: int, n_workers: int, n_blocks: int,
@@ -76,6 +87,12 @@ class DelayTrace:
 
     def add_event(self, kind: str, **fields) -> None:
         self.events.append({"kind": kind, **fields})
+
+    def add_transport(self, kind: str, **fields) -> None:
+        """Log one delivery decision (drop/dup/reorder/retransmit/
+        pull_timeout) from a lossy link — the TransportFabric's
+        recorder hook."""
+        self.transport.append({"kind": kind, **fields})
 
     @property
     def num_rounds(self) -> int:
@@ -122,20 +139,75 @@ class DelayTrace:
             extra["participation"] = self.participation
         if self.events:
             extra["events"] = np.str_(json.dumps(self.events))
+        if self.transport:
+            extra["transport"] = np.str_(json.dumps(self.transport))
         np.savez(path, delays=self.delays, bound=np.int32(self.bound),
                  discipline=np.str_(self.discipline),
                  meta=np.str_(json.dumps(self.meta)), **extra)
         return path
 
+    # keys every trace file must carry / may carry (optional ones are
+    # absent on pre-chaos / reliable-transport files — load defaults
+    # them, so old traces keep loading)
+    _REQUIRED_KEYS = ("delays", "bound", "discipline")
+    _OPTIONAL_KEYS = ("meta", "participation", "events", "transport")
+
     @staticmethod
     def load(path: str) -> "DelayTrace":
-        with np.load(path, allow_pickle=False) as f:
-            return DelayTrace(
-                delays=np.asarray(f["delays"], np.int32),
-                bound=int(f["bound"]),
-                discipline=str(f["discipline"]),
-                meta=json.loads(str(f["meta"])) if "meta" in f else {},
-                participation=(np.asarray(f["participation"], bool)
-                               if "participation" in f else None),
-                events=(json.loads(str(f["events"]))
-                        if "events" in f else []))
+        """Load a saved trace, failing with an ACTIONABLE error — the
+        file, the missing/extra key, or the shape that is wrong — on a
+        truncated or corrupt npz instead of leaking a raw numpy
+        exception from deep inside the zip reader."""
+        def bad(problem: str) -> ValueError:
+            return ValueError(
+                f"DelayTrace.load: {path!r} is not a valid trace file — "
+                f"{problem}. Expected an .npz written by DelayTrace.save "
+                f"with keys {list(DelayTrace._REQUIRED_KEYS)} (+ optional "
+                f"{list(DelayTrace._OPTIONAL_KEYS)}); re-record the trace "
+                f"or check the file was fully written.")
+        try:
+            f = np.load(path, allow_pickle=False)
+        except FileNotFoundError:
+            raise
+        except Exception as e:
+            raise bad(f"unreadable as npz ({type(e).__name__}: {e}); the "
+                      f"file is likely truncated or not an npz archive") \
+                from e
+        with f:
+            keys = set(f.files)
+            missing = [k for k in DelayTrace._REQUIRED_KEYS
+                       if k not in keys]
+            if missing:
+                raise bad(f"missing required key(s) {missing}; "
+                          f"found {sorted(keys)}")
+            extra = sorted(keys - set(DelayTrace._REQUIRED_KEYS)
+                           - set(DelayTrace._OPTIONAL_KEYS))
+            if extra:
+                raise bad(f"unrecognized key(s) {extra}; this file was "
+                          f"not written by DelayTrace.save (or by a "
+                          f"newer incompatible version)")
+            try:
+                delays = np.asarray(f["delays"], np.int32)
+                bound = int(f["bound"])
+                discipline = str(f["discipline"])
+                meta = json.loads(str(f["meta"])) if "meta" in f else {}
+                participation = (np.asarray(f["participation"], bool)
+                                 if "participation" in f else None)
+                events = (json.loads(str(f["events"]))
+                          if "events" in f else [])
+                transport = (json.loads(str(f["transport"]))
+                             if "transport" in f else [])
+            except Exception as e:
+                raise bad(f"corrupt array/JSON payload "
+                          f"({type(e).__name__}: {e})") from e
+        if delays.ndim != 3:
+            raise bad(f"'delays' must be (rounds, N, M) 3-d; got shape "
+                      f"{delays.shape}")
+        if participation is not None \
+                and participation.shape != delays.shape[:2]:
+            raise bad(f"'participation' shape {participation.shape} does "
+                      f"not match delays' (rounds, N) = {delays.shape[:2]}")
+        return DelayTrace(delays=delays, bound=bound,
+                          discipline=discipline, meta=meta,
+                          participation=participation, events=events,
+                          transport=transport)

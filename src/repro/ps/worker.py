@@ -58,6 +58,13 @@ class WorkerProc:
         self._pulled = {}
         self._pending = 0
         self._issued = False
+        # unreliable-transport state: last committed version observed per
+        # domain (the graceful-degradation fallback read), and the
+        # (domain, round) declare bundles the server has acked. Both
+        # survive kill/revive: the cache is still a legally committed
+        # version, and completed rounds' declares must keep deduping.
+        self._cache = {}
+        self._acked = set()
 
     # ---- elasticity -------------------------------------------------------
     def kill(self) -> None:
@@ -98,6 +105,11 @@ class WorkerProc:
         self._pending = len(self.rt.domains)
         net = self.rt.net
         for dom in self.rt.domains:
+            if self.rt.transport is not None:
+                # lossy link: request/response with ack-by-response,
+                # timeout + backoff retransmission, cache fallback
+                self._pull_attempt(dom, t, 0)
+                continue
             if net is None:
                 resolve = (lambda version, dom=dom:
                            self._on_pull(dom, version))
@@ -117,9 +129,75 @@ class WorkerProc:
 
     def _on_pull(self, dom, version: int) -> None:
         self._pulled[dom.sid] = version
+        if self.rt.transport is not None:
+            self._cache[dom.sid] = max(self._cache.get(dom.sid, 0), version)
         self._pending -= 1
         if self._issued and self._pending == 0:
             self._start_compute()
+
+    # ---- unreliable-transport pull cycle ----------------------------------
+    def _pull_attempt(self, dom, t: int, retry: int) -> None:
+        ch = self.rt.fabric.link(self.i, dom)
+        if retry > 0:
+            ch.note_retransmit("pull_req", t, retry)
+        ch.send(lambda: dom.on_pull_request(self.i, t),
+                msg="pull_req", t=t)
+        self.rt.sched.after(
+            self.rt.transport.timeout(retry),
+            self._guarded(lambda: self._pull_retry(dom, t, retry)))
+
+    def _pull_retry(self, dom, t: int, retry: int) -> None:
+        """Retransmission timer fired: resend unless the pull resolved
+        meanwhile. After ``max_retries`` the worker degrades gracefully
+        to its cached version — IF that read still satisfies
+        Assumption 3's tau <= bound; a cache too stale to be legal keeps
+        retransmitting (the server must catch up eventually, and the
+        bounded-staleness stall is exactly what the theory expects)."""
+        if self.t != t or self._pending == 0 or dom.sid in self._pulled:
+            return
+        tr = self.rt.transport
+        cached = self._cache.get(dom.sid, 0)
+        if retry >= tr.max_retries and t - cached <= self.rt.enforcer.bound:
+            ch = self.rt.fabric.link(self.i, dom)
+            ch.note_timeout("pull_req", t, cached)
+            self.rt.enforcer.fallback(t, cached, worker=self.i)
+            self._on_pull(dom, cached)
+            return
+        self._pull_attempt(dom, t, retry + 1)
+
+    def on_pull_response(self, dom, t: int, version: int) -> None:
+        """A pull response landed off the link (possibly late, possibly
+        a duplicate, possibly for a round this incarnation already left
+        behind) — only the first response for the CURRENT round's
+        outstanding pull resolves it."""
+        if (not self.alive or self.t != t or self._pending == 0
+                or dom.sid in self._pulled):
+            return
+        self._on_pull(dom, version)
+
+    # ---- unreliable-transport declare cycle -------------------------------
+    def _declare_reliably(self, dom, t: int, pushes: list,
+                          retry: int = 0) -> None:
+        """Send the round-t declaration bundle until the server acks it.
+        Deliberately NOT incarnation-guarded and NOT retry-capped: the
+        round already completed, so its declaration must eventually
+        reach the commit gate (required gates would deadlock otherwise)
+        even if this worker dies in the meantime; the gate's
+        (worker, round) dedup makes every retransmit fold zero times
+        after the first arrival."""
+        if (dom.sid, t) in self._acked:
+            return
+        ch = self.rt.fabric.link(self.i, dom)
+        if retry > 0:
+            ch.note_retransmit("declare", t, retry)
+        ch.send(lambda: dom.on_declare_msg(self.i, t, pushes),
+                msg="declare", t=t)
+        self.rt.sched.after(
+            self.rt.transport.timeout(retry),
+            lambda: self._declare_reliably(dom, t, pushes, retry + 1))
+
+    def on_declare_ack(self, dom, t: int) -> None:
+        self._acked.add((dom.sid, t))
 
     def _start_compute(self) -> None:
         t = self.t
@@ -163,7 +241,9 @@ class WorkerProc:
             pushes = [(j, None if rt.timing_only
                        else eng.push_value(rt.w, i, j))
                       for j in dom.block_ids if sel_row[j]]
-            if rt.net is None:
+            if rt.transport is not None:
+                self._declare_reliably(dom, t, pushes)
+            elif rt.net is None:
                 dom.on_declare(i, t, pushes)
             else:
                 rt.sched.after(rt.net.sample(self.rng),

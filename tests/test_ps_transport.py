@@ -1,0 +1,519 @@
+"""Unreliable transport (repro.ps.transport): lossy-run replay parity,
+zero-loss inertness, exactly-once commit folds, graceful pull-timeout
+degradation, link_loss chaos, trace-load diagnostics, and the
+divergence watchdogs.
+
+The headline pins:
+
+* a run under drop/dup/reorder + ack/retry/backoff records a
+  ``DelayTrace`` that replays through the vectorized ``asybadmm_epoch``
+  exactly like a reliable run — bitwise on pallas, fp32-ulp on jnp,
+  1e-5 on the SPMD mesh (the effective committed schedule is what the
+  staleness + participation matrices pin; delivery chaos only shifts
+  WHEN messages land);
+* with every reliability knob at zero the transport layer is INERT:
+  trace and z trajectory are byte-identical to the pre-transport
+  runtime (same rng draw sequences, no transport metrics/log);
+* the commit gate folds each (worker, block, round) push exactly once
+  under ANY loss schedule — retransmits and duplicates never
+  double-fold (property-tested under hypothesis).
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.api import ConsensusSession
+from repro.configs.base import ADMMConfig
+from repro.core.blocks import TreeBlocks
+from repro.core.space import (asybadmm_epoch, set_epoch_check_finite)
+from repro.ps import (ConstantService, CostProfile, DelayTrace, FaultPlan,
+                      LognormalService, NetworkModel, ParetoService,
+                      Transport, as_network)
+
+N, M, DBLK = 3, 4, 5
+DIM = M * DBLK
+ROUNDS = 6
+
+_r = np.random.RandomState(7)
+CENTERS = jnp.asarray(_r.randn(N, DIM).astype(np.float32))
+EDGE = np.array([[1, 1, 0, 1],
+                 [1, 0, 1, 0],
+                 [1, 1, 1, 1]], bool)
+RHO_SCALE = np.array([0.5, 1.0, 2.0], np.float32)
+
+STRAGGLER = CostProfile(t_worker=ParetoService(1.0, alpha=1.2),
+                        t_server_block=LognormalService(0.3, 0.4))
+LOSSY = Transport(0.0, 0.0, drop_rate=0.1, dup_rate=0.05,
+                  reorder_rate=0.2, ack_timeout=0.5)
+
+
+def _cfg(**kw):
+    return ADMMConfig(rho=2.0, gamma=0.1, max_delay=2, block_fraction=0.5,
+                      num_blocks=M, block_selection="random", l1_coef=1e-3,
+                      clip=0.8, seed=0, **kw)
+
+
+def _flat_loss(z, c):
+    return 0.5 * jnp.sum(jnp.square(z - c))
+
+
+def _flat_session(backend="jnp", delay_model=None, cfg=None, mesh=None):
+    return ConsensusSession.flat(
+        _flat_loss, CENTERS, dim=DIM, cfg=cfg or _cfg(), edge=EDGE,
+        rho_scale=RHO_SCALE, backend=backend, delay_model=delay_model,
+        mesh=mesh)
+
+
+def _tree_loss(p, c):
+    z = jnp.concatenate([p[f"w{j}"] for j in range(M)])
+    return 0.5 * jnp.sum(jnp.square(z - c))
+
+
+def _tree_session(backend="jnp", delay_model=None):
+    params = {f"w{j}": jnp.zeros((DBLK,), jnp.float32) for j in range(M)}
+    tblocks = TreeBlocks(num_blocks=M, leaf_block_ids=tuple(range(M)),
+                         treedef=jax.tree.structure(params))
+    return ConsensusSession.pytree(
+        _tree_loss, params, _cfg(), num_workers=N, blocks=tblocks,
+        edge=EDGE, rho_scale=RHO_SCALE, backend=backend,
+        delay_model=delay_model)
+
+
+def _tree_vec(zt):
+    return np.concatenate([np.asarray(zt[f"w{j}"]).ravel()
+                           for j in range(M)])
+
+
+def _assert_replay(res, sess2, data, to_vec, bitwise):
+    state = sess2.init()
+    step = sess2.step_fn()
+    for t in range(res.num_rounds):
+        state, _ = step(state, data)
+        replay = to_vec(sess2.z(state))
+        runtime = to_vec(res.z_versions[t + 1])
+        if bitwise:
+            np.testing.assert_array_equal(
+                replay, runtime, err_msg=f"replay diverged at round {t}")
+        else:
+            np.testing.assert_allclose(
+                replay, runtime, rtol=1e-5, atol=1e-6,
+                err_msg=f"replay diverged at round {t}")
+
+
+# ---------------------------------------------------------------------------
+# lossy-run replay parity (the acceptance pin): flat + tree x jnp + pallas
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("backend", ["jnp", "pallas"])
+def test_flat_lossy_replay_parity(backend):
+    sess = _flat_session(backend)
+    res = sess.run_ps(ROUNDS, transport=LOSSY)
+    t = res.metrics["transport"]
+    assert t["drops"] > 0 and t["retransmits"] > 0
+    assert res.trace.transport, "delivery decisions must be logged"
+    sess2 = _flat_session(backend, delay_model=res.to_delay_model())
+    _assert_replay(res, sess2, CENTERS,
+                   lambda z: np.asarray(z).ravel(),
+                   bitwise=backend == "pallas")
+
+
+@pytest.mark.parametrize("backend", ["jnp", "pallas"])
+def test_tree_lossy_replay_parity(backend):
+    sess = _tree_session(backend)
+    res = sess.run_ps(ROUNDS, transport=LOSSY, batches=lambda t: CENTERS)
+    assert res.metrics["transport"]["drops"] > 0
+    sess2 = _tree_session(backend, delay_model=res.to_delay_model())
+    _assert_replay(res, sess2, CENTERS, _tree_vec,
+                   bitwise=backend == "pallas")
+
+
+def test_lossy_with_latency_and_straggler_replay_parity():
+    """Loss composes with real latency/jitter and straggler service:
+    the recorded effective schedule still replays."""
+    tr = Transport(0.2, 0.1, drop_rate=0.08, dup_rate=0.04,
+                   reorder_rate=0.15, ack_timeout=0.8)
+    timing = dataclasses.replace(STRAGGLER, net=tr)
+    sess = _flat_session()
+    res = sess.run_ps(ROUNDS, timing=timing)
+    sess2 = _flat_session(delay_model=res.to_delay_model())
+    _assert_replay(res, sess2, CENTERS, lambda z: np.asarray(z).ravel(),
+                   bitwise=False)
+
+
+def test_lossy_deterministic():
+    """Same seed + same transport -> identical trace, z, and delivery
+    log (per-link seeded rngs, not event-interleaving-dependent)."""
+    r1 = _flat_session().run_ps(ROUNDS, transport=LOSSY)
+    r2 = _flat_session().run_ps(ROUNDS, transport=LOSSY)
+    np.testing.assert_array_equal(r1.trace.delays, r2.trace.delays)
+    np.testing.assert_array_equal(np.asarray(r1.z_final),
+                                  np.asarray(r2.z_final))
+    assert r1.trace.transport == r2.trace.transport
+    assert r1.makespan == r2.makespan
+
+
+# ---------------------------------------------------------------------------
+# zero-loss inertness (acceptance criterion): knobs off == pre-transport
+# ---------------------------------------------------------------------------
+
+def test_zero_loss_transport_is_inert():
+    """A Transport with every fault knob at zero routes through the
+    plain NetworkModel/no-network paths: byte-identical trace, z
+    trajectory and makespan; no transport metrics or delivery log."""
+    base = _flat_session().run_ps(ROUNDS, timing=STRAGGLER)
+    inert = _flat_session().run_ps(
+        ROUNDS, timing=dataclasses.replace(STRAGGLER,
+                                           net=Transport(0.0, 0.0)))
+    np.testing.assert_array_equal(base.trace.delays, inert.trace.delays)
+    for a, b in zip(base.z_versions, inert.z_versions):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    assert base.makespan == inert.makespan
+    assert "transport" not in inert.metrics
+    assert "transport" not in inert.trace.meta
+    assert not inert.trace.transport
+
+
+def test_zero_loss_transport_with_latency_is_plain_network():
+    """Zero-knob Transport WITH latency == the plain NetworkModel of
+    the same latency, byte for byte (same rng draw sequence)."""
+    net = _flat_session().run_ps(
+        ROUNDS, timing=CostProfile(net=NetworkModel(0.3, 0.1)))
+    tr = _flat_session().run_ps(
+        ROUNDS, timing=CostProfile(net=Transport(0.3, 0.1)))
+    np.testing.assert_array_equal(net.trace.delays, tr.trace.delays)
+    np.testing.assert_array_equal(np.asarray(net.z_final),
+                                  np.asarray(tr.z_final))
+    assert net.makespan == tr.makespan
+
+
+def test_as_network_transport_passthrough():
+    """Degenerate zero models drop to None as before, but an unreliable
+    Transport always engages — loss alone needs the message layer."""
+    assert as_network(None) is None
+    assert as_network(0.0) is None
+    assert as_network(Transport(0.0, 0.0)) is None
+    lossy = Transport(0.0, 0.0, drop_rate=0.01)
+    assert as_network(lossy) is lossy
+
+
+def test_transport_validation():
+    with pytest.raises(ValueError, match="drop_rate"):
+        Transport(0.0, 0.0, drop_rate=1.0)
+    with pytest.raises(ValueError, match="dup_rate"):
+        Transport(0.0, 0.0, dup_rate=-0.1)
+    with pytest.raises(ValueError, match="ack_timeout"):
+        Transport(0.0, 0.0, ack_timeout=0.0)
+    with pytest.raises(ValueError, match="max_retries"):
+        Transport(0.0, 0.0, max_retries=-1)
+    with pytest.raises(ValueError, match="backoff"):
+        Transport(0.0, 0.0, backoff=0.5)
+    assert Transport(0.0, 0.0, drop_rate=0.1).timeout(10) == \
+        pytest.approx(8.0)              # capped exponential backoff
+
+
+# ---------------------------------------------------------------------------
+# graceful degradation: pull timeout -> cached read within the tau bound
+# ---------------------------------------------------------------------------
+
+def test_pull_timeout_falls_back_within_bound():
+    """Heavy drop with a zero-retry budget forces cache fallbacks; the
+    extra staleness stays within Assumption 3's bound and the trace
+    still replays."""
+    tr = Transport(0.0, 0.0, drop_rate=0.45, ack_timeout=0.4,
+                   max_retries=0)
+    sess = _flat_session()
+    res = sess.run_ps(ROUNDS, transport=tr)
+    assert res.metrics["transport"]["timeout_fallbacks"] > 0
+    assert res.metrics["max_served_tau"] <= res.metrics["bound"]
+    assert int(res.trace.delays.max()) <= res.trace.bound
+    sess2 = _flat_session(delay_model=res.to_delay_model())
+    _assert_replay(res, sess2, CENTERS, lambda z: np.asarray(z).ravel(),
+                   bitwise=False)
+
+
+# ---------------------------------------------------------------------------
+# link_loss chaos + crash interplay
+# ---------------------------------------------------------------------------
+
+def test_link_loss_fault_engages_transport_and_replays():
+    """A link_loss burst over a RELIABLE base network engages the
+    ack/retry layer for the whole run; drops concentrate in the window
+    and the trace replays (with the burst logged in the timeline)."""
+    plan = FaultPlan.of(FaultPlan.link_loss(1.0, 4.0, 0.5))
+    sess = _flat_session()
+    res = sess.run_ps(ROUNDS, timing=STRAGGLER, faults=plan)
+    t = res.metrics["transport"]
+    assert t["drops"] > 0
+    assert any(e["kind"] == "link_loss" for e in res.trace.events)
+    sess2 = _flat_session(delay_model=res.to_delay_model())
+    _assert_replay(res, sess2, CENTERS, lambda z: np.asarray(z).ravel(),
+                   bitwise=False)
+
+
+def test_link_loss_with_churn_replays():
+    """Loss + worker crash/rejoin in the same run: pending pull dedup
+    state is cleared on crash (a revived worker's re-request is served
+    as new) and the combined trace still replays."""
+    plan = FaultPlan.of(FaultPlan.link_loss(0.5, 5.0, 0.4),
+                        FaultPlan.crash(1, 3.0, 4.0))
+    sess = _flat_session()
+    res = sess.run_ps(ROUNDS + 2, timing=STRAGGLER, faults=plan)
+    assert res.metrics["crashes"] == 1 and res.metrics["rejoins"] == 1
+    sess2 = _flat_session(delay_model=res.to_delay_model())
+    _assert_replay(res, sess2, CENTERS, lambda z: np.asarray(z).ravel(),
+                   bitwise=False)
+
+
+def test_link_loss_validation():
+    with pytest.raises(ValueError, match="duration"):
+        FaultPlan.of(FaultPlan.link_loss(1.0, 0.0, 0.5))
+    with pytest.raises(ValueError, match="drop probability"):
+        FaultPlan.of(FaultPlan.link_loss(1.0, 2.0, 1.5))
+    with pytest.raises(ValueError, match="outside"):
+        FaultPlan.of(FaultPlan.link_loss(1.0, 2.0, 0.5, worker=9)
+                     ).validate(num_workers=3)
+    # JSON round-trip keeps the burst
+    plan = FaultPlan.of(FaultPlan.link_loss(1.0, 2.0, 0.5, block=2))
+    assert FaultPlan.from_json(plan.to_json()).has_link_loss
+
+
+# ---------------------------------------------------------------------------
+# exactly-once commit folds (hypothesis property, satellite 4)
+# ---------------------------------------------------------------------------
+
+def _fold_exactly_once_run(drop, dup, reorder, ack_timeout, retries):
+    tr = Transport(0.0, 0.0, drop_rate=drop, dup_rate=dup,
+                   reorder_rate=reorder, ack_timeout=ack_timeout,
+                   max_retries=retries)
+    sess = _flat_session()
+    rt_timing = CostProfile(t_worker=ConstantService(1.0),
+                            t_server_block=ConstantService(0.25), net=tr)
+    from repro.ps import PSRuntime
+    rt = PSRuntime(sess.spec, data=sess.data, timing=rt_timing)
+    res = rt.run(ROUNDS)
+    folds = [f for dom in rt.domains for f in dom.fold_log]
+    return res, folds
+
+
+try:
+    import hypothesis  # noqa: F401
+    from hypothesis import given, settings, strategies as st
+
+    @given(drop=st.floats(0.0, 0.5), dup=st.floats(0.0, 0.4),
+           reorder=st.floats(0.0, 0.6), ack_timeout=st.floats(0.2, 2.0),
+           retries=st.integers(0, 4))
+    @settings(max_examples=10, deadline=None)
+    def test_exactly_once_fold_property(drop, dup, reorder, ack_timeout,
+                                        retries):
+        """Under ARBITRARY drop/dup/reorder schedules the commit layer
+        folds each (round, worker, block) push exactly once, and the
+        final z matches the reliable-transport execution of the same
+        effective schedule (the vectorized epoch replay of the recorded
+        trace)."""
+        res, folds = _fold_exactly_once_run(drop, dup, reorder,
+                                            ack_timeout, retries)
+        assert len(folds) == len(set(folds)), \
+            "a (round, worker, block) push folded more than once"
+        assert len(folds) == res.metrics["pushes"]
+        # reliable execution of the same effective schedule == epoch
+        # replay of the recorded trace; final z must match
+        sess2 = _flat_session(delay_model=res.to_delay_model())
+        state = sess2.init()
+        step = sess2.step_fn()
+        for _ in range(res.num_rounds):
+            state, _ = step(state, CENTERS)
+        np.testing.assert_allclose(
+            np.asarray(sess2.z(state)), np.asarray(res.z_final),
+            rtol=1e-5, atol=1e-6)
+except ImportError:                     # pragma: no cover - optional extra
+    pass
+
+
+def test_exactly_once_fold_fixed_schedule():
+    """Non-hypothesis pin of the exactly-once property (runs even
+    without the test extra installed)."""
+    res, folds = _fold_exactly_once_run(0.3, 0.2, 0.3, 0.5, 2)
+    assert len(folds) == len(set(folds))
+    assert len(folds) == res.metrics["pushes"]
+    assert res.metrics["transport"]["dups_dropped"] > 0
+
+
+# ---------------------------------------------------------------------------
+# DelayTrace persistence: transport log round-trip + actionable load errors
+# ---------------------------------------------------------------------------
+
+def test_trace_transport_log_roundtrip(tmp_path):
+    res = _flat_session().run_ps(ROUNDS, transport=LOSSY)
+    path = res.trace.save(str(tmp_path / "lossy"))
+    back = DelayTrace.load(path)
+    assert back.transport == res.trace.transport
+    assert back.meta["transport"]["drop_rate"] == LOSSY.drop_rate
+    np.testing.assert_array_equal(back.delays, res.trace.delays)
+
+
+def test_trace_load_missing_file():
+    with pytest.raises(FileNotFoundError):
+        DelayTrace.load("/nonexistent/trace.npz")
+
+
+def test_trace_load_truncated(tmp_path):
+    res = _flat_session().run_ps(2, timing=STRAGGLER)
+    path = res.trace.save(str(tmp_path / "t"))
+    data = open(path, "rb").read()
+    trunc = tmp_path / "trunc.npz"
+    trunc.write_bytes(data[:len(data) // 2])
+    with pytest.raises(ValueError) as ei:
+        DelayTrace.load(str(trunc))
+    msg = str(ei.value)
+    assert "trunc.npz" in msg and "truncated" in msg
+
+
+def test_trace_load_missing_key(tmp_path):
+    path = tmp_path / "missing.npz"
+    np.savez(path, delays=np.zeros((2, N, M), np.int32))   # no bound
+    with pytest.raises(ValueError) as ei:
+        DelayTrace.load(str(path))
+    msg = str(ei.value)
+    assert "missing.npz" in msg and "bound" in msg and "discipline" in msg
+
+
+def test_trace_load_extra_key(tmp_path):
+    path = tmp_path / "extra.npz"
+    np.savez(path, delays=np.zeros((2, N, M), np.int32),
+             bound=np.int32(2), discipline=np.str_("lockfree"),
+             meta=np.str_("{}"), bogus=np.zeros(3))
+    with pytest.raises(ValueError, match="bogus"):
+        DelayTrace.load(str(path))
+
+
+def test_trace_load_shape_mismatch(tmp_path):
+    path = tmp_path / "shape.npz"
+    np.savez(path, delays=np.zeros((2, N), np.int32),     # 2-d, not 3-d
+             bound=np.int32(2), discipline=np.str_("lockfree"))
+    with pytest.raises(ValueError, match=r"\(rounds, N, M\)"):
+        DelayTrace.load(str(path))
+    path2 = tmp_path / "part.npz"
+    np.savez(path2, delays=np.zeros((2, N, M), np.int32),
+             bound=np.int32(2), discipline=np.str_("lockfree"),
+             participation=np.ones((5, N), bool))
+    with pytest.raises(ValueError, match="participation"):
+        DelayTrace.load(str(path2))
+
+
+def test_trace_load_corrupt_json(tmp_path):
+    path = tmp_path / "badmeta.npz"
+    np.savez(path, delays=np.zeros((2, N, M), np.int32),
+             bound=np.int32(2), discipline=np.str_("lockfree"),
+             meta=np.str_("{not json"))
+    with pytest.raises(ValueError, match="corrupt"):
+        DelayTrace.load(str(path))
+
+
+def test_trace_load_not_an_npz(tmp_path):
+    path = tmp_path / "noise.npz"
+    path.write_bytes(b"this is not a zip archive")
+    with pytest.raises(ValueError, match="noise.npz"):
+        DelayTrace.load(str(path))
+
+
+def test_old_trace_without_new_keys_loads(tmp_path):
+    """Pre-transport (and pre-chaos) files lack the newer keys; load
+    defaults them."""
+    path = tmp_path / "old.npz"
+    np.savez(path, delays=np.zeros((2, N, M), np.int32),
+             bound=np.int32(2), discipline=np.str_("lockfree"))
+    tr = DelayTrace.load(str(path))
+    assert tr.meta == {} and tr.events == [] and tr.transport == []
+    assert tr.participation is None
+
+
+# ---------------------------------------------------------------------------
+# divergence watchdogs (satellite 3)
+# ---------------------------------------------------------------------------
+
+def _exploding_session():
+    # rho ~ 1e-38: x = z - (g+y)/rho overflows fp32 at the first worker
+    # update, so the first committed z is non-finite
+    cfg = ADMMConfig(rho=1e-38, gamma=1e-30, max_delay=2,
+                     block_fraction=1.0, num_blocks=M,
+                     block_selection="random", seed=0)
+    return ConsensusSession.flat(_flat_loss, CENTERS, dim=DIM, cfg=cfg,
+                                 edge=EDGE, rho_scale=RHO_SCALE)
+
+
+def test_runtime_divergence_watchdog():
+    sess = _exploding_session()
+    with pytest.raises(FloatingPointError) as ei:
+        sess.run_ps(ROUNDS, check_finite=True)
+    msg = str(ei.value)
+    assert "block" in msg and "round" in msg
+    # off by default: the same run completes (silently non-finite)
+    res = sess.run_ps(ROUNDS)
+    assert not np.all(np.isfinite(np.asarray(res.z_final)))
+
+
+def test_epoch_divergence_watchdog():
+    sess = _exploding_session()
+    prev = set_epoch_check_finite(True)
+    try:
+        with pytest.raises(FloatingPointError) as ei:
+            state = sess.init()
+            for _ in range(ROUNDS):
+                state, _ = asybadmm_epoch(sess.spec, state, sess.data)
+        assert "round" in str(ei.value) and "block" in str(ei.value)
+    finally:
+        set_epoch_check_finite(prev)
+    # flag restored: the same loop runs unchecked
+    state = sess.init()
+    state, _ = asybadmm_epoch(sess.spec, state, sess.data)
+
+
+def test_healthy_run_passes_watchdog():
+    res = _flat_session().run_ps(ROUNDS, timing=STRAGGLER,
+                                 check_finite=True)
+    assert np.all(np.isfinite(np.asarray(res.z_final)))
+
+
+# ---------------------------------------------------------------------------
+# SPMD cell (runs under scripts/ci.sh's forced-8-device step)
+# ---------------------------------------------------------------------------
+
+needs8 = pytest.mark.skipif(
+    jax.device_count() < 8,
+    reason="needs XLA_FLAGS=--xla_force_host_platform_device_count=8 "
+           "(scripts/ci.sh runs this file's spmd tests under it)")
+
+
+@needs8
+def test_spmd_lossy_trace_replay():
+    """The acceptance-criterion rates (drop 5% / dup 2% / reorder 10%)
+    at 8 workers: the lossy trace replays through the SPMD-sharded
+    epoch within the SPMD parity tolerance."""
+    from repro.launch.mesh import make_test_mesh
+
+    N8, M8 = 8, 8
+    dim = M8 * DBLK
+    centers = jnp.asarray(
+        np.random.RandomState(5).randn(N8, dim).astype(np.float32))
+    cfg = ADMMConfig(rho=2.0, gamma=0.1, max_delay=2, block_fraction=0.5,
+                     num_blocks=M8, l1_coef=1e-3, clip=0.8, seed=0)
+
+    def make(dm=None, mesh=None):
+        return ConsensusSession.flat(_flat_loss, centers, dim=dim, cfg=cfg,
+                                     delay_model=dm, mesh=mesh)
+    tr = Transport(0.0, 0.0, drop_rate=0.05, dup_rate=0.02,
+                   reorder_rate=0.1, ack_timeout=0.5)
+    res = make().run_ps(ROUNDS, transport=tr)
+    assert res.metrics["transport"]["drops"] > 0
+    sess = make(dm=res.to_delay_model(), mesh=make_test_mesh(8))
+    state = sess.init()
+    step = sess.step_fn()
+    for t in range(ROUNDS):
+        state, _ = step(state, centers)
+        np.testing.assert_allclose(
+            np.asarray(jax.device_get(sess.z(state))),
+            np.asarray(res.z_versions[t + 1]), rtol=1e-5, atol=1e-5,
+            err_msg=f"SPMD lossy replay diverged at round {t}")
