@@ -300,6 +300,96 @@ def lossy_scenario(emit, smoke: bool = False) -> bool:
     return ok and ratio <= max_ratio
 
 
+def server_crash_scenario(emit, smoke: bool = False) -> bool:
+    """Block-server crash + WAL-replay recovery at 8 real-compute
+    workers: a deterministic ``server_crash`` plan drops two lock
+    domains' in-memory state mid-run; each rebuilds from its write-ahead
+    commit log. Gates (benchmarks/kernels_baseline.json):
+
+    * **zero lost folds** — every domain's committed fold log matches
+      the crash-free run's per-round multiset exactly (hard-fail);
+    * **rounds-to-tolerance** — the crash run must reach the crash-free
+      tolerance within ``max_server_crash_rounds_ratio`` x its rounds
+      (recovery costs sim time, never committed progress);
+    * **replay parity** — the crash run's trace replays through the
+      vectorized epoch within 1e-5 (single-device + SPMD when 8
+      devices are up)."""
+    import jax
+
+    R = 16 if smoke else 24
+    timing = CostProfile(t_worker=ConstantService(1.0),
+                         t_server_block=ConstantService(0.25))
+    plan = FaultPlan.of(FaultPlan.server_crash(2, at=3.0, down=2.5),
+                        FaultPlan.server_crash(9, at=6.0, down=3.0))
+    sess = build_session(GATE_WORKERS, dim=CHURN_DIM, samples=4)
+    rt_ff = PSRuntime(sess.spec, data=sess.data, timing=timing)
+    ff = rt_ff.run(R)
+    rt_cr = PSRuntime(sess.spec, data=sess.data, timing=timing,
+                      faults=plan)
+    cr = rt_cr.run(R)
+
+    # zero lost folds: per-domain, per-round fold MULTISETS must match
+    # the crash-free run (in-round order may differ across a recovery)
+    lost = 0
+    for d_ff, d_cr in zip(rt_ff.domains, rt_cr.domains):
+        per_round_ff = {}
+        for (t, i, j) in d_ff.fold_log:
+            per_round_ff.setdefault(t, []).append((i, j))
+        per_round_cr = {}
+        for (t, i, j) in d_cr.fold_log:
+            per_round_cr.setdefault(t, []).append((i, j))
+        for t in set(per_round_ff) | set(per_round_cr):
+            if sorted(per_round_ff.get(t, [])) \
+                    != sorted(per_round_cr.get(t, [])):
+                lost += 1
+    m = cr.metrics
+    emit(f"server_crash_folds,{sum(len(d.fold_log) for d in rt_cr.domains)},"
+         f"mismatched_rounds={lost}"
+         f"|recoveries={m['server_recoveries']}"
+         f"|wal_commits={m['wal']['commits']}"
+         f"|wal_replays={m['wal']['replays']}")
+    ok = lost == 0 and m["server_recoveries"] == 2 \
+        and ff.metrics.get("server_recoveries", 0) == 0
+
+    tol = ff.losses[int(0.6 * R) - 1]
+    r_ff = _rounds_to_tolerance(ff.losses, tol)
+    r_cr = _rounds_to_tolerance(cr.losses, tol)
+    ratio = float("inf") if r_cr is None else r_cr / r_ff
+    max_ratio = json.loads(BASELINE.read_text())[
+        "max_server_crash_rounds_ratio"]
+    emit(f"server_crash_faultfree_makespan,{ff.makespan*1e6:.0f},"
+         f"rounds_to_tol={r_ff}")
+    emit(f"server_crash_chaos_makespan,{cr.makespan*1e6:.0f},"
+         f"rounds_to_tol={r_cr}")
+    emit(f"server_crash_rounds_ratio,{ratio:.3f},max={max_ratio}")
+
+    dm = cr.to_delay_model()
+    err1 = _replay_max_err(cr, build_session(GATE_WORKERS, dim=CHURN_DIM,
+                                             samples=4, delay_model=dm))
+    emit(f"server_crash_replay_err_1dev,{err1:.2e},tol=1e-05")
+    ok = ok and err1 <= 1e-5
+    if jax.device_count() >= 8:
+        from repro.launch.mesh import make_test_mesh
+        err8 = _replay_max_err(
+            cr, build_session(GATE_WORKERS, dim=CHURN_DIM, samples=4,
+                              delay_model=dm, mesh=make_test_mesh(8)))
+        emit(f"server_crash_replay_err_spmd,{err8:.2e},mesh=data4xmodel2")
+        ok = ok and err8 <= 1e-5
+    else:
+        emit("server_crash_replay_err_spmd,skipped,need 8 devices "
+             "(XLA_FLAGS=--xla_force_host_platform_device_count=8)")
+    if lost:
+        emit(f"server_crash_gate_FAILED,0,{lost} rounds lost/extra folds "
+             f"after WAL replay")
+    if ratio > max_ratio:
+        emit(f"server_crash_gate_FAILED,0,rounds ratio {ratio:.3f} > "
+             f"{max_ratio}")
+    if not ok:
+        emit("server_crash_gate_FAILED,0,replay parity or recovery "
+             "count off")
+    return ok and ratio <= max_ratio
+
+
 def skew_scenario(emit, smoke: bool = False) -> bool:
     """Timing-only: zipf(a=1.5) vs uniform block selection at 8 workers
     under per-push commits (commit work paid per push, so a domain's
@@ -374,6 +464,7 @@ def heavy_tail_scenario(emit, smoke: bool = False) -> bool:
 
 
 SCENARIOS = {"churn": churn_scenario, "lossy": lossy_scenario,
+             "server_crash": server_crash_scenario,
              "skew": skew_scenario, "heavy_tail": heavy_tail_scenario}
 
 
@@ -400,7 +491,10 @@ if __name__ == "__main__":
                          "churn (crash+rejoin, replay parity + "
                          "rounds-to-tolerance gate), lossy (unreliable "
                          "transport: drop/dup/reorder + ack/retry, "
-                         "rounds-to-tolerance + replay gates), skew "
+                         "rounds-to-tolerance + replay gates), "
+                         "server_crash (block-server crash + WAL-replay "
+                         "recovery: zero-lost-folds, rounds-to-tolerance "
+                         "+ replay gates), skew "
                          "(zipf block selection), heavy_tail (Pareto "
                          "stragglers)")
     args = ap.parse_args()

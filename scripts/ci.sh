@@ -53,6 +53,28 @@ env PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" \
     XLA_FLAGS="--xla_force_host_platform_device_count=8" \
     python benchmarks/speedup.py --scenario lossy --smoke
 
+# Durability gate: block-server crash + WAL-replay recovery at 8
+# real-compute workers. Hard-fails on any lost/duplicated committed
+# fold (per-domain fold multisets vs the crash-free run), a wrong
+# recovery count, rounds-to-tolerance above
+# max_server_crash_rounds_ratio (kernels_baseline.json), or a crash
+# trace that does not replay through the vectorized epoch within 1e-5
+# (single-device AND SPMD — hence the forced 8 host devices)
+echo "[ci] server-crash durability gate (smoke, 8 host devices)"
+env PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" \
+    XLA_FLAGS="--xla_force_host_platform_device_count=8" \
+    python benchmarks/speedup.py --scenario server_crash --smoke
+
+# Checkpoint/resume determinism: a run killed at a snapshot barrier and
+# resumed must finish with bitwise-identical z (pallas cells), trace,
+# losses and makespan vs the uninterrupted run — including composed
+# with worker-crash chaos. Runs in its own process with 8 host devices
+# so the SPMD resume cell exercises the sharded epoch replay too.
+echo "[ci] checkpoint/resume determinism (8 host devices)"
+env PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" \
+    XLA_FLAGS="--xla_force_host_platform_device_count=8" \
+    python -m pytest -x -q tests/test_ps_recovery.py
+
 # Selection-skew and straggler-tail scenario gates (timing-only,
 # deterministic seeded draws): zipf selection must pile occupancy onto
 # the head lock domains (min_skew_occupancy_ratio) and the Pareto

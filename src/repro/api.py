@@ -154,7 +154,10 @@ class ConsensusSession:
                record_z: bool = True,
                faults: Any = None,
                transport: Any = None,
-               check_finite: bool = False):
+               check_finite: bool = False,
+               checkpoint_every: Optional[int] = None,
+               checkpoint_dir: Optional[str] = None,
+               resume_from: Optional[str] = None):
         """Drive ``num_rounds`` rounds under the event-driven Parameter
         Server runtime (``repro.ps``) instead of the vectorized epoch:
         per-block ``lockfree`` servers (or the ``locked`` full-vector
@@ -188,7 +191,17 @@ class ConsensusSession:
         arms the divergence watchdog: the run halts with a
         ``FloatingPointError`` naming the round/block the moment a
         committed z goes NaN/Inf. See API.md's transport-reliability
-        section."""
+        section.
+
+        Durability (``repro.ps.recovery``; API.md's "Durability &
+        recovery"): ``checkpoint_every=E`` writes an atomic,
+        crash-consistent snapshot of the whole runtime into
+        ``checkpoint_dir`` every E rounds; ``resume_from=`` (a snapshot
+        prefix or the checkpoint directory for its latest) restores one
+        and continues mid-stream, with results identical to the
+        uninterrupted run — and a ``server_crash`` fault event makes a
+        block server lose its volatile state and rebuild it from its
+        write-ahead commit log with zero committed folds lost."""
         import dataclasses as _dc
 
         from .ps import PSRuntime
@@ -207,7 +220,10 @@ class ConsensusSession:
                        discipline=discipline, timing=timing,
                        compute=compute, seed=seed, record_z=record_z,
                        faults=faults, check_finite=check_finite)
-        return rt.run(num_rounds, z0=z0 if z0 is not None else self.z0)
+        return rt.run(num_rounds, z0=z0 if z0 is not None else self.z0,
+                      checkpoint_every=checkpoint_every,
+                      checkpoint_dir=checkpoint_dir,
+                      resume_from=resume_from)
 
     def run(self, num_epochs: int, z0: Any = None, *,
             batches: Optional[Callable[[int], Any]] = None,

@@ -1,1 +1,2 @@
-from .checkpoint import load_step, restore, save
+from .checkpoint import (load_arrays, load_extra, load_step, restore,
+                         save)

@@ -2,11 +2,25 @@
 
 Path-keyed (not order-keyed) so checkpoints survive adding/removing
 state fields; supports partial restore and dtype/shape validation.
+
+Writes are **atomic**: both files land via temp-file + ``os.replace``
+in the target directory, so a crash mid-save can never leave a torn
+checkpoint — the previous one survives intact (this is what makes the
+PS runtime's crash-consistent snapshots in ``repro.ps.recovery``
+safe). ``restore`` cross-validates the JSON manifest against the npz
+payload before touching any leaf and fails with errors that name the
+file and the offending leaf.
+
+The manifest can carry an arbitrary JSON-serializable ``extra``
+payload next to the leaves (``save(..., extra=...)`` /
+``load_extra``) — the runtime snapshot layer stores all its
+non-array state (rng states, clock, membership intervals, ...) there.
 """
 from __future__ import annotations
 
 import json
 import os
+import tempfile
 from typing import Any, Dict, Optional
 
 import jax
@@ -23,38 +37,144 @@ def _flatten_with_paths(tree) -> Dict[str, Any]:
     return flat
 
 
-def save(path: str, tree, step: Optional[int] = None) -> None:
+def _atomic_replace(target: str, write_fn) -> None:
+    """Write via a temp file in the target's directory + os.replace —
+    the only crash-safe publish on POSIX (rename within a filesystem
+    is atomic; a crash leaves either the old file or the new one)."""
+    d = os.path.dirname(target) or "."
+    fd, tmp = tempfile.mkstemp(dir=d, prefix=os.path.basename(target) + ".",
+                               suffix=".tmp")
+    try:
+        with os.fdopen(fd, "wb") as f:
+            write_fn(f)
+            f.flush()
+            os.fsync(f.fileno())
+        os.replace(tmp, target)
+    except BaseException:
+        try:
+            os.unlink(tmp)
+        except OSError:
+            pass
+        raise
+
+
+def save(path: str, tree, step: Optional[int] = None,
+         extra: Optional[Dict] = None) -> None:
+    """Atomically write ``path + ".npz"`` (arrays) and ``path + ".json"``
+    (manifest). The npz lands first, the manifest second — a reader
+    that sees the manifest is guaranteed a complete matching payload
+    (restore cross-validates anyway). ``extra`` is an arbitrary
+    JSON-serializable blob stored in the manifest."""
     os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
     flat = _flatten_with_paths(tree)
     arrays = {k: np.asarray(v) for k, v in flat.items()}
-    np.savez(path + ".npz", **arrays)
+    _atomic_replace(path + ".npz", lambda f: np.savez(f, **arrays))
     manifest = {
         "step": step,
         "leaves": {k: {"shape": list(a.shape), "dtype": str(a.dtype)}
                    for k, a in arrays.items()},
     }
-    with open(path + ".json", "w") as f:
-        json.dump(manifest, f, indent=1)
+    if extra is not None:
+        manifest["extra"] = extra
+    _atomic_replace(
+        path + ".json",
+        lambda f: f.write(json.dumps(manifest, indent=1).encode()))
+
+
+def _load_manifest(path: str) -> Dict:
+    mpath = path + ".json"
+    try:
+        with open(mpath) as f:
+            text = f.read()
+    except FileNotFoundError:
+        raise FileNotFoundError(
+            f"checkpoint manifest {mpath!r} not found — was this "
+            f"checkpoint written by repro.checkpoint.save?") from None
+    try:
+        manifest = json.loads(text)
+    except json.JSONDecodeError as e:
+        raise ValueError(f"checkpoint manifest {mpath!r} is corrupt JSON "
+                         f"({e}) — torn write or wrong file") from e
+    if not isinstance(manifest, dict) or "leaves" not in manifest \
+            or not isinstance(manifest["leaves"], dict):
+        raise ValueError(f"checkpoint manifest {mpath!r} has no 'leaves' "
+                         f"table — not a repro.checkpoint manifest")
+    return manifest
+
+
+def _load_validated(path: str):
+    """Load the npz and cross-validate it against the manifest: every
+    manifest leaf must exist in the npz with the recorded shape, and
+    vice versa. Catches torn/mismatched checkpoint halves before any
+    caller reads a leaf."""
+    manifest = _load_manifest(path)
+    npath = path + ".npz"
+    try:
+        data = np.load(npath, allow_pickle=False)
+    except FileNotFoundError:
+        raise FileNotFoundError(
+            f"checkpoint payload {npath!r} not found (manifest "
+            f"{path + '.json'!r} exists) — torn checkpoint") from None
+    except Exception as e:
+        raise ValueError(f"checkpoint payload {npath!r} is unreadable "
+                         f"({e}) — truncated or corrupt npz") from e
+    leaves = manifest["leaves"]
+    for key, meta in leaves.items():
+        if key not in data.files:
+            raise ValueError(
+                f"checkpoint {path!r}: manifest lists leaf {key!r} but the "
+                f"npz payload does not contain it — torn or mixed-up "
+                f"checkpoint halves")
+        shape = tuple(data[key].shape)
+        want = tuple(meta.get("shape", ()))
+        if shape != want:
+            raise ValueError(
+                f"checkpoint {path!r}: leaf {key!r} has npz shape {shape} "
+                f"but the manifest recorded {want} — torn or mixed-up "
+                f"checkpoint halves")
+    for key in data.files:
+        if key not in leaves:
+            raise ValueError(
+                f"checkpoint {path!r}: npz contains leaf {key!r} absent "
+                f"from the manifest — torn or mixed-up checkpoint halves")
+    return data, manifest
 
 
 def restore(path: str, like_tree) -> Any:
     """Restore into the structure of ``like_tree`` (path-matched)."""
-    data = np.load(path + ".npz")
+    data, _ = _load_validated(path)
     flat_like = _flatten_with_paths(like_tree)
     missing = [k for k in flat_like if k not in data.files]
     if missing:
-        raise KeyError(f"checkpoint missing keys: {missing[:5]}...")
+        raise KeyError(
+            f"checkpoint {path!r} is missing leaves required by the "
+            f"restore target: {missing[:5]}{'...' if len(missing) > 5 else ''}")
     leaves_like, treedef = jax.tree_util.tree_flatten(like_tree)
-    paths = list(_flatten_with_paths(like_tree).keys())
+    paths = list(flat_like.keys())
     out = []
     for key, ref in zip(paths, leaves_like):
         arr = data[key]
         if tuple(arr.shape) != tuple(ref.shape):
-            raise ValueError(f"{key}: shape {arr.shape} != {ref.shape}")
+            raise ValueError(
+                f"checkpoint {path!r}: leaf {key!r} has shape "
+                f"{tuple(arr.shape)} but the restore target expects "
+                f"{tuple(ref.shape)}")
         out.append(jnp.asarray(arr, ref.dtype))
     return jax.tree_util.tree_unflatten(treedef, out)
 
 
+def load_arrays(path: str) -> Dict[str, np.ndarray]:
+    """All leaves of a checkpoint as a flat {path: array} dict,
+    manifest-validated (no ``like_tree`` needed — used by the PS
+    snapshot layer whose leaf set is data-dependent)."""
+    data, _ = _load_validated(path)
+    return {k: data[k] for k in data.files}
+
+
+def load_extra(path: str) -> Optional[Dict]:
+    """The manifest's ``extra`` payload (None when absent)."""
+    return _load_manifest(path).get("extra")
+
+
 def load_step(path: str) -> Optional[int]:
-    with open(path + ".json") as f:
-        return json.load(f).get("step")
+    return _load_manifest(path).get("step")

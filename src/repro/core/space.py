@@ -220,7 +220,14 @@ class TraceDelay:
     (the partial-participation regime of Chang et al.,
     arXiv:1509.02597). Delay entries of absent rows may be recorded as
     -1 (unobserved) and are sanitized to 0 here; they only feed the
-    gather for a row whose effect the mask discards."""
+    gather for a row whose effect the mask discards.
+
+    Traces from runs with ``server_crash`` faults replay unchanged:
+    WAL recovery (``repro.ps.recovery``) rebuilds exactly the
+    committed version history, so every (t, tau) pair the trace
+    records is a read of the same ``z^{t-tau}`` the epoch computes —
+    the recovery gap costs sim time (stalls, retransmissions), never a
+    divergent version."""
     delays: Any                       # (rounds, N, M) int array
     participation: Any = None         # (rounds, N) bool, or None = all
     max_delay: int = dataclasses.field(init=False)

@@ -52,6 +52,9 @@ def run_ps_training(session, args, pipe, enc_kw) -> None:
     result = session.run_ps(
         args.steps, discipline=args.discipline, record_z=False,
         timing=timing, faults=args.faults,
+        checkpoint_every=args.checkpoint_every,
+        checkpoint_dir=args.checkpoint_dir,
+        resume_from=args.resume,
         batches=lambda t: pipe.batch(t, num_workers=args.workers, **enc_kw))
     for step in range(0, args.steps, max(args.log_every, 1)):
         print(json.dumps({"round": step,
@@ -67,7 +70,12 @@ def run_ps_training(session, args, pipe, enc_kw) -> None:
         "max_served_tau": m["max_served_tau"],
         "commits": m["commits"], "pushes": m["pushes"],
         "crashes": m.get("crashes", 0), "rejoins": m.get("rejoins", 0),
+        "server_recoveries": m.get("server_recoveries", 0),
+        "snapshots": len(m.get("snapshots", [])),
         "elapsed_s": round(time.time() - t0, 1)}), flush=True)
+    if m.get("snapshots"):
+        print(f"crash-consistent snapshots in {args.checkpoint_dir} "
+              f"(resume: --runtime ps --resume {m['snapshots'][-1]})")
     if args.save_trace:
         path = result.trace.save(args.save_trace)
         print(f"delay trace saved to {path} "
@@ -139,9 +147,11 @@ def main() -> None:
                          "servers paying commit work eagerly per push")
     ap.add_argument("--faults", default=None,
                     help="--runtime ps: FaultPlan JSON injecting worker "
-                         "crash/rejoin, join/leave churn, slowdowns and "
-                         "server commit spikes (see API.md's elastic-PS "
-                         "section for the schema)")
+                         "crash/rejoin, join/leave churn, slowdowns, "
+                         "server commit spikes, link loss, and block-"
+                         "server crashes (server_crash; recovered by "
+                         "WAL replay — see API.md's elastic-PS and "
+                         "durability sections for the schema)")
     ap.add_argument("--save-trace", default=None,
                     help="path to save the --runtime ps DelayTrace "
                          "(.npz) for later --delay-model trace replay")
@@ -167,6 +177,23 @@ def main() -> None:
                     help="--runtime ps: sim seconds before an unacked "
                          "message retransmits (capped exponential "
                          "backoff on retries)")
+    ap.add_argument("--checkpoint-every", type=int, default=None,
+                    help="--runtime ps: write a crash-consistent "
+                         "snapshot of the full runtime every K rounds "
+                         "(quiescent barrier; needs --checkpoint-dir). "
+                         "A killed run resumes mid-stream with --resume, "
+                         "deterministically (see API.md durability "
+                         "section)")
+    ap.add_argument("--checkpoint-dir", default=None,
+                    help="directory for --checkpoint-every snapshots "
+                         "(snap-NNNNNN.npz/.json pairs, written "
+                         "atomically)")
+    ap.add_argument("--resume", default=None,
+                    help="--runtime ps: resume from a snapshot file (or "
+                         "a directory, taking the latest snapshot) "
+                         "written by --checkpoint-every; the run "
+                         "continues mid-stream and its tail is "
+                         "identical to the uninterrupted run's")
     ap.add_argument("--lr", type=float, default=1e-3)
     ap.add_argument("--ckpt", default=None)
     ap.add_argument("--log-every", type=int, default=10)

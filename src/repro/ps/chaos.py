@@ -37,6 +37,16 @@ Event kinds
                  ``block`` when given, fleet-wide otherwise. A plan
                  with link_loss events engages the ack/retry transport
                  layer even when the base network is reliable.
+``server_crash`` the lock domain holding block ``block`` LOSES its
+                 volatile state at ``at`` (in-memory z versions,
+                 caches, pending declarations/pushes, queued pulls)
+                 and comes back after ``duration`` by replaying its
+                 write-ahead commit log (``ps/recovery.py``) — zero
+                 committed folds lost. ``duration`` is required: a
+                 server that never recovers would deadlock its commit
+                 gates. Messages sent to a down server are dropped, so
+                 a plan with server_crash events engages the ack/retry
+                 transport layer like ``link_loss`` does.
 """
 from __future__ import annotations
 
@@ -48,7 +58,7 @@ from typing import Dict, List, Optional, Tuple
 import numpy as np
 
 FAULT_KINDS = ("crash", "leave", "join", "slowdown", "server_spike",
-               "link_loss")
+               "link_loss", "server_crash")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -106,6 +116,18 @@ class FaultEvent:
                     and not 0 <= self.block < num_blocks:
                 raise ValueError(f"link_loss block {self.block} outside "
                                  f"[0, {num_blocks})")
+        if self.kind == "server_crash":
+            if self.block is None:
+                raise ValueError("server_crash event needs a block id (it "
+                                 "scopes the lock domain holding that block)")
+            if num_blocks is not None and not 0 <= self.block < num_blocks:
+                raise ValueError(f"server_crash block {self.block} outside "
+                                 f"[0, {num_blocks})")
+            if self.duration is None or self.duration <= 0.0:
+                raise ValueError(
+                    f"server_crash needs duration > 0 (the recovery delay; "
+                    f"a server that never recovers would deadlock its "
+                    f"commit gates); got {self.duration}")
         if self.kind == "crash" and self.duration is not None \
                 and self.duration <= 0.0:
             raise ValueError(f"crash downtime must be > 0 (or omitted for "
@@ -155,6 +177,14 @@ class FaultPlan:
         return any(e.kind == "link_loss" for e in self.events)
 
     @property
+    def has_server_crash(self) -> bool:
+        """Whether any event crashes a block server — the runtime then
+        arms the per-domain write-ahead commit log (``ps/recovery.py``)
+        and engages the ack/retry transport layer (messages to a down
+        server are dropped and must retransmit)."""
+        return any(e.kind == "server_crash" for e in self.events)
+
+    @property
     def cold_workers(self) -> frozenset:
         """Workers that boot cold (join events) — excluded from the
         initial fleet by the runtime."""
@@ -200,6 +230,12 @@ class FaultPlan:
         return FaultEvent("link_loss", at, worker=worker, block=block,
                           duration=duration, factor=drop)
 
+    @staticmethod
+    def server_crash(block: int, at: float, down: float) -> FaultEvent:
+        """The lock domain holding ``block`` loses its volatile state at
+        ``at`` and recovers by WAL replay after ``down`` sim seconds."""
+        return FaultEvent("server_crash", at, block=block, duration=down)
+
     @classmethod
     def churn(cls, num_workers: int, *, seed: int = 0, crashes: int = 2,
               window: Tuple[float, float] = (2.0, 10.0),
@@ -227,10 +263,47 @@ class FaultPlan:
                           indent=2)
 
     @classmethod
-    def from_json(cls, text: str) -> "FaultPlan":
-        obj = json.loads(text)
-        return cls(tuple(FaultEvent(**e) for e in obj.get("events", ())
-                         )).validate()
+    def from_json(cls, text: str, *,
+                  source: str = "<fault plan>") -> "FaultPlan":
+        """Parse a fault-plan JSON document. Errors are actionable —
+        they name the source (``FaultPlan.load`` passes the file path)
+        and the offending event index instead of leaking a bare
+        ``JSONDecodeError`` / ``KeyError`` / ``TypeError``."""
+        def bad(problem, idx=None):
+            where = f"event {idx}: " if idx is not None else ""
+            return ValueError(
+                f"FaultPlan: {source} is not a valid fault plan — "
+                f"{where}{problem}. Expected "
+                f'{{"events": [{{"kind": ..., "at": <sim time>, ...}}]}} '
+                f"with kinds {FAULT_KINDS} (schema in API.md's elastic-PS "
+                f"section).")
+
+        try:
+            obj = json.loads(text)
+        except json.JSONDecodeError as e:
+            raise bad(f"corrupt JSON ({e})") from e
+        if not isinstance(obj, dict) \
+                or not isinstance(obj.get("events", []), list):
+            raise bad("top level must be an object with an 'events' list")
+        events = []
+        for idx, spec in enumerate(obj.get("events", [])):
+            if not isinstance(spec, dict):
+                raise bad(f"must be an object, got {type(spec).__name__}",
+                          idx)
+            try:
+                ev = FaultEvent(**spec)
+            except TypeError as e:
+                raise bad(f"{e}; the only fields are kind, at, worker, "
+                          f"block, duration, factor", idx) from e
+            try:
+                ev.validate()
+            except (ValueError, TypeError) as e:
+                raise bad(str(e), idx) from e
+            events.append(ev)
+        try:
+            return cls(tuple(events)).validate()
+        except ValueError as e:
+            raise bad(str(e)) from e
 
     def save(self, path: str) -> str:
         with open(path, "w") as f:
@@ -239,8 +312,9 @@ class FaultPlan:
 
     @classmethod
     def load(cls, path: str) -> "FaultPlan":
-        with open(path) as f:
-            return cls.from_json(f.read())
+        with open(path) as f:          # FileNotFoundError names the path
+            text = f.read()
+        return cls.from_json(text, source=repr(path))
 
 
 class FaultInjector:
@@ -255,6 +329,7 @@ class FaultInjector:
     def __init__(self, plan: Optional[FaultPlan], runtime):
         self.plan = plan if plan is not None else FaultPlan()
         self.rt = runtime
+        self.fired = set()                         # action keys already run
         self._worker_windows = defaultdict(list)   # i -> [(s, e, factor)]
         self._block_windows = defaultdict(list)    # j -> [(s, e, factor)]
         # [(s, e, drop_p, worker|None, block|None)] — queried per send
@@ -270,29 +345,56 @@ class FaultInjector:
                 self._link_windows.append(
                     (e.at, e.at + e.duration, e.factor, e.worker, e.block))
 
-    def install(self) -> None:
-        """Schedule the plan's membership transitions (before t=0
-        worker starts, so same-time ties resolve plan-first —
-        deterministically either way, by insertion seq)."""
+    def install(self, *, fired=(), floor: float = 0.0,
+                log_windows: bool = True) -> None:
+        """Schedule the plan's membership/server transitions (before
+        t=0 worker starts, so same-time ties resolve plan-first —
+        deterministically either way, by insertion seq). Every action
+        is keyed ("<event idx>:<action>") and marks ``self.fired`` when
+        it runs; a mid-run resume re-installs only the not-yet-fired
+        actions (``fired=`` from the snapshot) at ``max(at, floor)``
+        with ``floor`` = the restored clock. All actions carry the
+        scheduler tag "fault" so the snapshot coordinator can tell
+        pending chaos apart from in-flight work when it checks for
+        quiescence."""
         sched = self.rt.sched
-        for e in self.plan.events:
-            if e.kind in ("slowdown", "server_spike", "link_loss"):
+        self.fired = set(fired)
+
+        def arm(key, at, fn):
+            if key in self.fired:
+                return
+
+            def run():
+                self.fired.add(key)
+                fn()
+            sched.at(max(at, floor), run, tag="fault")
+
+        for idx, e in enumerate(self.plan.events):
+            if e.kind in ("slowdown", "server_spike", "link_loss") \
+                    and log_windows:
                 # factor windows are queried, not scheduled — log them
-                # into the trace timeline up front
+                # into the trace timeline up front (a resumed run
+                # restores the trace events instead of re-logging)
                 self.rt.trace.add_event(e.kind, **{
                     k: v for k, v in e.to_dict().items() if k != "kind"})
             if e.kind == "crash":
-                sched.at(e.at, lambda i=e.worker:
-                         self.rt._crash_worker(i))
+                arm(f"{idx}:crash", e.at,
+                    lambda i=e.worker: self.rt._crash_worker(i))
                 if e.duration is not None:
-                    sched.at(e.at + e.duration, lambda i=e.worker:
-                             self.rt._rejoin_worker(i))
+                    arm(f"{idx}:rejoin", e.at + e.duration,
+                        lambda i=e.worker: self.rt._rejoin_worker(i))
             elif e.kind == "leave":
-                sched.at(e.at, lambda i=e.worker:
-                         self.rt._crash_worker(i, permanent=True))
+                arm(f"{idx}:leave", e.at,
+                    lambda i=e.worker: self.rt._crash_worker(
+                        i, permanent=True))
             elif e.kind == "join":
-                sched.at(e.at, lambda i=e.worker:
-                         self.rt._rejoin_worker(i, cold=True))
+                arm(f"{idx}:join", e.at,
+                    lambda i=e.worker: self.rt._rejoin_worker(i, cold=True))
+            elif e.kind == "server_crash":
+                arm(f"{idx}:server_crash", e.at,
+                    lambda j=e.block: self.rt._crash_server(j))
+                arm(f"{idx}:server_recover", e.at + e.duration,
+                    lambda j=e.block: self.rt._recover_server(j))
 
     # ---- multiplier queries -----------------------------------------------
     @staticmethod

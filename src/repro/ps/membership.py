@@ -93,6 +93,25 @@ class MembershipManager:
             self._intervals[i].append([round_from, None])
         self.rejoins += 1
 
+    # ---- durability (ps/recovery.py snapshots) ----------------------------
+    def state_dict(self) -> dict:
+        """JSON-serializable membership state for a runtime snapshot."""
+        return {"intervals": [[list(iv) for iv in worker]
+                              for worker in self._intervals],
+                "crashes": self.crashes, "rejoins": self.rejoins}
+
+    def restore_state(self, state: dict) -> None:
+        """Restore from :meth:`state_dict` (JSON round-tripped: open
+        intervals' ``None`` ends survive as nulls)."""
+        if len(state["intervals"]) != self.N:
+            raise ValueError(
+                f"membership snapshot covers {len(state['intervals'])} "
+                f"workers; this runtime has {self.N}")
+        self._intervals = [[list(iv) for iv in worker]
+                           for worker in state["intervals"]]
+        self.crashes = state["crashes"]
+        self.rejoins = state["rejoins"]
+
     # ---- queries ----------------------------------------------------------
     def required(self, i: int, v: int) -> bool:
         """Does round v's commit gate wait on worker i's declaration?"""

@@ -24,15 +24,25 @@ updates), the StalenessEnforcer treats rejoin as a version reset, and
 the recorded trace carries the participation matrix + the chaos event
 timeline — replay parity holds for chaos runs exactly as for
 fault-free ones.
+
+Durability (``ps/recovery.py``): ``server_crash`` fault events arm a
+per-domain write-ahead commit log so a block server can lose its
+volatile state and rebuild it exactly by replay (zero committed folds
+lost), and ``run(checkpoint_every=, checkpoint_dir=, resume_from=)``
+takes periodic crash-consistent snapshots of the whole runtime so a
+killed run resumes mid-stream with results identical to the
+uninterrupted one.
 """
 from __future__ import annotations
 
 import dataclasses
+import os
 from typing import Any, Dict, List, Optional
 
 import numpy as np
 
 from ..core.space import ConsensusSpec
+from . import recovery as _recovery
 from .chaos import FaultInjector, FaultPlan
 from .engine import SpaceEngine
 from .events import EventScheduler
@@ -128,7 +138,19 @@ class PSRuntime:
                 "(random/cyclic/zipf) for timing studies)")
 
     # ------------------------------------------------------------------
-    def run(self, num_rounds: int, z0=None) -> PSRunResult:
+    def run(self, num_rounds: int, z0=None, *,
+            checkpoint_every: Optional[int] = None,
+            checkpoint_dir: Optional[str] = None,
+            resume_from: Optional[str] = None) -> PSRunResult:
+        """Drive ``num_rounds`` rounds. Durability knobs
+        (``ps/recovery.py``): ``checkpoint_every=E`` writes an atomic,
+        crash-consistent snapshot of the whole runtime to
+        ``checkpoint_dir`` at rounds E, 2E, ... (a quiescent barrier —
+        part of the run's schedule); ``resume_from=`` (a snapshot
+        prefix, file, or the checkpoint directory for its latest)
+        restores one and continues mid-stream, producing results
+        identical to the uninterrupted run. ``checkpoint_every=None``
+        (default) is byte-identical to the pre-durability runtime."""
         if num_rounds < 1:
             raise ValueError("num_rounds must be >= 1")
         eng = self.engine
@@ -155,13 +177,15 @@ class PSRuntime:
         # loss on: reliable runs keep the exact pre-transport paths) ---
         raw_net = self.timing_profile.net
         base_tr = raw_net if isinstance(raw_net, Transport) else None
-        lossy_faults = self.faults is not None and self.faults.has_link_loss
+        lossy_faults = self.faults is not None and (
+            self.faults.has_link_loss or self.faults.has_server_crash)
         if base_tr is not None and (base_tr.unreliable or lossy_faults):
             self.transport = base_tr
         elif lossy_faults:
-            # link_loss bursts need the ack/retry layer even when the
-            # base network is reliable — synthesize a zero-knob
-            # Transport carrying the base latency model
+            # link_loss bursts / server_crash outages need the ack/retry
+            # layer even when the base network is reliable (messages to
+            # a down server drop and must retransmit) — synthesize a
+            # zero-knob Transport carrying the base latency model
             self.transport = Transport(
                 latency=self.net.latency if self.net else 0.0,
                 jitter=self.net.jitter if self.net else 0.0)
@@ -175,6 +199,52 @@ class PSRuntime:
                 burst_drop=self.injector.link_drop
                 if not self.injector.empty else None)
 
+        # --- durability: periodic snapshots + mid-run resume ---
+        self.ckpt = None
+        resume_state = None
+        if resume_from is not None:
+            resume_state = _recovery.load_snapshot(resume_from)
+            saved_every = resume_state.meta["fingerprint"].get(
+                "checkpoint_every")
+            if checkpoint_every is None:
+                # the barrier cadence is part of the run's schedule —
+                # resume inherits it so the continuation matches the
+                # uninterrupted run exactly
+                checkpoint_every = saved_every
+            elif saved_every is not None \
+                    and int(checkpoint_every) != int(saved_every):
+                raise ValueError(
+                    f"resume_from snapshot was written with "
+                    f"checkpoint_every={saved_every} but this run asks "
+                    f"for {checkpoint_every} — the barrier cadence is "
+                    f"part of the run's schedule and cannot change "
+                    f"mid-stream")
+            if checkpoint_dir is None:
+                checkpoint_dir = os.path.dirname(resume_state.path) or "."
+        if checkpoint_every is not None:
+            every = int(checkpoint_every)
+            if every < 1:
+                raise ValueError(f"checkpoint_every must be >= 1; "
+                                 f"got {checkpoint_every}")
+            if checkpoint_dir is None:
+                raise ValueError("checkpoint_every= needs checkpoint_dir= "
+                                 "(where the snapshots land)")
+            if self.transport is not None:
+                raise ValueError(
+                    "checkpoint_every is incompatible with an unreliable "
+                    "transport (in-flight retransmission timers are not "
+                    "snapshotable): drop the Transport knobs and any "
+                    "link_loss/server_crash fault events, or run without "
+                    "checkpointing — server_crash durability comes from "
+                    "the per-domain WAL instead")
+            if self.timing_only:
+                raise ValueError(
+                    "checkpoint_every needs compute='real' (timing-only "
+                    "runs hold no numeric state worth snapshotting)")
+            self.ckpt = _recovery.SnapshotCoordinator(
+                self, every, checkpoint_dir)
+            self.sched.after_event = self.ckpt.check
+
         # --- numeric state (Algorithm 1 lines 1-2) ---
         if self.timing_only:
             self.y = self.w = self.x = None
@@ -186,6 +256,10 @@ class PSRuntime:
             caches0 = {j: eng.block_cache(self.w, j) for j in range(eng.M)}
 
         # --- lock domains per the coordination discipline ---
+        # server_crash faults arm each domain's write-ahead commit log
+        # (recovery replays it through the same fold path — zero
+        # committed folds lost); without them the WAL does not exist
+        wal_armed = self.faults is not None and self.faults.has_server_crash
         commit_service = self.timing_profile.server_service()
         self.domains: List[BlockServerProc] = []
         for sid, block_ids in enumerate(self.groups):
@@ -205,7 +279,8 @@ class PSRuntime:
                 membership=self.membership if elastic else None,
                 fault_factor=self.injector.server_factor
                 if not self.injector.empty else None,
-                runtime=self))
+                runtime=self,
+                wal=_recovery.DomainWAL(sid) if wal_armed else None))
         self.domain_of_block = [None] * eng.M
         for dom in self.domains:
             for j in dom.block_ids:
@@ -217,14 +292,22 @@ class PSRuntime:
         # --- launch ---
         workers = self._workers = [WorkerProc(i, self, cold=i in cold)
                                    for i in range(eng.N)]
-        self.injector.install()
-        for wk in workers:
-            if wk.alive:
-                self.sched.at(0.0, wk.start)
-        for dom in self.domains:
-            # blocks with an empty edge neighborhood still commit every
-            # round (prox-only decay, as the epoch does)
-            self.sched.at(0.0, dom._maybe_commit)
+        if resume_state is not None:
+            # restore the quiescent barrier state and arm it: clock,
+            # entity state + rngs, the not-yet-fired fault timeline,
+            # and the parked workers' releases. The t=0 launch below is
+            # skipped — at a quiescent barrier no commit gate is
+            # satisfiable until a released worker declares
+            _recovery.resume(self, resume_state)
+        else:
+            self.injector.install()
+            for wk in workers:
+                if wk.alive:
+                    self.sched.at(0.0, wk.start)
+            for dom in self.domains:
+                # blocks with an empty edge neighborhood still commit
+                # every round (prox-only decay, as the epoch does)
+                self.sched.at(0.0, dom._maybe_commit)
         makespan = self.sched.run()
 
         # --- invariants ---
@@ -300,6 +383,17 @@ class PSRuntime:
                 fault_events=len(self.faults.events),
                 crashes=self.membership.crashes,
                 rejoins=self.membership.rejoins)
+        if any(d.wal is not None for d in self.domains):
+            metrics["server_recoveries"] = sum(d.recoveries
+                                               for d in self.domains)
+            metrics["wal"] = {
+                "commits": sum(len(d.wal.commits) for d in self.domains),
+                "declares": sum(d.wal.declares for d in self.domains),
+                "dedup_skips": sum(d.wal.dedup_skips
+                                   for d in self.domains),
+                "replays": sum(d.wal.replays for d in self.domains)}
+        if self.ckpt is not None:
+            metrics["snapshots"] = list(self.ckpt.written)
         if self.transport is not None:
             tstats = self.fabric.stats()
             tstats["dups_dropped"] = sum(d.dups_dropped
@@ -334,6 +428,10 @@ class PSRuntime:
             return                     # already down / already finished
         r = wk.t                       # the round it never declared
         wk.kill()
+        if self.ckpt is not None:
+            # a worker parked at a snapshot barrier no longer blocks
+            # (or rides) it — membership marks it absent below
+            self.ckpt.unpark(i)
         self.membership.deactivate(i, r)
         self.enforcer.drop_worker(i)
         if self.transport is not None:
@@ -371,6 +469,31 @@ class PSRuntime:
         self.enforcer.note_rejoin()
         self.trace.add_event(kind, worker=i, round=r, time=self.sched.now)
         wk.revive(r)
+
+    def _crash_server(self, block: int) -> None:
+        """A ``server_crash`` fault fired: the lock domain holding
+        ``block`` loses its volatile state (version history, caches,
+        queue, pending declarations, parked pulls). Its WAL survives;
+        messages to it drop at the server until recovery."""
+        dom = self.domain_of_block[block]
+        if dom.down:
+            return                     # overlapping windows merge
+        self.trace.add_event("server_crash", block=block, sid=dom.sid,
+                             version=dom.version, time=self.sched.now)
+        dom.crash()
+        self.enforcer.drop_server(dom.sid)
+
+    def _recover_server(self, block: int) -> None:
+        """The recovery delay elapsed: rebuild the domain exactly by
+        WAL replay (committed folds bitwise, pending declarations
+        re-queued) and resume its commit chain."""
+        dom = self.domain_of_block[block]
+        if not dom.down:
+            return
+        dom.recover()
+        self.trace.add_event("server_recover", block=block, sid=dom.sid,
+                             version=dom.version, time=self.sched.now,
+                             replayed=len(dom.wal.commits))
 
     # ------------------------------------------------------------------
     # per-round data (minibatched through the epoch's key chain)

@@ -130,7 +130,8 @@ class BlockServerProc:
                  rng: np.random.Generator, num_rounds: int,
                  edge_workers: frozenset, contents0: dict, caches0: dict,
                  timing_only: bool, per_push: bool = False,
-                 membership=None, fault_factor=None, runtime=None):
+                 membership=None, fault_factor=None, runtime=None,
+                 wal=None):
         self.sid = sid
         self.block_ids = tuple(block_ids)
         self.engine = engine
@@ -148,14 +149,25 @@ class BlockServerProc:
         self._fault_factor = fault_factor
         # unreliable-transport state (None/unused on reliable runs):
         # the owning runtime (for routing responses/acks back through
-        # its fabric), per-(worker, round) pull dedup, dup counter, and
-        # the exactly-once fold log the property tests pin
+        # its fabric), per-(worker, round) pull dedup and dup counter
         self.rt = runtime
         self._pull_state: Dict[Tuple[int, int], Optional[int]] = {}
         self.dups_dropped = 0
-        self.fold_log: Optional[list] = \
-            [] if runtime is not None and runtime.transport is not None \
-            else None
+        # the exactly-once fold log ((version, worker, block) in fold
+        # order) the transport/recovery property tests pin
+        self.fold_log: list = []
+        # durability (ps/recovery.py): the write-ahead commit log this
+        # domain replays after a server_crash fault, the incarnation
+        # counter that strands a dead incarnation's queue/commit
+        # events, and the version-0 base state replay rebuilds from
+        self.wal = wal
+        self.down = False
+        self.gen = 0
+        self.recoveries = 0
+        self._contents0 = dict(contents0) \
+            if wal is not None and not timing_only else None
+        self._caches0 = dict(caches0) \
+            if wal is not None and not timing_only else None
 
         self.version = 0
         # contents[j][v] = block j's committed content at version v
@@ -202,6 +214,11 @@ class BlockServerProc:
         server now knows worker i's round-t intent — the runtime
         analogue of the bounded-delay assumption that lets a real
         lock-free server stop waiting on non-pushers."""
+        if self.wal is not None:
+            # write-ahead: the declaration (intent + push payloads) is
+            # durable BEFORE any queue/commit processing — a crash
+            # between here and the round's publish replays it
+            self.wal.record_declare(i, t, pushes)
         self._decl[t].add(i)
         for (j, value) in pushes:
             self.pushes += 1
@@ -213,8 +230,9 @@ class BlockServerProc:
             if self.per_push:
                 cost += self._commit_sample()
             done = self._occupy(cost)
-            self.sched.at(done, lambda t=t, i=i, j=j, v=value:
-                          self._push_processed(t, i, j, v))
+            self.sched.at(done, self._guard(
+                lambda t=t, i=i, j=j, v=value:
+                self._push_processed(t, i, j, v)))
         self._maybe_commit()
 
     def _push_processed(self, t: int, i: int, j: int, value) -> None:
@@ -233,6 +251,8 @@ class BlockServerProc:
         dropped (the pending resolution will answer both), and one
         whose response was already sent gets the SAME version resent
         (the response, not the request, must have been lost)."""
+        if self.down:
+            return                 # dark server: retransmission recovers
         key = (i, t)
         if key in self._pull_state:
             self.dups_dropped += 1
@@ -251,9 +271,14 @@ class BlockServerProc:
         self._send_pull_response(i, t, version)
 
     def _send_pull_response(self, i: int, t: int, version: int) -> None:
+        # the response carries the block payloads (as a real protocol
+        # does) — a server that crashes while this message is in flight
+        # must not take the read back with it
         wk = self.rt.worker_proc(i)
+        payload = None if self.timing_only else \
+            [self.content_at(j, version) for j in self.block_ids]
         self.rt.fabric.link(i, self).send(
-            lambda: wk.on_pull_response(self, t, version),
+            lambda: wk.on_pull_response(self, t, version, payload),
             msg="pull_resp", t=t)
 
     def forget_pending_pulls(self, i: int) -> None:
@@ -272,6 +297,8 @@ class BlockServerProc:
         this round folds ZERO more times — but is re-acked either way,
         because a duplicate here usually means the original ack was
         lost and the worker is still retransmitting."""
+        if self.down:
+            return                 # dark server: retransmission recovers
         if t < self.version or i in self._decl[t]:
             self.dups_dropped += 1
         else:
@@ -293,6 +320,8 @@ class BlockServerProc:
                          if self.membership.required(i, v))
 
     def _maybe_commit(self) -> None:
+        if self.down:
+            return                 # recovery restarts the commit chain
         v = self.version
         if self._committing or v >= self.num_rounds:
             return
@@ -308,7 +337,7 @@ class BlockServerProc:
             dur = 0.0 if self._push_buf.get(v) else self._commit_sample()
         else:
             dur = sum(self._commit_sample() for _ in self.block_ids)
-        self.sched.at(self._occupy(dur), self._finish_commit)
+        self.sched.at(self._occupy(dur), self._guard(self._finish_commit))
 
     def _finish_commit(self) -> None:
         v = self.version
@@ -318,8 +347,10 @@ class BlockServerProc:
         # pays its commit latency eagerly but folds at the SAME point,
         # so the published version is bit-identical across disciplines)
         pushes = self._push_buf.pop(v, [])
-        if self.fold_log is not None:
-            self.fold_log.extend((v, i, j) for (i, j, _) in pushes)
+        if self.wal is not None:
+            # write-ahead: the fold order is durable before the publish
+            self.wal.record_commit(v, [(i, j) for (i, j, _) in pushes])
+        self.fold_log.extend((v, i, j) for (i, j, _) in pushes)
         if not self.timing_only:
             for (i, j, value) in pushes:
                 self.caches[j] = self.engine.apply_push(self.caches[j], i,
@@ -345,6 +376,78 @@ class BlockServerProc:
         self.enforcer.notify(self, self.sched.now)
         self._maybe_commit()
 
+    # ---- durability: crash / WAL-replay recovery --------------------------
+    # (driven by the runtime's _crash_server/_recover_server transitions;
+    #  only reachable when a FaultPlan carries server_crash events, which
+    #  also arms self.wal and the ack/retry transport layer)
+
+    def _guard(self, fn):
+        """Bind ``fn`` to this server incarnation: a crash strands the
+        dead incarnation's queue/commit completions (the volatile queue
+        died with it) instead of letting them corrupt the rebuild."""
+        gen = self.gen
+
+        def run(*args):
+            if self.gen == gen:
+                fn(*args)
+        return run
+
+    def crash(self) -> None:
+        """Lose all volatile state: the in-memory version history and
+        caches, pending declarations/pushes, the service queue, pull
+        dedup state, any in-flight commit. The WAL (stable storage) and
+        the historical perf counters survive."""
+        self.down = True
+        self.gen += 1
+        self._decl = defaultdict(set)
+        self._push_buf = defaultdict(list)
+        self._unprocessed = defaultdict(int)
+        self._pull_state = {}
+        self._committing = False
+        self.busy_until = self.sched.now
+        self.version = 0
+        if not self.timing_only:
+            self.contents = {}
+            self.caches = {}
+
+    def recover(self) -> None:
+        """Rebuild from the WAL: replay every committed version's fold
+        order through the same ``apply_push``/``commit_block`` path the
+        live server uses (bitwise — zero committed folds lost), then
+        re-install the logged-but-uncommitted declarations through the
+        service queue in arrival order. The queue work is re-paid (it
+        was volatile), so recovery shifts timing, never numerics."""
+        assert self.wal is not None and self.down
+        self.down = False
+        self.busy_until = self.sched.now
+        if not self.timing_only:
+            self.contents = {j: {0: self._contents0[j]}
+                             for j in self.block_ids}
+            self.caches = dict(self._caches0)
+        for v, folds in enumerate(self.wal.commits):
+            if not self.timing_only:
+                for (i, j) in folds:
+                    self.caches[j] = self.engine.apply_push(
+                        self.caches[j], i, self.wal.value(i, v, j))
+                for j in self.block_ids:
+                    self.contents[j][v + 1] = self.engine.commit_block(
+                        j, self.contents[j][v], self.caches[j])
+        self.version = len(self.wal.commits)
+        self.wal.replays += 1
+        self.recoveries += 1
+        for (i, t, pushes) in self.wal.pending(self.version):
+            self._decl[t].add(i)
+            for (j, value) in pushes:
+                self._unprocessed[t] += 1
+                cost = self.push_cost
+                if self.per_push:
+                    cost += self._commit_sample()
+                done = self._occupy(cost)
+                self.sched.at(done, self._guard(
+                    lambda t=t, i=i, j=j, v=value:
+                    self._push_processed(t, i, j, v)))
+        self._maybe_commit()
+
     # ---- reads ------------------------------------------------------------
     def content_at(self, j: int, version: int):
         return self.contents[j][version]
@@ -355,6 +458,8 @@ class BlockServerProc:
         newest version always stays. Keeps a real-compute run's memory
         at O(T) versions instead of O(num_rounds) when the caller does
         not want the full z trajectory."""
+        if self.down:
+            return                 # nothing in memory to prune
         for j in self.block_ids:
             store = self.contents[j]
             for v in [v for v in store if v < min_version

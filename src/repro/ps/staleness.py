@@ -25,6 +25,13 @@ enforcer never compares a resumed round index against the worker's
 pre-crash pull history — it only ever validates the (t, version) pair
 it serves.
 
+Server crashes (``server_crash`` faults): a crashed block server's
+parked pulls die with its volatile state (:meth:`drop_server`, counted
+as dropped pulls); the workers' retransmission timers re-request after
+WAL recovery and the fresh request is validated like any other — the
+bounded-staleness contract survives recovery because the rebuilt
+version history is exactly the committed one.
+
 Unreliable transport: a pull whose response keeps getting lost degrades
 gracefully — after the retransmission budget the worker proceeds on its
 cached z (:meth:`fallback`), which the enforcer validates against the
@@ -103,6 +110,17 @@ class StalenessEnforcer:
                 self._waiting[sid] = keep
             else:
                 del self._waiting[sid]
+
+    def drop_server(self, sid: int) -> None:
+        """Block server ``sid`` crashed: the pulls parked on it died
+        with its volatile state (the server-side dedup entries that
+        would route the resolutions are gone). Counted as
+        ``dropped_pulls``; the workers' transport retransmission timers
+        re-request after WAL recovery, and the fresh request parks or
+        serves against the rebuilt state."""
+        waiters = self._waiting.pop(sid, None)
+        if waiters:
+            self.dropped_pulls += len(waiters)
 
     def fallback(self, t: int, version: int, *, worker: int = -1) -> None:
         """A worker's round-t pull timed out through every retry on an

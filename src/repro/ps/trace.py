@@ -17,8 +17,13 @@ False for rounds worker i missed (crashed, left, or not yet joined) —
 its delay row stays -1 (nothing was pulled) and replay contributes no
 edge updates for that (round, worker), via the selection mask in
 :class:`~repro.core.space.TraceDelay`. Chaos timeline entries
-(``events``: crash / rejoin / join / leave / slowdown / server_spike
-dicts) ride along for analysis and are round-trip persisted.
+(``events``: crash / rejoin / join / leave / slowdown / server_spike /
+server_crash / server_recover dicts) ride along for analysis and are
+round-trip persisted. Server recovery gaps need no special replay
+handling: WAL replay rebuilds exactly the committed versions, so the
+staleness matrix the workers observed is already the effective
+schedule (the gap shows up as stalls/retransmits in sim time, not as
+extra staleness beyond the recorded taus).
 
 File format (``.npz``): ``delays`` (rounds, N, M) int32, ``bound`` (the
 Assumption-3 T the enforcer guaranteed), ``discipline``, a JSON
@@ -50,7 +55,8 @@ class DelayTrace:
     # (rounds, N) bool; None = full participation (pre-chaos traces)
     participation: Optional[np.ndarray] = None
     # chaos timeline: [{"kind": "crash"|"rejoin"|"join"|"leave"|
-    #                   "slowdown"|"server_spike"|"link_loss", ...}]
+    #                   "slowdown"|"server_spike"|"link_loss"|
+    #                   "server_crash"|"server_recover", ...}]
     events: List[Dict[str, Any]] = dataclasses.field(default_factory=list)
     # unreliable-transport delivery log: every drop / dup / reorder /
     # retransmit / pull-timeout decision, in decision order. Debugging

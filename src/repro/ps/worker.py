@@ -56,6 +56,11 @@ class WorkerProc:
         self.alive = not cold
         self.gen = 0                   # incarnation counter
         self._pulled = {}
+        # block id -> content grabbed when its pull resolved: the pull
+        # response carries the payload (as a real protocol's would), so
+        # a block server crashing between the response and this round's
+        # compute cannot take the read back with it
+        self._vals = {}
         self._pending = 0
         self._issued = False
         # unreliable-transport state: last committed version observed per
@@ -73,6 +78,7 @@ class WorkerProc:
         self.alive = False
         self.gen += 1
         self._pulled = {}
+        self._vals = {}
         self._pending = 0
         self._issued = False
 
@@ -100,7 +106,11 @@ class WorkerProc:
         self.t = t                     # finished workers report t == R
         if t >= self.rt.num_rounds:
             return
+        ckpt = self.rt.ckpt
+        if ckpt is not None and ckpt.park(self, t):
+            return                     # snapshot barrier; resumes on release
         self._pulled = {}
+        self._vals = {}
         self._issued = False
         self._pending = len(self.rt.domains)
         net = self.rt.net
@@ -127,8 +137,17 @@ class WorkerProc:
         if self._pending == 0:
             self._start_compute()
 
-    def _on_pull(self, dom, version: int) -> None:
+    def _on_pull(self, dom, version: int, payload=None) -> None:
         self._pulled[dom.sid] = version
+        if not self.rt.timing_only:
+            # grab the payload NOW (transport responses deliver it;
+            # direct serves read the committed store, which is immutable
+            # per version) — see the _vals contract above
+            if payload is None:
+                payload = [dom.content_at(j, version)
+                           for j in dom.block_ids]
+            for j, val in zip(dom.block_ids, payload):
+                self._vals[j] = val
         if self.rt.transport is not None:
             self._cache[dom.sid] = max(self._cache.get(dom.sid, 0), version)
         self._pending -= 1
@@ -157,7 +176,10 @@ class WorkerProc:
             return
         tr = self.rt.transport
         cached = self._cache.get(dom.sid, 0)
-        if retry >= tr.max_retries and t - cached <= self.rt.enforcer.bound:
+        # a DOWN domain cannot serve the cached read's payload — keep
+        # retransmitting; its recovery delay is finite by plan contract
+        if retry >= tr.max_retries and not dom.down \
+                and t - cached <= self.rt.enforcer.bound:
             ch = self.rt.fabric.link(self.i, dom)
             ch.note_timeout("pull_req", t, cached)
             self.rt.enforcer.fallback(t, cached, worker=self.i)
@@ -165,15 +187,17 @@ class WorkerProc:
             return
         self._pull_attempt(dom, t, retry + 1)
 
-    def on_pull_response(self, dom, t: int, version: int) -> None:
+    def on_pull_response(self, dom, t: int, version: int,
+                         payload=None) -> None:
         """A pull response landed off the link (possibly late, possibly
         a duplicate, possibly for a round this incarnation already left
         behind) — only the first response for the CURRENT round's
-        outstanding pull resolves it."""
+        outstanding pull resolves it. ``payload`` is the block contents
+        the response carried (None in timing-only mode)."""
         if (not self.alive or self.t != t or self._pending == 0
                 or dom.sid in self._pulled):
             return
-        self._on_pull(dom, version)
+        self._on_pull(dom, version, payload)
 
     # ---- unreliable-transport declare cycle -------------------------------
     def _declare_reliably(self, dom, t: int, pushes: list,
@@ -209,9 +233,10 @@ class WorkerProc:
         rt.trace.record(t, self.i, row)
         contents: Optional[list] = None
         if not rt.timing_only:
-            contents = [rt.domain_of_block[j].content_at(
-                j, self._pulled[rt.domain_of_block[j].sid])
-                for j in range(rt.engine.M)]
+            # the payloads grabbed as each pull resolved (_vals): the
+            # versions pinned in self._pulled, immune to a block server
+            # crashing between its response and this compute start
+            contents = [self._vals[j] for j in range(rt.engine.M)]
         dur = rt.worker_service.sample(self.rng)
         dur *= rt.injector.worker_factor(self.i, rt.sched.now)
         rt.sched.after(dur, self._guarded(

@@ -1,0 +1,425 @@
+"""Durability layer (repro.ps.recovery): block-server crash + WAL-replay
+recovery, crash-consistent snapshots, and deterministic mid-run resume.
+
+The headline pins:
+
+* **zero lost folds** — a ``server_crash`` fault drops a lock domain's
+  entire in-memory state mid-run; WAL replay rebuilds it exactly, so
+  every domain's committed fold log matches the crash-free run's
+  per-round multiset, and at staleness bound 0 the final z is BITWISE
+  identical to the crash-free run;
+* **resume determinism** — a run killed at any snapshot barrier and
+  resumed finishes with exactly the uninterrupted run's z (bitwise on
+  pallas), staleness trace, fold logs, losses, and makespan — composed
+  with worker-crash chaos too;
+* **inertness** — with ``checkpoint_every=None`` and no server_crash
+  events the layer adds nothing: no metrics keys, byte-identical runs;
+* torn checkpoints and malformed fault plans fail with actionable
+  errors naming the file / leaf / event index.
+"""
+import json
+import os
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.api import ConsensusSession
+from repro.checkpoint import load_arrays, load_extra, restore, save
+from repro.configs.base import ADMMConfig
+from repro.ps import (ConstantService, CostProfile, DomainWAL, FaultPlan,
+                      PSRuntime, Transport, latest_snapshot, list_snapshots,
+                      load_snapshot)
+
+N, M, DBLK = 3, 4, 5
+DIM = M * DBLK
+ROUNDS = 8
+
+_r = np.random.RandomState(7)
+CENTERS = jnp.asarray(_r.randn(N, DIM).astype(np.float32))
+EDGE = np.array([[1, 1, 0, 1],
+                 [1, 0, 1, 0],
+                 [1, 1, 1, 1]], bool)
+RHO_SCALE = np.array([0.5, 1.0, 2.0], np.float32)
+
+TIMING = CostProfile(t_worker=ConstantService(1.0),
+                     t_server_block=ConstantService(0.25))
+CRASH_PLAN = FaultPlan.of(FaultPlan.server_crash(1, at=2.0, down=3.0))
+
+
+def _cfg(**kw):
+    kw.setdefault("max_delay", 2)
+    return ADMMConfig(rho=2.0, gamma=0.1, block_fraction=0.5,
+                      num_blocks=M, block_selection="random", l1_coef=1e-3,
+                      clip=0.8, seed=0, **kw)
+
+
+def _flat_loss(z, c):
+    return 0.5 * jnp.sum(jnp.square(z - c))
+
+
+def _session(backend="jnp", cfg=None, delay_model=None):
+    return ConsensusSession.flat(
+        _flat_loss, CENTERS, dim=DIM, cfg=cfg or _cfg(), edge=EDGE,
+        rho_scale=RHO_SCALE, backend=backend, delay_model=delay_model)
+
+
+def _runtime(faults=None, cfg=None, backend="jnp", **kw):
+    sess = _session(backend=backend, cfg=cfg)
+    return PSRuntime(sess.spec, data=sess.data, timing=TIMING,
+                     faults=faults, **kw)
+
+
+def _per_round_folds(rt):
+    """{sid: {round: sorted [(worker, block)]}} from the fold logs."""
+    out = {}
+    for dom in rt.domains:
+        rounds = {}
+        for (v, i, j) in dom.fold_log:
+            rounds.setdefault(v, []).append((i, j))
+        out[dom.sid] = {v: sorted(fs) for v, fs in rounds.items()}
+    return out
+
+
+# ---------------------------------------------------------------------------
+# server_crash: WAL replay loses zero committed folds
+# ---------------------------------------------------------------------------
+
+def test_server_crash_zero_lost_folds():
+    """The crashed domain rebuilds from its WAL: every domain's
+    committed per-round fold multiset matches the crash-free run's
+    exactly, and the recovery is visible in metrics + trace events."""
+    rt_ff = _runtime()
+    ff = rt_ff.run(ROUNDS)
+    rt_cr = _runtime(faults=CRASH_PLAN)
+    cr = rt_cr.run(ROUNDS)
+
+    assert _per_round_folds(rt_cr) == _per_round_folds(rt_ff)
+    assert cr.metrics["server_recoveries"] == 1
+    wal = cr.metrics["wal"]
+    assert wal["replays"] == 1
+    assert wal["commits"] == sum(d.version for d in rt_cr.domains)
+    kinds = [e["kind"] for e in cr.trace.events]
+    assert kinds.count("server_crash") == 1
+    assert kinds.count("server_recover") == 1
+    down = [e for e in cr.trace.events if e["kind"] == "server_crash"][0]
+    up = [e for e in cr.trace.events if e["kind"] == "server_recover"][0]
+    assert up["time"] - down["time"] == pytest.approx(3.0)
+    assert down["sid"] == up["sid"] == 1
+    assert up["replayed"] == down["version"]    # committed before crash
+    # the outage costs sim time, never committed progress
+    assert cr.makespan > ff.makespan
+    # fault-free runs never arm the durability layer
+    assert "server_recoveries" not in ff.metrics
+    assert "wal" not in ff.metrics
+
+
+def test_server_crash_bitwise_z_at_bound0():
+    """At staleness bound 0 every read is fresh, so the effective
+    schedule is crash-invariant — the crash run's final z must be
+    BITWISE the crash-free run's (WAL replay goes through the same
+    jitted fold path; per-round folds commute)."""
+    cfg = _cfg(max_delay=0)
+    ff = _runtime(cfg=cfg).run(ROUNDS)
+    cr = _runtime(cfg=cfg, faults=CRASH_PLAN).run(ROUNDS)
+    np.testing.assert_array_equal(np.asarray(ff.z_final),
+                                  np.asarray(cr.z_final))
+    np.testing.assert_array_equal(ff.trace.delays, cr.trace.delays)
+
+
+@pytest.mark.parametrize("backend", ["jnp", "pallas"])
+def test_server_crash_trace_replays(backend):
+    """The crash run's trace replays through the vectorized epoch —
+    bitwise on pallas, fp32-ulp on jnp (recovery gaps shift sim time,
+    not the committed version schedule)."""
+    sess = _session(backend=backend)
+    res = sess.run_ps(ROUNDS, timing=TIMING, faults=CRASH_PLAN)
+    sess2 = _session(backend=backend, delay_model=res.to_delay_model())
+    state = sess2.init()
+    step = sess2.step_fn()
+    for t in range(res.num_rounds):
+        state, _ = step(state, CENTERS)
+        replay = np.asarray(sess2.z(state)).ravel()
+        runtime = np.asarray(res.z_versions[t + 1]).ravel()
+        if backend == "pallas":
+            np.testing.assert_array_equal(
+                replay, runtime, err_msg=f"diverged at round {t}")
+        else:
+            np.testing.assert_allclose(
+                replay, runtime, rtol=1e-5, atol=1e-6,
+                err_msg=f"diverged at round {t}")
+
+
+def test_server_crash_deterministic():
+    """The same plan twice produces identical runs (seeded link fates,
+    deterministic recovery)."""
+    a = _runtime(faults=CRASH_PLAN).run(ROUNDS)
+    b = _runtime(faults=CRASH_PLAN).run(ROUNDS)
+    np.testing.assert_array_equal(np.asarray(a.z_final),
+                                  np.asarray(b.z_final))
+    np.testing.assert_array_equal(a.trace.delays, b.trace.delays)
+    assert a.makespan == b.makespan
+
+
+def test_server_crash_timing_only():
+    """Timing-only runs crash/recover too (WAL replay skips the absent
+    numerics but restores the version counter + pending queue)."""
+    sess = _session()
+    rt = PSRuntime(sess.spec, timing=TIMING, compute="timing",
+                   faults=CRASH_PLAN)
+    res = rt.run(ROUNDS)
+    assert res.metrics["server_recoveries"] == 1
+    assert res.trace.complete
+
+
+def test_overlapping_server_crash_windows_merge():
+    """A second crash landing while the domain is already down merges
+    into the outage instead of double-crashing."""
+    plan = FaultPlan.of(FaultPlan.server_crash(1, at=2.0, down=4.0),
+                        FaultPlan.server_crash(1, at=3.0, down=1.0))
+    rt = _runtime(faults=plan)
+    res = rt.run(ROUNDS)
+    rt_ff = _runtime()
+    rt_ff.run(ROUNDS)
+    assert _per_round_folds(rt) == _per_round_folds(rt_ff)
+    assert res.metrics["server_recoveries"] >= 1
+
+
+def test_wal_unit_dedup_and_sequencing():
+    wal = DomainWAL(0)
+    assert wal.record_declare(0, 0, [(1, "v")]) is True
+    assert wal.record_declare(0, 0, [(1, "v")]) is False     # retransmit
+    assert wal.dedup_skips == 1
+    wal.record_commit(0, [(0, 1)])
+    with pytest.raises(RuntimeError, match="out of sequence"):
+        wal.record_commit(2, [(0, 1)])
+    assert wal.value(0, 0, 1) == "v"
+    assert wal.pending(1) == []
+
+
+# ---------------------------------------------------------------------------
+# crash-consistent snapshots + deterministic mid-run resume
+# ---------------------------------------------------------------------------
+
+def _assert_same_run(a, b):
+    np.testing.assert_array_equal(np.asarray(a.z_final),
+                                  np.asarray(b.z_final))
+    np.testing.assert_array_equal(a.trace.delays, b.trace.delays)
+    assert a.losses == b.losses
+    assert a.makespan == b.makespan
+
+
+def test_resume_parity_every_snapshot(tmp_path):
+    """Resuming from EVERY snapshot of a checkpointed run reproduces
+    the uninterrupted run exactly — z, trace, fold logs, losses,
+    makespan."""
+    rt_full = _runtime()
+    full = rt_full.run(ROUNDS, checkpoint_every=2,
+                       checkpoint_dir=str(tmp_path))
+    snaps = full.metrics["snapshots"]
+    assert [os.path.basename(s) for s in snaps] \
+        == ["snap-000002", "snap-000004", "snap-000006"]
+    assert list_snapshots(str(tmp_path)) == snaps
+    assert latest_snapshot(str(tmp_path)) == snaps[-1]
+    for snap in snaps:
+        rt_res = _runtime()
+        res = rt_res.run(ROUNDS, resume_from=snap)
+        _assert_same_run(full, res)
+        for d_full, d_res in zip(rt_full.domains, rt_res.domains):
+            assert d_full.fold_log == d_res.fold_log
+    # resume_from a DIRECTORY takes the latest snapshot
+    res = _runtime().run(ROUNDS, resume_from=str(tmp_path))
+    _assert_same_run(full, res)
+
+
+def test_resume_parity_pallas_bitwise(tmp_path):
+    """The pallas backend pins the resume bitwise: kernels are
+    fusion-stable, so z_final must be byte-identical."""
+    full = _runtime(backend="pallas").run(ROUNDS, checkpoint_every=3,
+                                          checkpoint_dir=str(tmp_path))
+    res = _runtime(backend="pallas").run(
+        ROUNDS, resume_from=full.metrics["snapshots"][0])
+    assert np.asarray(full.z_final).tobytes() \
+        == np.asarray(res.z_final).tobytes()
+
+
+def test_resume_composes_with_worker_chaos(tmp_path):
+    """Snapshots taken while worker-crash chaos is active restore the
+    membership timeline and pending fault events exactly."""
+    plan = FaultPlan.of(FaultPlan.crash(1, 2.5, 2.0),
+                        FaultPlan.crash(2, 6.0, 1.0))
+    full = _runtime(faults=plan).run(ROUNDS, checkpoint_every=2,
+                                     checkpoint_dir=str(tmp_path))
+    assert full.metrics["crashes"] == 2
+    for snap in full.metrics["snapshots"]:
+        res = _runtime(faults=plan).run(ROUNDS, resume_from=snap)
+        _assert_same_run(full, res)
+        assert res.metrics["crashes"] + res.metrics["rejoins"] > 0 \
+            or snap == full.metrics["snapshots"][0]
+
+
+def test_checkpoint_layer_inert_when_off(tmp_path):
+    """checkpoint_every=None is the default run, byte-identical."""
+    plain = _runtime().run(ROUNDS)
+    again = _runtime().run(ROUNDS)
+    _assert_same_run(plain, again)
+    assert "snapshots" not in plain.metrics
+    assert np.asarray(plain.z_final).tobytes() \
+        == np.asarray(again.z_final).tobytes()
+
+
+def test_resume_validation_errors(tmp_path):
+    with pytest.raises(ValueError, match="checkpoint_dir"):
+        _runtime().run(ROUNDS, checkpoint_every=2)
+    with pytest.raises(ValueError, match=">= 1"):
+        _runtime().run(ROUNDS, checkpoint_every=0,
+                       checkpoint_dir=str(tmp_path))
+    with pytest.raises(FileNotFoundError):
+        _runtime().run(ROUNDS, resume_from=str(tmp_path / "nope"))
+    # no snapshots in an empty directory
+    with pytest.raises(FileNotFoundError):
+        _runtime().run(ROUNDS, resume_from=str(tmp_path))
+
+
+def test_checkpoint_transport_incompatible(tmp_path):
+    """In-flight retransmission timers are not snapshotable — the
+    combination is refused up front (server_crash durability comes
+    from the WAL instead)."""
+    sess = _session()
+    tr = Transport(0.0, 0.0, drop_rate=0.1)
+    rt = PSRuntime(sess.spec, data=sess.data,
+                   timing=CostProfile(t_worker=ConstantService(1.0),
+                                      t_server_block=ConstantService(0.25),
+                                      net=tr))
+    with pytest.raises(ValueError, match="transport"):
+        rt.run(ROUNDS, checkpoint_every=2, checkpoint_dir=str(tmp_path))
+    rt2 = PSRuntime(sess.spec, timing=TIMING, compute="timing")
+    with pytest.raises(ValueError, match="timing"):
+        rt2.run(ROUNDS, checkpoint_every=2, checkpoint_dir=str(tmp_path))
+
+
+def test_resume_fingerprint_mismatch(tmp_path):
+    """A snapshot resumed into a differently-configured run fails
+    naming the mismatched fields, not silently diverging."""
+    full = _runtime().run(ROUNDS, checkpoint_every=2,
+                          checkpoint_dir=str(tmp_path))
+    snap = full.metrics["snapshots"][0]
+    with pytest.raises(ValueError, match="num_rounds"):
+        _runtime().run(ROUNDS + 2, resume_from=snap)
+    with pytest.raises(ValueError, match="discipline"):
+        sess = _session()
+        PSRuntime(sess.spec, data=sess.data, timing=TIMING,
+                  discipline="locked").run(ROUNDS, resume_from=snap)
+    with pytest.raises(ValueError, match="cadence"):
+        _runtime().run(ROUNDS, resume_from=snap, checkpoint_every=3)
+
+
+def test_snapshot_format_validation(tmp_path):
+    """A checkpoint that is not a runtime snapshot is refused by
+    format tag."""
+    save(str(tmp_path / "notsnap"), {"z": np.zeros(3)}, step=1)
+    with pytest.raises(ValueError, match="format"):
+        load_snapshot(str(tmp_path / "notsnap"))
+
+
+# ---------------------------------------------------------------------------
+# checkpoint file layer: atomicity + manifest cross-validation
+# ---------------------------------------------------------------------------
+
+def test_checkpoint_roundtrip_with_extra(tmp_path):
+    path = str(tmp_path / "ck")
+    tree = {"a": jnp.arange(6, dtype=jnp.float32).reshape(2, 3),
+            "b": {"c": jnp.ones(4)}}
+    save(path, tree, step=7, extra={"clock": 1.25, "rng": {"s": [1, 2]}})
+    back = restore(path, tree)
+    np.testing.assert_array_equal(np.asarray(back["a"]),
+                                  np.asarray(tree["a"]))
+    assert load_extra(path) == {"clock": 1.25, "rng": {"s": [1, 2]}}
+    flat = load_arrays(path)
+    assert set(flat) == {"a", "b/c"}
+
+
+def test_checkpoint_torn_halves_detected(tmp_path):
+    """Mixed-up npz/manifest halves fail naming the file and leaf."""
+    p1, p2 = str(tmp_path / "one"), str(tmp_path / "two")
+    save(p1, {"a": np.zeros(3)})
+    save(p2, {"b": np.zeros(3)})
+    os.replace(p2 + ".npz", p1 + ".npz")       # mix the halves
+    with pytest.raises(ValueError, match="'a'.*torn or mixed-up"):
+        load_arrays(p1)
+    save(p1, {"a": np.zeros(3)})
+    save(p2, {"a": np.zeros(5)})
+    os.replace(p2 + ".npz", p1 + ".npz")       # right key, wrong shape
+    with pytest.raises(ValueError, match="shape"):
+        load_arrays(p1)
+
+
+def test_checkpoint_missing_payload(tmp_path):
+    path = str(tmp_path / "ck")
+    save(path, {"a": np.zeros(3)})
+    os.unlink(path + ".npz")
+    with pytest.raises(FileNotFoundError, match="torn checkpoint"):
+        load_arrays(path)
+
+
+def test_checkpoint_corrupt_manifest(tmp_path):
+    path = str(tmp_path / "ck")
+    save(path, {"a": np.zeros(3)})
+    with open(path + ".json", "w") as f:
+        f.write("{not json")
+    with pytest.raises(ValueError, match="corrupt JSON"):
+        load_arrays(path)
+
+
+def test_checkpoint_atomic_no_tmp_residue(tmp_path):
+    """Atomic writes leave no temp files behind, and re-saving over an
+    existing checkpoint replaces it in one step."""
+    path = str(tmp_path / "ck")
+    save(path, {"a": np.zeros(3)})
+    save(path, {"a": np.ones(3)})
+    files = sorted(os.listdir(tmp_path))
+    assert files == ["ck.json", "ck.npz"]
+    np.testing.assert_array_equal(load_arrays(path)["a"], np.ones(3))
+
+
+# ---------------------------------------------------------------------------
+# FaultPlan JSON diagnostics: file + event index in every error
+# ---------------------------------------------------------------------------
+
+def test_fault_plan_from_json_actionable_errors():
+    with pytest.raises(ValueError, match="corrupt JSON"):
+        FaultPlan.from_json("{nope")
+    with pytest.raises(ValueError, match="event 1"):
+        FaultPlan.from_json(json.dumps(
+            {"events": [{"kind": "crash", "at": 1.0, "worker": 0,
+                         "duration": 2.0},
+                        {"kind": "wibble", "at": 1.0}]}))
+    with pytest.raises(ValueError, match="event 0"):
+        FaultPlan.from_json(json.dumps(
+            {"events": [{"kind": "server_crash", "at": 1.0}]}))
+
+
+def test_fault_plan_load_names_file(tmp_path):
+    p = tmp_path / "plan.json"
+    p.write_text(json.dumps({"events": [{"kind": "server_crash",
+                                         "at": 2.0, "block": 1}]}))
+    with pytest.raises(ValueError) as ei:
+        FaultPlan.load(str(p))
+    assert "plan.json" in str(ei.value)
+    assert "event 0" in str(ei.value)
+    p.write_text(json.dumps(
+        {"events": [{"kind": "server_crash", "at": 2.0, "block": 1,
+                     "duration": 3.0}]}))
+    assert FaultPlan.load(str(p)).has_server_crash
+
+
+def test_server_crash_event_validation():
+    with pytest.raises(ValueError, match="block id"):
+        FaultPlan.of(FaultPlan.server_crash(None, at=1.0, down=1.0))
+    with pytest.raises(ValueError, match="duration"):
+        FaultPlan.of(FaultPlan.server_crash(0, at=1.0, down=0.0))
+    plan = FaultPlan.of(FaultPlan.server_crash(2, at=1.0, down=1.0))
+    with pytest.raises(ValueError, match="outside"):
+        plan.validate(num_workers=N, num_blocks=2)
+    # JSON round-trip keeps the crash
+    assert FaultPlan.from_json(plan.to_json()).has_server_crash

@@ -215,6 +215,61 @@ def test_transport_validation():
 
 
 # ---------------------------------------------------------------------------
+# capped exponential backoff: formula pin + observed retransmit schedule
+# ---------------------------------------------------------------------------
+
+def test_backoff_formula_pin():
+    """``timeout(k) == ack_timeout * min(backoff**k, max_backoff)`` —
+    pinned exactly so a silent change to the retransmission schedule
+    (which shifts every lossy run's timing, trace, and replay) cannot
+    slip through."""
+    tr = Transport(0.0, 0.0, drop_rate=0.1, ack_timeout=0.3)
+    for k in range(7):                      # defaults: backoff=2, cap=8
+        assert tr.timeout(k) == pytest.approx(0.3 * min(2.0 ** k, 8.0))
+    custom = Transport(0.0, 0.0, drop_rate=0.1, ack_timeout=0.5,
+                       backoff=3.0, max_backoff=5.0)
+    for k in range(6):
+        assert custom.timeout(k) == pytest.approx(
+            0.5 * min(3.0 ** k, 5.0))
+    # the cap is reached and then HELD — timeouts never keep growing
+    assert tr.timeout(3) == tr.timeout(4) == tr.timeout(50) \
+        == pytest.approx(0.3 * 8.0)
+
+
+def test_backoff_schedule_observed_under_loss_burst():
+    """Under a total-loss ``link_loss`` burst the declare stream's
+    logged retransmit times follow the capped exponential ladder:
+    consecutive gaps are exactly ``timeout(k)`` and the gap saturates
+    at ``ack_timeout * max_backoff`` for the rest of the burst."""
+    plan = FaultPlan.of(FaultPlan.link_loss(2.0, 28.0, 1.0))
+    sess = _flat_session()
+    res = sess.run_ps(ROUNDS, faults=plan)
+    tr = Transport(0.0, 0.0)                # the synthesized zero-knob
+    streams = {}                            # transport's defaults
+    for e in res.trace.transport:
+        if e["kind"] == "retransmit" and e["msg"] == "declare":
+            key = (e["worker"], e["domain"], e["round"])
+            streams.setdefault(key, []).append(e)
+    assert streams, "a 28s total-loss burst must force retransmissions"
+    deep = max(streams.values(), key=len)
+    assert len(deep) >= 5, "burst long enough to reach the backoff cap"
+    deep.sort(key=lambda e: e["retry"])
+    assert [e["retry"] for e in deep] == list(range(1, len(deep) + 1))
+    for prev, nxt in zip(deep, deep[1:]):
+        # retransmit k's timer was armed with timeout(k)
+        assert nxt["time"] - prev["time"] == pytest.approx(
+            tr.timeout(prev["retry"]))
+    cap = tr.ack_timeout * tr.max_backoff
+    tail = [nxt["time"] - prev["time"] for prev, nxt in
+            zip(deep, deep[1:])][-2:]
+    assert all(g == pytest.approx(cap) for g in tail), \
+        f"backoff must saturate at ack_timeout*max_backoff={cap}; " \
+        f"tail gaps {tail}"
+    # and once the burst lifts, the stalled rounds complete
+    assert res.trace.complete
+
+
+# ---------------------------------------------------------------------------
 # graceful degradation: pull timeout -> cached read within the tau bound
 # ---------------------------------------------------------------------------
 
