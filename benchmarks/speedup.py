@@ -342,7 +342,9 @@ def server_crash_scenario(emit, smoke: bool = False) -> bool:
             if sorted(per_round_ff.get(t, [])) \
                     != sorted(per_round_cr.get(t, [])):
                 lost += 1
-    m = cr.metrics
+    # read the durability instruments straight off the run's metrics
+    # registry (the same instruments PSRunResult.metrics is built from)
+    m = rt_cr.registry.collect(["server_recoveries", "wal"])
     emit(f"server_crash_folds,{sum(len(d.fold_log) for d in rt_cr.domains)},"
          f"mismatched_rounds={lost}"
          f"|recoveries={m['server_recoveries']}"
@@ -406,15 +408,18 @@ def skew_scenario(emit, smoke: bool = False) -> bool:
     for selection in ("random", "zipf"):
         sess = build_session(GATE_WORKERS, dim=CHURN_DIM, samples=4,
                              block_selection=selection, zipf_a=1.5)
-        res = PSRuntime(sess.spec, discipline="per_push", timing=timing,
-                        compute="timing").run(R)
-        bf = res.metrics["server_busy_frac"]
+        rt = PSRuntime(sess.spec, discipline="per_push", timing=timing,
+                       compute="timing")
+        res = rt.run(R)
+        # named-subset read off the run's metrics registry
+        m = rt.registry.collect(["server_busy_frac", "histograms"])
+        bf = m["server_busy_frac"]
         spread[selection] = max(bf) / (sum(bf) / len(bf))
         emit(f"skew_{selection}_makespan,{res.makespan*1e6:.0f},"
              f"busy_max={max(bf):.3f}|busy_min={min(bf):.3f}"
              f"|spread={spread[selection]:.3f}")
         _emit_hist(emit, f"skew_{selection}_occupancy_hist",
-                   res.metrics["histograms"]["server_occupancy"])
+                   m["histograms"]["server_occupancy"])
     min_ratio = json.loads(BASELINE.read_text())["min_skew_occupancy_ratio"]
     ratio = spread["zipf"] / spread["random"]
     emit(f"skew_spread_ratio,{ratio:.3f},min={min_ratio}")
@@ -439,9 +444,11 @@ def heavy_tail_scenario(emit, smoke: bool = False) -> bool:
     ok = True
     for disc in ("lockfree", "per_push"):
         sess = build_session(GATE_WORKERS, dim=CHURN_DIM, samples=4)
-        res = PSRuntime(sess.spec, discipline=disc, timing=timing,
-                        compute="timing").run(R)
-        m = res.metrics
+        rt = PSRuntime(sess.spec, discipline=disc, timing=timing,
+                       compute="timing")
+        res = rt.run(R)
+        m = rt.registry.collect(["stall_time", "max_served_tau", "bound",
+                                 "histograms"])
         stalls[disc] = m["stall_time"]
         ok = ok and m["max_served_tau"] <= m["bound"]
         emit(f"heavy_tail_{disc}_makespan,{res.makespan*1e6:.0f},"

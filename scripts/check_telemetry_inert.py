@@ -1,0 +1,127 @@
+"""CI gate: telemetry must be inert and its exports must validate.
+
+Runs the same server-crash + worker-churn chaos scenario twice — once
+bare, once with FULL telemetry (span tracer, JSONL sink, Chrome trace
+export, per-round stationarity) — and hard-fails unless:
+
+* the final z is BITWISE identical across the two runs;
+* makespan, the metrics dict (keys, order, values) and every lock
+  domain's committed fold log are identical;
+* every streamed JSONL record validates against
+  ``repro.obs.stream.ROUND_RECORD_SCHEMA``;
+* the exported Chrome trace is well-formed trace-event JSON whose
+  span names all come from ``repro.obs.names.SPAN_NAMES``.
+
+ci.sh runs this under 8 forced host devices so the gate also covers
+the multi-device build of the jitted space ops.
+"""
+import json
+import sys
+import tempfile
+from pathlib import Path
+
+import jax.numpy as jnp
+import numpy as np
+
+sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "src"))
+
+from repro.api import ConsensusSession                      # noqa: E402
+from repro.configs.base import ADMMConfig                   # noqa: E402
+from repro.obs import (SPAN_NAMES, Telemetry,               # noqa: E402
+                       validate_record)
+from repro.ps import (CostProfile, FaultPlan,               # noqa: E402
+                      LognormalService, ParetoService, PSRuntime)
+
+N, M, DBLK = 8, 4, 5
+DIM = M * DBLK
+ROUNDS = 10
+
+CHAOS = FaultPlan.of(FaultPlan.server_crash(1, at=2.0, down=3.0),
+                     FaultPlan.crash(0, at=1.0, down=1.0))
+STRAGGLER = CostProfile(t_worker=ParetoService(1.0, alpha=1.2),
+                        t_server_block=LognormalService(0.3, 0.4))
+
+
+def _loss(z, c):
+    return 0.5 * jnp.sum(jnp.square(z - c))
+
+
+def _runtime(telemetry=None):
+    rng = np.random.RandomState(7)
+    centers = jnp.asarray(rng.randn(N, DIM).astype(np.float32))
+    cfg = ADMMConfig(rho=2.0, gamma=0.1, max_delay=2, block_fraction=0.5,
+                     num_blocks=M, block_selection="random", l1_coef=1e-3,
+                     clip=0.8, seed=0)
+    # pallas backend: interpret-mode kernels are fusion-stable, so the
+    # bitwise-z assertion pins the kernel path, not an XLA accident
+    sess = ConsensusSession.flat(_loss, centers, dim=DIM, cfg=cfg,
+                                 backend="pallas")
+    return PSRuntime(sess.spec, data=sess.data, timing=STRAGGLER,
+                     faults=CHAOS, telemetry=telemetry)
+
+
+def _fold_logs(rt):
+    return {dom.sid: list(dom.fold_log) for dom in rt.domains}
+
+
+def main() -> int:
+    rt_off = _runtime()
+    off = rt_off.run(ROUNDS)
+
+    out = Path(tempfile.mkdtemp(prefix="telemetry_gate_"))
+    jsonl = out / "rounds.jsonl"
+    trace = out / "run.trace.json"
+    tel = Telemetry(spans=True, sink=str(jsonl), trace_path=str(trace))
+    rt_on = _runtime(telemetry=tel)
+    on = rt_on.run(ROUNDS)
+
+    # --- inertness -----------------------------------------------------
+    assert on.makespan == off.makespan, \
+        f"makespan drift: {on.makespan} != {off.makespan}"
+    np.testing.assert_array_equal(
+        np.asarray(on.z_final), np.asarray(off.z_final),
+        err_msg="telemetry changed the committed z (not bitwise)")
+    assert list(on.metrics) == list(off.metrics), "metrics key order drift"
+    assert on.metrics == off.metrics, "metrics value drift"
+    assert _fold_logs(rt_on) == _fold_logs(rt_off), "fold log drift"
+    np.testing.assert_array_equal(on.trace.delays, off.trace.delays,
+                                  err_msg="staleness trace drift")
+
+    # --- streamed JSONL schema ----------------------------------------
+    records = [json.loads(line)
+               for line in jsonl.read_text().splitlines()]
+    assert len(records) == ROUNDS, \
+        f"expected {ROUNDS} round records, got {len(records)}"
+    for rec in records:
+        validate_record(rec)
+    assert [r["round"] for r in records] == list(range(ROUNDS))
+    assert [r["loss"] for r in records] == on.losses, \
+        "streamed losses are not the full-precision run losses"
+
+    # --- Chrome trace schema ------------------------------------------
+    doc = json.loads(trace.read_text())
+    events = doc["traceEvents"]
+    assert events, "empty Chrome trace"
+    named_tids = {e["tid"] for e in events if e["name"] == "thread_name"}
+    for e in events:
+        assert e["ph"] in ("X", "i", "C", "M"), f"bad phase {e['ph']!r}"
+        assert e["tid"] in named_tids, f"unnamed track tid {e['tid']}"
+        if e["ph"] == "M":
+            continue
+        assert e["name"] in SPAN_NAMES, f"undeclared span {e['name']!r}"
+        if e["ph"] == "X":
+            assert e["dur"] >= 0.0, f"negative span {e['name']!r}"
+    names = {e["name"] for e in events}
+    for required in ("pull", "compute", "commit", "server_crash",
+                     "wal_replay", "down"):
+        assert required in names, f"span family {required!r} missing"
+
+    print(f"[telemetry gate] ok: bitwise z + identical metrics/fold "
+          f"logs/makespan ({on.makespan:.4f}) with telemetry on; "
+          f"{len(records)} records and {len(events)} trace events "
+          f"validated ({out})")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

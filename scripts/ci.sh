@@ -65,6 +65,19 @@ env PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" \
     XLA_FLAGS="--xla_force_host_platform_device_count=8" \
     python benchmarks/speedup.py --scenario server_crash --smoke
 
+# Telemetry-inertness gate: FULL telemetry (span tracer + JSONL stream
+# + Chrome trace export + per-round stationarity) on a server-crash +
+# worker-churn chaos run must change NOTHING the runtime computes —
+# bitwise-identical z, identical fold logs, metrics dict (keys, order,
+# values) and makespan vs the telemetry-off run — and every streamed
+# record / exported trace event must validate against the repro.obs
+# schemas. 8 forced host devices so the gate covers the multi-device
+# build of the jitted ops.
+echo "[ci] telemetry inertness + schema gate (8 host devices)"
+env PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" \
+    XLA_FLAGS="--xla_force_host_platform_device_count=8" \
+    python scripts/check_telemetry_inert.py
+
 # Checkpoint/resume determinism: a run killed at a snapshot barrier and
 # resumed must finish with bitwise-identical z (pallas cells), trace,
 # losses and makespan vs the uninterrupted run — including composed

@@ -157,7 +157,9 @@ class ConsensusSession:
                check_finite: bool = False,
                checkpoint_every: Optional[int] = None,
                checkpoint_dir: Optional[str] = None,
-               resume_from: Optional[str] = None):
+               resume_from: Optional[str] = None,
+               telemetry: Any = None,
+               metrics_every: Optional[int] = None):
         """Drive ``num_rounds`` rounds under the event-driven Parameter
         Server runtime (``repro.ps``) instead of the vectorized epoch:
         per-block ``lockfree`` servers (or the ``locked`` full-vector
@@ -201,7 +203,18 @@ class ConsensusSession:
         and continues mid-stream, with results identical to the
         uninterrupted run — and a ``server_crash`` fault event makes a
         block server lose its volatile state and rebuild it from its
-        write-ahead commit log with zero committed folds lost."""
+        write-ahead commit log with zero committed folds lost.
+
+        Observability (``repro.obs``; API.md's "Observability"):
+        ``telemetry=`` turns the deterministic telemetry layer on —
+        pass ``True`` (span tracing only), a ``.jsonl`` path /
+        ``"stdout"`` / a callable (per-round record stream), or a
+        :class:`~repro.obs.Telemetry` for full control (span tracer +
+        sink + Chrome-trace path). Telemetry records in virtual
+        sim-time only and never perturbs the schedule: the run's z, fold
+        logs and makespan are bitwise identical to ``telemetry=None``.
+        ``metrics_every=k`` emits every k-th round's record (plus the
+        final round)."""
         import dataclasses as _dc
 
         from .ps import PSRuntime
@@ -219,7 +232,8 @@ class ConsensusSession:
         rt = PSRuntime(self.spec, data=self.data, batches=batches,
                        discipline=discipline, timing=timing,
                        compute=compute, seed=seed, record_z=record_z,
-                       faults=faults, check_finite=check_finite)
+                       faults=faults, check_finite=check_finite,
+                       telemetry=telemetry, metrics_every=metrics_every)
         return rt.run(num_rounds, z0=z0 if z0 is not None else self.z0,
                       checkpoint_every=checkpoint_every,
                       checkpoint_dir=checkpoint_dir,

@@ -4,7 +4,8 @@ from .blocks import (BlockLayout, FlatBlocks, TreeBlocks,
                      make_flat_blocks, make_tree_blocks)
 from .consensus import (AsyBADMMState, ConsensusProblem, asybadmm_step,
                         init_state, make_problem, make_step_fn, run)
-from .metrics import kkt_violations, stationarity
+from .metrics import (block_residuals, kkt_violations, stationarity,
+                      stationarity_blocks)
 from .prox import Regularizer, make_prox, prox_box, prox_l1, soft_threshold
 from .space import (BLOCK_SELECTORS, ConsensusSpec, ConsensusState,
                     ConstantDelay, DelayModel, FlatSpace, SelectorContext,

@@ -55,6 +55,65 @@ def stationarity(problem: ConsensusProblem, state: AsyBADMMState,
     }
 
 
+def block_residuals(z, y, x, edge, rho, reg=None, grads=None) -> dict:
+    """Per-block decomposition of P over the packed representation —
+    the telemetry quantities the PS runtime streams per round (and the
+    signals Adaptive Consensus ADMM's residual-balancing rho updates
+    consume).
+
+    Inputs are the canonical packed arrays (block j = row j for both
+    spaces): ``z`` (M, dblk), ``y``/``x`` (N, M, dblk), ``edge``
+    (N, M) bool, ``rho`` scalar or per-worker (N,). ``reg`` enables
+    the prox-residual term (the ``make_prox`` family is elementwise,
+    so it applies to the packed table directly; zero pads are fixed
+    points of l1/box/l2, so pads contribute nothing); ``grads``
+    (N, M, dblk) — grad f_i at x_i in packed form — enables the
+    gradient term. Returns per-block (M,) arrays ``primal``/``prox``/
+    ``grad`` (residual norms; prox/grad are None when their input is
+    absent) and ``P`` (the per-block sum of squares of whatever terms
+    were computable; summing it over blocks reproduces ``stationarity``
+     's P up to fp reassociation when all terms are present)."""
+    rho = _rho_b(rho)
+    edge_m = jnp.asarray(edge)[..., None]                  # (N, M, 1)
+    z = jnp.asarray(z)
+    cons = jnp.where(edge_m, x - z[None], 0.0)             # (N, M, dblk)
+    primal_sq = jnp.sum(jnp.square(cons), axis=(0, 2))     # (M,)
+    P_blocks = primal_sq
+    prox_b = None
+    if reg is not None:
+        gradL_z = jnp.sum(jnp.where(edge_m, -y - rho * (x - z[None]), 0.0),
+                          axis=0)                          # (M, dblk)
+        z_hat = reg.prox(z - gradL_z, 1.0)                 # eq. 15, mu = 1
+        prox_sq = jnp.sum(jnp.square(z - z_hat), axis=1)   # (M,)
+        prox_b = jnp.sqrt(prox_sq)
+        P_blocks = P_blocks + prox_sq
+    grad_b = None
+    if grads is not None:
+        gradL_x = jnp.where(edge_m,
+                            grads + y + rho * (x - z[None]), 0.0)
+        grad_sq = jnp.sum(jnp.square(gradL_x), axis=(0, 2))
+        grad_b = jnp.sqrt(grad_sq)
+        P_blocks = P_blocks + grad_sq
+    return {"primal": jnp.sqrt(primal_sq), "prox": prox_b,
+            "grad": grad_b, "P": P_blocks}
+
+
+def stationarity_blocks(problem: ConsensusProblem, state: AsyBADMMState,
+                        rho) -> dict:
+    """Per-block view of :func:`stationarity`: the same P (eqs. 14-15)
+    decomposed over blocks via :func:`block_residuals`, with the
+    gradient term evaluated exactly as ``stationarity`` does. Each
+    per-block array sums (in squares) to the corresponding total up to
+    fp reassociation — pinned by tests/test_metrics.py."""
+    blocks = problem.blocks
+
+    def gfun(xb, di):
+        return jax.grad(problem.loss_fn)(blocks.from_blocks(xb), di)
+    gb = blocks.to_blocks(jax.vmap(gfun)(state.x, problem.data))
+    return block_residuals(state.z_hist[0], state.y, state.x,
+                           problem.edge, rho, reg=problem.reg, grads=gb)
+
+
 def kkt_violations(problem: ConsensusProblem, state: AsyBADMMState,
                    rho) -> dict:
     """Theorem 1.2 KKT conditions at the limit point:

@@ -8,6 +8,7 @@ mesh flag on a real pod. Supports both trainers so the paper's ADMM can
 be compared to the synchronous SGD/Adam baseline on the same stream.
 """
 import argparse
+import contextlib
 import json
 import time
 
@@ -48,17 +49,35 @@ def run_ps_training(session, args, pipe, enc_kw) -> None:
         from ..ps import CostProfile, NetworkModel
         timing = CostProfile(net=NetworkModel(args.net_latency,
                                               args.net_jitter))
+    telemetry = None
+    if args.telemetry or args.telemetry_path:
+        from ..obs import Telemetry
+        if args.telemetry_path:
+            sink = f"{args.telemetry_path}.jsonl"
+            trace_path = f"{args.telemetry_path}.trace.json"
+        else:
+            sink, trace_path = "stdout", None
+        telemetry = Telemetry(spans=True, sink=sink,
+                              trace_path=trace_path,
+                              metrics_every=max(args.metrics_every, 1))
+    prof = jax.profiler.trace(args.profile_dir) if args.profile_dir \
+        else contextlib.nullcontext()
     t0 = time.time()
-    result = session.run_ps(
-        args.steps, discipline=args.discipline, record_z=False,
-        timing=timing, faults=args.faults,
-        checkpoint_every=args.checkpoint_every,
-        checkpoint_dir=args.checkpoint_dir,
-        resume_from=args.resume,
-        batches=lambda t: pipe.batch(t, num_workers=args.workers, **enc_kw))
+    with prof:
+        result = session.run_ps(
+            args.steps, discipline=args.discipline, record_z=False,
+            timing=timing, faults=args.faults,
+            checkpoint_every=args.checkpoint_every,
+            checkpoint_dir=args.checkpoint_dir,
+            resume_from=args.resume,
+            telemetry=telemetry,
+            batches=lambda t: pipe.batch(t, num_workers=args.workers,
+                                         **enc_kw))
+    # the machine-readable stream carries FULL float precision — a
+    # convergence analysis downstream must not eat a 4-decimal
+    # truncation; rounding is for the human summary line only
     for step in range(0, args.steps, max(args.log_every, 1)):
-        print(json.dumps({"round": step,
-                          "loss": round(result.losses[step], 4)}),
+        print(json.dumps({"round": step, "loss": result.losses[step]}),
               flush=True)
     m = result.metrics
     print(json.dumps({
@@ -73,6 +92,13 @@ def run_ps_training(session, args, pipe, enc_kw) -> None:
         "server_recoveries": m.get("server_recoveries", 0),
         "snapshots": len(m.get("snapshots", [])),
         "elapsed_s": round(time.time() - t0, 1)}), flush=True)
+    if args.telemetry_path:
+        print(f"telemetry: round records in {args.telemetry_path}.jsonl, "
+              f"Perfetto trace in {args.telemetry_path}.trace.json "
+              f"(load at https://ui.perfetto.dev)")
+    if args.profile_dir:
+        print(f"XLA profile in {args.profile_dir} "
+              f"(view: tensorboard --logdir {args.profile_dir})")
     if m.get("snapshots"):
         print(f"crash-consistent snapshots in {args.checkpoint_dir} "
               f"(resume: --runtime ps --resume {m['snapshots'][-1]})")
@@ -194,6 +220,29 @@ def main() -> None:
                          "written by --checkpoint-every; the run "
                          "continues mid-stream and its tail is "
                          "identical to the uninterrupted run's")
+    ap.add_argument("--telemetry", action="store_true",
+                    help="--runtime ps: turn on deterministic telemetry "
+                         "(repro.obs) — virtual-time span tracing plus "
+                         "a per-round record stream (loss, per-block "
+                         "stationarity residuals, queue depths, stall/"
+                         "transport totals) to stdout. Never perturbs "
+                         "the schedule: results are bitwise identical "
+                         "with or without it")
+    ap.add_argument("--telemetry-path", default=None,
+                    help="--runtime ps: stream the per-round records to "
+                         "PREFIX.jsonl and save the Chrome trace to "
+                         "PREFIX.trace.json (loadable in Perfetto) "
+                         "instead of stdout; implies --telemetry")
+    ap.add_argument("--metrics-every", type=int, default=1,
+                    help="--runtime ps --telemetry: emit every K-th "
+                         "round's record (the final round always "
+                         "emits)")
+    ap.add_argument("--profile-dir", default=None,
+                    help="--runtime ps: wrap the run in "
+                         "jax.profiler.trace(DIR) — a wall-clock XLA "
+                         "profile of the jitted numerics (view with "
+                         "tensorboard), orthogonal to the sim-time "
+                         "telemetry spans")
     ap.add_argument("--lr", type=float, default=1e-3)
     ap.add_argument("--ckpt", default=None)
     ap.add_argument("--log-every", type=int, default=10)
@@ -258,8 +307,8 @@ def main() -> None:
         batch = pipe.batch(step, **batch_kw)
         state, info = step_fn(state, batch)
         if step % args.log_every == 0 or step == args.steps - 1:
-            loss = float(info["loss"])
-            print(json.dumps({"step": step, "loss": round(loss, 4),
+            # machine stream: full float precision (see run_ps_training)
+            print(json.dumps({"step": step, "loss": float(info["loss"]),
                               "elapsed_s": round(time.time() - t0, 1)}),
                   flush=True)
 

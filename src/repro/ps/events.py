@@ -25,6 +25,13 @@ coordinator's quiescence check). ``restore_clock`` fast-forwards the
 clock when a run resumes from a snapshot; it refuses to run with
 events already queued — restored time must never travel backwards
 past scheduled work.
+
+A third hook serves telemetry (``repro.obs``): ``observer``, called as
+``observer(now, tag)`` after every callback (and after ``after_event``
+— the snapshot barrier's own work is observable too). The observer is
+read-only by contract: it must not schedule events, consume rng, or
+mutate runtime state — the determinism guarantee that a telemetry-on
+run is bitwise identical to a telemetry-off one rests on it.
 """
 from __future__ import annotations
 
@@ -42,6 +49,10 @@ class EventScheduler:
         self.now = 0.0
         self.events_processed = 0
         self.after_event: Optional[Callable[[], None]] = None
+        # telemetry observer: observer(now, tag) after every callback;
+        # must never schedule, draw rng, or mutate (see module doc)
+        self.observer: Optional[Callable[[float, Optional[str]],
+                                         None]] = None
 
     def at(self, time: float, fn: Callable[[], None],
            tag: Optional[str] = None) -> None:
@@ -92,4 +103,6 @@ class EventScheduler:
             fn()
             if self.after_event is not None:
                 self.after_event()
+            if self.observer is not None:
+                self.observer(self.now, _tag)
         return self.now

@@ -144,6 +144,18 @@ class DomainWAL:
         return len(self._decls)
 
 
+def register_wal_metrics(reg, domains) -> None:
+    """Register the durability instruments (WAL record totals +
+    recovery count) over the run's armed lock domains."""
+    reg.counter("server_recoveries",
+                lambda: sum(d.recoveries for d in domains))
+    reg.gauge("wal", lambda: {
+        "commits": sum(len(d.wal.commits) for d in domains),
+        "declares": sum(d.wal.declares for d in domains),
+        "dedup_skips": sum(d.wal.dedup_skips for d in domains),
+        "replays": sum(d.wal.replays for d in domains)})
+
+
 # ---------------------------------------------------------------------------
 # crash-consistent snapshots (quiescent barrier)
 # ---------------------------------------------------------------------------
@@ -168,6 +180,9 @@ class SnapshotCoordinator:
         self.next_round = self.every
         self.parked: Dict[int, int] = {}     # worker id -> parked round
         self.written: List[str] = []
+        # telemetry anchor: sim time the first worker parked at the
+        # pending barrier (the "snapshot" span's start)
+        self._barrier_start: Optional[float] = None
 
     @property
     def active(self) -> bool:
@@ -181,6 +196,8 @@ class SnapshotCoordinator:
         resumes via the barrier's release)."""
         if not self.active or t < self.next_round:
             return False
+        if self._barrier_start is None:
+            self._barrier_start = self.rt.sched.now
         self.parked[wk.i] = t
         return True
 
@@ -208,12 +225,25 @@ class SnapshotCoordinator:
         rt = self.rt
         self.written.append(
             write_snapshot(rt, self.dir, self.next_round, self.parked))
+        obs = rt.obs
+        if obs is not None and obs.spans is not None:
+            start = self._barrier_start if self._barrier_start is not None \
+                else rt.sched.now
+            obs.spans.complete(obs.RUNTIME_TRACK, "snapshot",
+                               start, rt.sched.now,
+                               round=self.next_round,
+                               path=self.written[-1],
+                               parked=len(self.parked))
+        self._barrier_start = None
         self.next_round += self.every
         parked, self.parked = self.parked, {}
         for i in sorted(parked):
             wk = rt._workers[i]
             rt.sched.at(rt.sched.now, wk._guarded(
                 lambda wk=wk, t=parked[i]: wk._begin_round(t)))
+
+    def register_metrics(self, reg) -> None:
+        reg.gauge("snapshots", lambda: list(self.written))
 
 
 # ---------------------------------------------------------------------------

@@ -42,6 +42,7 @@ from typing import Any, Dict, List, Optional
 import numpy as np
 
 from ..core.space import ConsensusSpec
+from ..obs import MetricsRegistry, as_telemetry, hist
 from . import recovery as _recovery
 from .chaos import FaultInjector, FaultPlan
 from .engine import SpaceEngine
@@ -69,17 +70,13 @@ class PSRunResult:
     z_versions: Optional[List[Any]]      # z per version 0..R (record_z)
     losses: Optional[List[float]]        # mean participant loss per round
     metrics: Dict[str, Any]
+    # the run's Telemetry (None when telemetry was off): spans carry
+    # the Chrome trace (telemetry.spans.save(path)), the sink already
+    # received every per-round record
+    telemetry: Optional[Any] = None
 
     def to_delay_model(self):
         return self.trace.to_delay_model()
-
-
-def _hist(values, bins: int = 8) -> Dict[str, list]:
-    vals = np.asarray(list(values), np.float64)
-    if vals.size == 0:
-        vals = np.zeros(1)
-    counts, edges = np.histogram(vals, bins=bins)
-    return {"counts": counts.tolist(), "edges": [float(e) for e in edges]}
 
 
 class PSRuntime:
@@ -93,7 +90,9 @@ class PSRuntime:
                  staleness_bound: Optional[int] = None,
                  record_z: bool = True,
                  faults: Optional[FaultPlan] = None,
-                 check_finite: bool = False):
+                 check_finite: bool = False,
+                 telemetry: Any = None,
+                 metrics_every: Optional[int] = None):
         if compute not in ("real", "timing"):
             raise ValueError(f"compute must be 'real' or 'timing'; "
                              f"got {compute!r}")
@@ -125,6 +124,18 @@ class PSRuntime:
         # divergence watchdog: halt the run (FloatingPointError naming
         # the round/block) the moment a committed z goes NaN/Inf
         self.check_finite = bool(check_finite) and not self.timing_only
+        # telemetry (repro.obs): None = inert — rt.obs is None and no
+        # instrumentation site does anything; on = spans/stream record
+        # in virtual time only, never perturbing the schedule
+        self.obs = as_telemetry(telemetry)
+        if metrics_every is not None:
+            if self.obs is None:
+                raise ValueError("metrics_every= needs telemetry= "
+                                 "(the per-round stream cadence)")
+            if metrics_every < 1:
+                raise ValueError(f"metrics_every must be >= 1; "
+                                 f"got {metrics_every}")
+            self.obs.metrics_every = int(metrics_every)
         self._fixed_data = data
         self._batches = batches
         if not self.timing_only and data is None and batches is None:
@@ -157,6 +168,9 @@ class PSRuntime:
         self.num_rounds = num_rounds
         self.sched = EventScheduler()
         self.enforcer = StalenessEnforcer(self.bound)
+        if self.obs is not None:
+            self.sched.observer = self.obs.on_event
+            self.enforcer.obs = self.obs
         self.trace = DelayTrace.empty(num_rounds, eng.N, eng.M, self.bound,
                                       self.discipline)
         self.worker_service = self.timing_profile.worker_service()
@@ -193,9 +207,14 @@ class PSRuntime:
             self.transport = None
         self.fabric = None
         if self.transport is not None:
+            recorder = self.trace.add_transport
+            if self.obs is not None:
+                # every delivery decision also lands as a span instant
+                # (same kind spellings — obs.names is one registry)
+                recorder = self.obs.transport_recorder(recorder)
             self.fabric = TransportFabric(
                 self.transport, self.sched, self.seed,
-                recorder=self.trace.add_transport,
+                recorder=recorder,
                 burst_drop=self.injector.link_drop
                 if not self.injector.empty else None)
 
@@ -292,6 +311,11 @@ class PSRuntime:
         # --- launch ---
         workers = self._workers = [WorkerProc(i, self, cold=i in cold)
                                    for i in range(eng.N)]
+        if self.obs is not None:
+            self.obs.bind(num_domains=len(self.domains),
+                          num_rounds=num_rounds,
+                          record_fn=self._round_record)
+        self._register_metrics()
         if resume_state is not None:
             # restore the quiescent barrier state and arm it: clock,
             # entity state + rngs, the not-yet-fired fault timeline,
@@ -343,33 +367,11 @@ class PSRuntime:
             losses = [float(np.mean(l)) if l else float("nan")
                       for l in self._losses]
 
-        N = eng.N
-        stall_time_pw = [self.enforcer.stall_time_by_worker.get(i, 0.0)
-                         for i in range(N)]
-        stall_count_pw = [self.enforcer.stall_count_by_worker.get(i, 0)
-                          for i in range(N)]
-        busy_frac = [d.busy_time / makespan if makespan > 0 else 0.0
-                     for d in self.domains]
-        participated = [self.membership.participated_rounds(i)
-                        for i in range(N)]
-        metrics = dict(self.enforcer.stats())
-        metrics.update(
-            makespan=makespan,
-            events=self.sched.events_processed,
-            commits=sum(d.commits for d in self.domains),
-            pushes=sum(d.pushes for d in self.domains),
-            server_busy_time=[d.busy_time for d in self.domains],
-            server_busy_frac=busy_frac,
-            server_wait_time=[d.wait_time for d in self.domains],
-            stall_time_per_worker=stall_time_pw,
-            stall_count_per_worker=stall_count_pw,
-            participated_rounds=participated,
-            worker_iterations=sum(participated),
-            crashes=self.membership.crashes,
-            rejoins=self.membership.rejoins,
-            histograms={
-                "worker_stall_time": _hist(stall_time_pw),
-                "server_occupancy": _hist(busy_frac)})
+        # assemble the final metrics dict from the registry — the
+        # instruments every component registered in _register_metrics
+        # evaluate lazily here, in registration order, reproducing the
+        # pre-telemetry dict byte for byte
+        metrics = self.registry.collect()
         self.trace.meta.update(
             seed=self.seed, makespan=makespan,
             discipline=self.discipline,
@@ -383,23 +385,8 @@ class PSRuntime:
                 fault_events=len(self.faults.events),
                 crashes=self.membership.crashes,
                 rejoins=self.membership.rejoins)
-        if any(d.wal is not None for d in self.domains):
-            metrics["server_recoveries"] = sum(d.recoveries
-                                               for d in self.domains)
-            metrics["wal"] = {
-                "commits": sum(len(d.wal.commits) for d in self.domains),
-                "declares": sum(d.wal.declares for d in self.domains),
-                "dedup_skips": sum(d.wal.dedup_skips
-                                   for d in self.domains),
-                "replays": sum(d.wal.replays for d in self.domains)}
-        if self.ckpt is not None:
-            metrics["snapshots"] = list(self.ckpt.written)
         if self.transport is not None:
-            tstats = self.fabric.stats()
-            tstats["dups_dropped"] = sum(d.dups_dropped
-                                         for d in self.domains)
-            tstats["timeout_fallbacks"] = self.enforcer.timeout_fallbacks
-            metrics["transport"] = tstats
+            tstats = metrics["transport"]
             self.trace.meta.update(transport={
                 "drop_rate": self.transport.drop_rate,
                 "dup_rate": self.transport.dup_rate,
@@ -409,10 +396,118 @@ class PSRuntime:
                    ("sent", "delivered", "drops", "dups", "reorders",
                     "retransmits", "dups_dropped", "timeout_fallbacks",
                     "delivery_rate")}})
+        if self.obs is not None:
+            self.obs.finalize({"seed": self.seed, "makespan": makespan,
+                               "discipline": self.discipline,
+                               "num_rounds": num_rounds})
         return PSRunResult(makespan=makespan, num_rounds=num_rounds,
                            discipline=self.discipline, trace=self.trace,
                            z_final=z_final, z_versions=z_versions,
-                           losses=losses, metrics=metrics)
+                           losses=losses, metrics=metrics,
+                           telemetry=self.obs)
+
+    # ------------------------------------------------------------------
+    # observability (repro.obs)
+    # ------------------------------------------------------------------
+    def _register_metrics(self) -> None:
+        """Build the run's :class:`~repro.obs.MetricsRegistry`: every
+        component registers lazy instruments over its own counters (no
+        hot-path writes), and registration order IS the key order of
+        the final ``PSRunResult.metrics`` dict — kept identical to the
+        pre-registry inline assembly (byte-compatible)."""
+        reg = self.registry = MetricsRegistry()
+        self.enforcer.register_metrics(reg)
+        reg.gauge("makespan", lambda: self.sched.now)
+        reg.counter("events", lambda: self.sched.events_processed)
+        BlockServerProc.register_metrics(reg, self.domains, self.sched)
+        WorkerProc.register_metrics(reg, self)
+        reg.histogram("histograms", lambda: {
+            "worker_stall_time": hist(
+                [self.enforcer.stall_time_by_worker.get(i, 0.0)
+                 for i in range(self.engine.N)]),
+            "server_occupancy": hist(
+                [d.busy_time / self.sched.now if self.sched.now > 0
+                 else 0.0 for d in self.domains])})
+        if any(d.wal is not None for d in self.domains):
+            _recovery.register_wal_metrics(reg, self.domains)
+        if self.ckpt is not None:
+            self.ckpt.register_metrics(reg)
+        if self.fabric is not None:
+            self.fabric.register_metrics(reg, self)
+
+    def _round_record(self, version: int, now: float) -> Dict[str, Any]:
+        """One per-round stream record (obs/stream.py schema), built
+        the moment the LAST lock domain published ``version`` — pure
+        reads of committed state and monotone counters (no rng, no
+        events: telemetry-on stays bitwise-identical)."""
+        r = version - 1
+        loss = None
+        if self._losses is not None and self._losses[r]:
+            loss = float(np.mean(self._losses[r]))
+        depth = [int(sum(d._unprocessed.values())) for d in self.domains]
+        record = {
+            "round": r, "version": version, "sim_time": float(now),
+            "loss": loss,
+            "stationarity": self._round_stationarity(version),
+            "queue_depth": depth,
+            "commits": int(sum(d.commits for d in self.domains)),
+            "pushes": int(sum(d.pushes for d in self.domains)),
+            "stall_count": int(self.enforcer.stall_count),
+            "stall_time": float(self.enforcer.stall_time),
+            "transport": None}
+        if self.fabric is not None:
+            s = self.fabric.stats()
+            record["transport"] = {
+                k: int(s[k]) for k in ("sent", "delivered", "drops",
+                                       "dups", "reorders", "retransmits")}
+        spans = self.obs.spans if self.obs is not None else None
+        if spans is not None:
+            for dom, q in zip(self.domains, depth):
+                spans.counter(self.obs.server_track(dom.sid),
+                              "queue_depth", now, depth=q)
+        return record
+
+    def _round_stationarity(self, version: int) -> Optional[Dict]:
+        """Per-block stationarity/residuals at a committed version
+        (``core.metrics.block_residuals`` over the packed state), or
+        None when not computable without perturbing the run: timing
+        mode, ``track_x=False`` sessions, or a block server currently
+        down (its committed contents are dark until WAL recovery). The
+        gradient term needs fixed full-batch data (``batches=`` streams
+        and minibatch draws are round-scoped); without it the streamed
+        P carries the primal + prox terms only. Only the packed flat
+        representation streams (pytree sessions default ``track_x=False``
+        and their bundles are not packed tables)."""
+        if self.timing_only or getattr(self.x, "ndim", 0) != 3 \
+                or any(d.down for d in self.domains):
+            return None
+        from ..core.metrics import block_residuals
+        eng = self.engine
+        try:
+            z = eng.join_blocks([
+                self.domain_of_block[j].content_at(j, version)
+                for j in range(eng.M)])
+        except KeyError:
+            return None                # version pruned / lost to a crash
+        grads = None
+        if self._fixed_data is not None and self.spec.minibatch is None:
+            _, grads, _ = eng.grads(self.x, self._fixed_data)
+        res = block_residuals(z, self.y, self.x, eng.edge,
+                              self.spec.rho_vec, reg=self.spec.reg,
+                              grads=grads)
+        primal = [float(v) for v in np.asarray(res["primal"])]
+        prox = [float(v) for v in np.asarray(res["prox"])]
+        grad = [] if res["grad"] is None else \
+            [float(v) for v in np.asarray(res["grad"])]
+        p_blocks = [float(v) for v in np.asarray(res["P"])]
+        return {
+            "P": float(sum(p_blocks)),
+            "primal_residual": float(np.sqrt(sum(v * v for v in primal))),
+            "prox_residual": float(np.sqrt(sum(v * v for v in prox))),
+            "grad_norm": (float(np.sqrt(sum(v * v for v in grad)))
+                          if grad else None),
+            "per_block": {"primal": primal, "prox": prox, "grad": grad,
+                          "P": p_blocks}}
 
     # ------------------------------------------------------------------
     def worker_proc(self, i: int) -> WorkerProc:
@@ -440,8 +535,14 @@ class PSRuntime:
             # re-request for the same round be served as new
             for dom in self.domains:
                 dom.forget_pending_pulls(i)
-        self.trace.add_event("leave" if permanent else "crash",
-                             worker=i, round=r, time=self.sched.now)
+        kind = "leave" if permanent else "crash"
+        self.trace.add_event(kind, worker=i, round=r, time=self.sched.now)
+        if self.obs is not None:
+            track = self.obs.worker_track(i)
+            if self.obs.spans is not None:
+                self.obs.spans.instant(track, kind, self.sched.now,
+                                       round=r)
+            self.obs.entity_down(track, self.sched.now)
         # gates waiting on this worker's declaration must re-check
         for dom in self.domains_of_worker[i]:
             dom._maybe_commit()
@@ -468,6 +569,12 @@ class PSRuntime:
         self.membership.activate(i, r)
         self.enforcer.note_rejoin()
         self.trace.add_event(kind, worker=i, round=r, time=self.sched.now)
+        if self.obs is not None:
+            track = self.obs.worker_track(i)
+            if self.obs.spans is not None:
+                self.obs.spans.instant(track, kind, self.sched.now,
+                                       round=r)
+            self.obs.entity_up(track, self.sched.now)
         wk.revive(r)
 
     def _crash_server(self, block: int) -> None:
@@ -480,6 +587,13 @@ class PSRuntime:
             return                     # overlapping windows merge
         self.trace.add_event("server_crash", block=block, sid=dom.sid,
                              version=dom.version, time=self.sched.now)
+        if self.obs is not None:
+            track = self.obs.server_track(dom.sid)
+            if self.obs.spans is not None:
+                self.obs.spans.instant(track, "server_crash",
+                                       self.sched.now,
+                                       version=dom.version)
+            self.obs.entity_down(track, self.sched.now)
         dom.crash()
         self.enforcer.drop_server(dom.sid)
 
@@ -494,6 +608,13 @@ class PSRuntime:
         self.trace.add_event("server_recover", block=block, sid=dom.sid,
                              version=dom.version, time=self.sched.now,
                              replayed=len(dom.wal.commits))
+        if self.obs is not None:
+            track = self.obs.server_track(dom.sid)
+            if self.obs.spans is not None:
+                self.obs.spans.instant(track, "server_recover",
+                                       self.sched.now,
+                                       version=dom.version)
+            self.obs.entity_up(track, self.sched.now)
 
     # ------------------------------------------------------------------
     # per-round data (minibatched through the epoch's key chain)

@@ -188,16 +188,27 @@ class BlockServerProc:
         self.pushes = 0
 
     # ---- queue occupancy --------------------------------------------------
-    def _occupy(self, duration: float) -> float:
+    def _occupy(self, duration: float, label: Optional[str] = None) -> float:
         """Serialize ``duration`` of work through this lock domain's
         queue; returns the completion time. Accounts the queueing delay
-        of the newly enqueued item (time it sat behind earlier work)."""
+        of the newly enqueued item (time it sat behind earlier work).
+        ``label`` names the service span ("push_service" /
+        "commit_service") on the telemetry track — purely a recording
+        of the times computed here, never an input to them."""
         start = max(self.sched.now, self.busy_until)
         done = start + duration
         self.wait_time += start - self.sched.now
         self.wait_count += 1
         self.busy_until = done
         self.busy_time += duration
+        obs = self.rt.obs if self.rt is not None else None
+        if obs is not None and obs.spans is not None and label is not None:
+            track = obs.server_track(self.sid)
+            if start > self.sched.now:
+                obs.spans.complete(track, "queue_wait",
+                                   self.sched.now, start)
+            if duration > 0:
+                obs.spans.complete(track, label, start, done)
         return done
 
     def _commit_sample(self) -> float:
@@ -229,7 +240,7 @@ class BlockServerProc:
             cost = self.push_cost
             if self.per_push:
                 cost += self._commit_sample()
-            done = self._occupy(cost)
+            done = self._occupy(cost, label="push_service")
             self.sched.at(done, self._guard(
                 lambda t=t, i=i, j=j, v=value:
                 self._push_processed(t, i, j, v)))
@@ -337,7 +348,8 @@ class BlockServerProc:
             dur = 0.0 if self._push_buf.get(v) else self._commit_sample()
         else:
             dur = sum(self._commit_sample() for _ in self.block_ids)
-        self.sched.at(self._occupy(dur), self._guard(self._finish_commit))
+        self.sched.at(self._occupy(dur, label="commit_service"),
+                      self._guard(self._finish_commit))
 
     def _finish_commit(self) -> None:
         v = self.version
@@ -373,6 +385,15 @@ class BlockServerProc:
         self._decl.pop(v, None)
         self._unprocessed.pop(v, None)
         self._committing = False
+        obs = self.rt.obs if self.rt is not None else None
+        if obs is not None:
+            if obs.spans is not None:
+                obs.spans.instant(obs.server_track(self.sid), "commit",
+                                  self.sched.now, version=self.version,
+                                  folds=len(pushes))
+            # round-completion detection: the stream record for round
+            # v emits the moment the LAST domain publishes version v+1
+            obs.note_commit(self.sid, self.version, self.sched.now)
         self.enforcer.notify(self, self.sched.now)
         self._maybe_commit()
 
@@ -435,6 +456,11 @@ class BlockServerProc:
         self.version = len(self.wal.commits)
         self.wal.replays += 1
         self.recoveries += 1
+        obs = self.rt.obs if self.rt is not None else None
+        if obs is not None and obs.spans is not None:
+            obs.spans.instant(obs.server_track(self.sid), "wal_replay",
+                              self.sched.now,
+                              replayed=len(self.wal.commits))
         for (i, t, pushes) in self.wal.pending(self.version):
             self._decl[t].add(i)
             for (j, value) in pushes:
@@ -442,7 +468,7 @@ class BlockServerProc:
                 cost = self.push_cost
                 if self.per_push:
                     cost += self._commit_sample()
-                done = self._occupy(cost)
+                done = self._occupy(cost, label="push_service")
                 self.sched.at(done, self._guard(
                     lambda t=t, i=i, j=j, v=value:
                     self._push_processed(t, i, j, v)))
@@ -465,3 +491,19 @@ class BlockServerProc:
             for v in [v for v in store if v < min_version
                       and v != self.version]:
                 del store[v]
+
+    # ---- telemetry --------------------------------------------------------
+    @staticmethod
+    def register_metrics(reg, domains: list, sched) -> None:
+        """Register the server-side instruments over ``domains``
+        (fleet totals + per-domain occupancy lists) into the run's
+        :class:`~repro.obs.MetricsRegistry`."""
+        reg.counter("commits", lambda: sum(d.commits for d in domains))
+        reg.counter("pushes", lambda: sum(d.pushes for d in domains))
+        reg.gauge("server_busy_time",
+                  lambda: [d.busy_time for d in domains])
+        reg.gauge("server_busy_frac",
+                  lambda: [d.busy_time / sched.now if sched.now > 0
+                           else 0.0 for d in domains])
+        reg.gauge("server_wait_time",
+                  lambda: [d.wait_time for d in domains])

@@ -63,6 +63,9 @@ class StalenessEnforcer:
         self.stall_count_by_worker: Dict[int, int] = defaultdict(int)
         # server sid -> FIFO [(worker id, round t, issue time, resolve)]
         self._waiting: Dict[int, List[Tuple[int, int, float, Callable]]] = {}
+        # telemetry (repro.obs.Telemetry) — None keeps every
+        # instrumentation site inert; set by PSRuntime.run
+        self.obs = None
 
     def request(self, server, t: int, now: float,
                 resolve: Callable[[int], None], *, worker: int = -1) -> bool:
@@ -87,10 +90,16 @@ class StalenessEnforcer:
         if not waiters:
             return
         keep = []
+        spans = self.obs.spans if self.obs is not None else None
         for (worker, t, issued, resolve) in waiters:
             if server.version >= t - self.bound:
                 self.stall_time += now - issued
                 self.stall_time_by_worker[worker] += now - issued
+                if spans is not None:
+                    # the stall window is only known at resolution —
+                    # emit the complete span on the worker's track
+                    spans.complete(self.obs.worker_track(worker), "stall",
+                                   issued, now, round=t, server=server.sid)
                 self._serve(t, min(server.version, t), resolve)
             else:
                 keep.append((worker, t, issued, resolve))
@@ -169,3 +178,15 @@ class StalenessEnforcer:
                 "dropped_pulls": self.dropped_pulls,
                 "version_resets": self.version_resets,
                 "timeout_fallbacks": self.timeout_fallbacks}
+
+    def register_metrics(self, reg) -> None:
+        """Register the enforcer's instruments (same keys/order as
+        :meth:`stats` — the head of ``PSRunResult.metrics``)."""
+        reg.gauge("bound", lambda: self.bound)
+        reg.counter("pulls_served", lambda: self.pulls_served)
+        reg.gauge("max_served_tau", lambda: self.max_served_tau)
+        reg.counter("stall_count", lambda: self.stall_count)
+        reg.counter("stall_time", lambda: self.stall_time)
+        reg.counter("dropped_pulls", lambda: self.dropped_pulls)
+        reg.counter("version_resets", lambda: self.version_resets)
+        reg.counter("timeout_fallbacks", lambda: self.timeout_fallbacks)

@@ -92,12 +92,21 @@ class DelayTrace:
         self.participation = None if p.all() else p
 
     def add_event(self, kind: str, **fields) -> None:
+        """Append one chaos-timeline entry. ``kind`` must be declared
+        in :data:`repro.obs.names.TRACE_EVENT_KINDS` — the shared
+        registry that keeps trace spellings and telemetry span names
+        from silently diverging."""
+        from ..obs.names import TRACE_EVENT_KINDS, validate_kind
+        validate_kind(kind, TRACE_EVENT_KINDS, "trace event")
         self.events.append({"kind": kind, **fields})
 
     def add_transport(self, kind: str, **fields) -> None:
         """Log one delivery decision (drop/dup/reorder/retransmit/
         pull_timeout) from a lossy link — the TransportFabric's
-        recorder hook."""
+        recorder hook. ``kind`` validates against
+        :data:`repro.obs.names.TRANSPORT_EVENT_KINDS`."""
+        from ..obs.names import TRANSPORT_EVENT_KINDS, validate_kind
+        validate_kind(kind, TRANSPORT_EVENT_KINDS, "transport event")
         self.transport.append({"kind": kind, **fields})
 
     @property

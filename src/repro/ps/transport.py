@@ -160,3 +160,14 @@ class TransportFabric:
             f"w{w}->s{s}": round(ch.delivery_rate, 4)
             for (w, s), ch in sorted(self._links.items())}
         return total
+
+    def register_metrics(self, reg, rt) -> None:
+        """Register the fleet-wide transport instrument (delivery
+        totals + the server/enforcer dedup and fallback counters that
+        belong to the transport story)."""
+        def value():
+            s = self.stats()
+            s["dups_dropped"] = sum(d.dups_dropped for d in rt.domains)
+            s["timeout_fallbacks"] = rt.enforcer.timeout_fallbacks
+            return s
+        reg.gauge("transport", value)

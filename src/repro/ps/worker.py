@@ -70,6 +70,11 @@ class WorkerProc:
         # version, and completed rounds' declares must keep deduping.
         self._cache = {}
         self._acked = set()
+        # telemetry anchors (records of times the schedule already
+        # chose — never inputs to it): round pull-issue time, compute
+        # start time
+        self._issue_time = 0.0
+        self._compute_start = 0.0
 
     # ---- elasticity -------------------------------------------------------
     def kill(self) -> None:
@@ -113,6 +118,7 @@ class WorkerProc:
         self._vals = {}
         self._issued = False
         self._pending = len(self.rt.domains)
+        self._issue_time = self.rt.sched.now
         net = self.rt.net
         for dom in self.rt.domains:
             if self.rt.transport is not None:
@@ -139,6 +145,14 @@ class WorkerProc:
 
     def _on_pull(self, dom, version: int, payload=None) -> None:
         self._pulled[dom.sid] = version
+        obs = self.rt.obs
+        if obs is not None and obs.spans is not None:
+            # pull RTT: issue -> version in hand (stalls, network
+            # latency and retransmission ladders all inside the span)
+            obs.spans.complete(obs.worker_track(self.i), "pull",
+                               self._issue_time, self.rt.sched.now,
+                               round=self.t, domain=dom.sid,
+                               version=version, tau=self.t - version)
         if not self.rt.timing_only:
             # grab the payload NOW (transport responses deliver it;
             # direct serves read the committed store, which is immutable
@@ -239,12 +253,20 @@ class WorkerProc:
             contents = [self._vals[j] for j in range(rt.engine.M)]
         dur = rt.worker_service.sample(self.rng)
         dur *= rt.injector.worker_factor(self.i, rt.sched.now)
+        self._compute_start = rt.sched.now
         rt.sched.after(dur, self._guarded(
             lambda: self._finish_round(t, contents)))
 
     def _finish_round(self, t: int, contents) -> None:
         rt, i = self.rt, self.i
         eng = rt.engine
+        obs = rt.obs
+        if obs is not None and obs.spans is not None:
+            # emitted at completion so a mid-compute crash leaves no
+            # phantom span (the guarded event never fires)
+            obs.spans.complete(obs.worker_track(i), "compute",
+                               self._compute_start, rt.sched.now,
+                               round=t)
         if rt.timing_only:
             sel_row = eng.select(t, i, None)
         else:
@@ -278,3 +300,24 @@ class WorkerProc:
         rt.data_done(t)
         self._begin_round(t + 1)
         rt.on_worker_progress()
+
+    # ---- telemetry --------------------------------------------------------
+    @staticmethod
+    def register_metrics(reg, rt) -> None:
+        """Register the worker/membership instruments into the run's
+        :class:`~repro.obs.MetricsRegistry`."""
+        enforcer, membership, N = rt.enforcer, rt.membership, rt.engine.N
+        reg.gauge("stall_time_per_worker",
+                  lambda: [enforcer.stall_time_by_worker.get(i, 0.0)
+                           for i in range(N)])
+        reg.gauge("stall_count_per_worker",
+                  lambda: [enforcer.stall_count_by_worker.get(i, 0)
+                           for i in range(N)])
+        reg.gauge("participated_rounds",
+                  lambda: [membership.participated_rounds(i)
+                           for i in range(N)])
+        reg.counter("worker_iterations",
+                    lambda: sum(membership.participated_rounds(i)
+                                for i in range(N)))
+        reg.counter("crashes", lambda: membership.crashes)
+        reg.counter("rejoins", lambda: membership.rejoins)

@@ -1,0 +1,206 @@
+"""Stationarity / KKT metrics (repro.core.metrics) under per-worker
+rho — the ``_rho_b`` broadcasting pin — plus the per-block
+decomposition (``block_residuals`` / ``stationarity_blocks``) the
+telemetry stream carries.
+
+Pins:
+
+* ``_rho_b`` accepts a scalar or an (N,) per-worker vector and the two
+  spellings of a uniform rho produce BITWISE-identical metrics;
+* a non-uniform rho_i actually reaches the rho-dependent terms (the
+  Lagrangian gradients), while the rho-free terms (consensus residual,
+  Theorem-1.2 KKT conditions at the limit) are invariant to it;
+* ``block_residuals`` matches a hand-computed tiny case under
+  per-worker rho, including masked (non-edge) entries;
+* ``stationarity_blocks`` sums (in squares) to ``stationarity``'s
+  totals under a per-worker rho_vec, block by block.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import ADMMConfig
+from repro.core import (block_residuals, init_state, kkt_violations,
+                        make_problem, make_step_fn, stationarity,
+                        stationarity_blocks)
+from repro.core.metrics import _rho_b
+from repro.core.prox import make_prox
+
+N, M, DBLK = 3, 4, 5
+DIM = M * DBLK
+
+_r = np.random.RandomState(7)
+CENTERS = jnp.asarray(_r.randn(N, DIM).astype(np.float32))
+EDGE = np.array([[1, 1, 0, 1],
+                 [1, 0, 1, 0],
+                 [1, 1, 1, 1]], bool)
+RHO_SCALE = np.array([0.5, 1.0, 2.0], np.float32)
+
+
+def _loss(z, c):
+    return 0.5 * jnp.sum(jnp.square(z - c))
+
+
+def _problem(rho_scale=None):
+    return make_problem(_loss, CENTERS, dim=DIM, num_blocks=M,
+                        edge=EDGE, l1_coef=1e-3, clip=0.8,
+                        rho_scale=rho_scale)
+
+
+def _cfg(**kw):
+    return ADMMConfig(rho=2.0, gamma=0.1, max_delay=0, block_fraction=1.0,
+                      num_blocks=M, block_selection="cyclic",
+                      l1_coef=1e-3, clip=0.8, seed=0, **kw)
+
+
+def _evolved_state(prob, cfg, steps=5):
+    state = init_state(prob, cfg)
+    step = make_step_fn(prob, cfg)
+    for _ in range(steps):
+        state = step(state)
+    return state
+
+
+# ---------------------------------------------------------------------------
+# _rho_b broadcasting
+# ---------------------------------------------------------------------------
+
+def test_rho_b_shapes():
+    assert _rho_b(2.0).shape == ()
+    assert _rho_b(jnp.full((N,), 2.0)).shape == (N, 1, 1)
+    # an already-broadcastable array passes through unchanged
+    pre = jnp.ones((N, 1, 1))
+    np.testing.assert_array_equal(_rho_b(pre), pre)
+
+
+def test_uniform_vector_rho_matches_scalar_bitwise():
+    """rho=2.0 and rho=[2.0]*N are the same math — every metric key is
+    bitwise identical across the two spellings."""
+    prob = _problem()
+    cfg = _cfg()
+    state = _evolved_state(prob, cfg)
+    vec = jnp.full((N,), cfg.rho, jnp.float32)
+
+    s_scalar = stationarity(prob, state, cfg.rho)
+    s_vec = stationarity(prob, state, vec)
+    for key in s_scalar:
+        np.testing.assert_array_equal(np.asarray(s_scalar[key]),
+                                      np.asarray(s_vec[key]),
+                                      err_msg=f"stationarity[{key}]")
+
+    k_scalar = kkt_violations(prob, state, cfg.rho)
+    k_vec = kkt_violations(prob, state, vec)
+    for key in k_scalar:
+        np.testing.assert_array_equal(np.asarray(k_scalar[key]),
+                                      np.asarray(k_vec[key]),
+                                      err_msg=f"kkt[{key}]")
+
+    b_scalar = stationarity_blocks(prob, state, cfg.rho)
+    b_vec = stationarity_blocks(prob, state, vec)
+    for key in b_scalar:
+        np.testing.assert_array_equal(np.asarray(b_scalar[key]),
+                                      np.asarray(b_vec[key]),
+                                      err_msg=f"blocks[{key}]")
+
+
+def test_per_worker_rho_reaches_gradient_terms():
+    """A non-uniform rho_i must change the Lagrangian-gradient terms
+    (rho multiplies (x_ij - z_j) there) but not the consensus residual
+    (rho-free) — catching a silently-ignored rho_vec."""
+    prob = _problem(rho_scale=RHO_SCALE)
+    cfg = _cfg()
+    state = _evolved_state(prob, cfg)
+    rho_vec = cfg.rho * jnp.asarray(RHO_SCALE)
+
+    s_vec = stationarity(prob, state, rho_vec)
+    s_scalar = stationarity(prob, state, cfg.rho)
+    np.testing.assert_array_equal(np.asarray(s_vec["primal_residual"]),
+                                  np.asarray(s_scalar["primal_residual"]))
+    assert not np.allclose(s_vec["grad_norm"], s_scalar["grad_norm"])
+    assert not np.allclose(s_vec["P"], s_scalar["P"])
+    for key, val in s_vec.items():
+        assert np.isfinite(np.asarray(val)).all(), key
+
+    # Theorem 1.2's limit conditions contain no rho at all
+    k_vec = kkt_violations(prob, state, rho_vec)
+    k_scalar = kkt_violations(prob, state, cfg.rho)
+    for key in k_scalar:
+        np.testing.assert_array_equal(np.asarray(k_scalar[key]),
+                                      np.asarray(k_vec[key]),
+                                      err_msg=f"kkt[{key}]")
+        assert np.isfinite(np.asarray(k_vec[key]))
+
+
+# ---------------------------------------------------------------------------
+# per-block decomposition
+# ---------------------------------------------------------------------------
+
+def test_block_residuals_hand_computed():
+    """Tiny packed case (N=2, M=2, dblk=1) with per-worker rho and an
+    identity prox, against hand-evaluated numpy."""
+    edge = np.array([[True, True],
+                     [True, False]])
+    z = np.array([[1.0], [2.0]], np.float32)
+    x = np.array([[[1.5], [2.5]],
+                  [[0.0], [9.0]]], np.float32)     # (N=2, M=2, 1)
+    y = np.array([[[0.1], [-0.2]],
+                  [[0.3], [7.0]]], np.float32)     # x[1,1], y[1,1] masked
+    rho = np.array([1.0, 3.0], np.float32)
+    grads = np.array([[[0.4], [0.6]],
+                      [[-1.0], [5.0]]], np.float32)
+    reg = make_prox(0.0, None)                     # identity prox
+
+    out = block_residuals(z, y, x, edge, rho, reg=reg, grads=grads)
+
+    # cons_ij = x_ij - z_j on edges: block 0 -> [0.5, -1.0], block 1 -> [0.5]
+    np.testing.assert_allclose(out["primal"],
+                               [np.sqrt(0.5**2 + 1.0**2), 0.5], rtol=1e-6)
+    # gradL_z_j = sum_i -y_ij - rho_i cons_ij
+    #   block 0: (-0.1 - 1*0.5) + (-0.3 - 3*(-1.0)) = 2.1
+    #   block 1: (-(-0.2) - 1*0.5)                  = -0.3
+    # identity prox => prox residual per block = |gradL_z_j|
+    np.testing.assert_allclose(out["prox"], [2.1, 0.3], rtol=1e-6)
+    # gradL_x_ij = g_ij + y_ij + rho_i cons_ij on edges
+    #   block 0: (0.4 + 0.1 + 0.5) = 1.0 ; (-1.0 + 0.3 - 3.0) = -3.7
+    #   block 1: (0.6 - 0.2 + 0.5) = 0.9
+    np.testing.assert_allclose(out["grad"],
+                               [np.sqrt(1.0**2 + 3.7**2), 0.9], rtol=1e-6)
+    np.testing.assert_allclose(
+        out["P"],
+        np.square(out["primal"]) + np.square(out["prox"])
+        + np.square(out["grad"]), rtol=1e-6)
+
+    # optional terms drop out with their inputs
+    bare = block_residuals(z, y, x, edge, rho)
+    assert bare["prox"] is None and bare["grad"] is None
+    np.testing.assert_allclose(bare["P"], np.square(bare["primal"]),
+                               rtol=1e-6)
+
+
+def test_stationarity_blocks_sums_to_totals_under_rho_vec():
+    """The per-block decomposition is exactly the total metric split
+    over blocks: squared sums match ``stationarity`` up to fp
+    reassociation, under a genuinely per-worker rho."""
+    prob = _problem(rho_scale=RHO_SCALE)
+    cfg = _cfg()
+    state = _evolved_state(prob, cfg)
+    rho_vec = cfg.rho * jnp.asarray(RHO_SCALE)
+
+    total = stationarity(prob, state, rho_vec)
+    blocks = stationarity_blocks(prob, state, rho_vec)
+    for arr in blocks.values():
+        assert arr.shape == (M,)
+    np.testing.assert_allclose(
+        np.sqrt(np.sum(np.square(blocks["primal"]))),
+        float(total["primal_residual"]), rtol=1e-5)
+    np.testing.assert_allclose(
+        np.sqrt(np.sum(np.square(blocks["grad"]))),
+        float(total["grad_norm"]), rtol=1e-5)
+    np.testing.assert_allclose(np.sum(blocks["P"]), float(total["P"]),
+                               rtol=1e-5)
+    # prox differs in aggregation only: stationarity's prox term is a
+    # whole-vector norm, the per-block split carries one norm per block
+    np.testing.assert_allclose(
+        np.sqrt(np.sum(np.square(blocks["prox"]))),
+        float(total["prox_residual"]), rtol=1e-5)

@@ -1,0 +1,410 @@
+"""Deterministic telemetry (repro.obs): the inertness contract, the
+stream/trace schemas, and the registry/vocabulary validation.
+
+The headline pin: a chaos run (server crash + WAL recovery + worker
+crash/rejoin) with full telemetry — spans, a JSONL sink, a Chrome
+trace export — commits the BITWISE-identical z, the identical metrics
+dict (same keys, same order, same values), identical fold logs and the
+identical makespan as the telemetry-off run. Telemetry records the
+schedule; it never becomes part of it.
+
+Secondary pins: every streamed record validates against
+``ROUND_RECORD_SCHEMA``; the Chrome export is well-formed trace-event
+JSON whose span names all come from ``SPAN_NAMES``; ``hist`` handles
+the degenerate inputs (empty, all-equal) without phantom observations;
+the metrics registry refuses undeclared names, kind mismatches and
+duplicates; ``DelayTrace.add_event``/``add_transport`` refuse kinds
+missing from the ``repro.obs.names`` registries.
+"""
+import json
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.api import ConsensusSession
+from repro.configs.base import ADMMConfig
+from repro.obs import (METRICS, ROUND_RECORD_SCHEMA, SPAN_NAMES,
+                       TRACE_EVENT_KINDS, TRANSPORT_EVENT_KINDS,
+                       CallbackSink, JsonlSink, MetricsRegistry, SpanTracer,
+                       Telemetry, TimeSeries, as_telemetry, hist, make_sink,
+                       validate_record)
+from repro.ps import (ConstantService, CostProfile, DelayTrace, FaultPlan,
+                      LognormalService, ParetoService, PSRuntime)
+
+N, M, DBLK = 3, 4, 5
+DIM = M * DBLK
+ROUNDS = 8
+
+_r = np.random.RandomState(7)
+CENTERS = jnp.asarray(_r.randn(N, DIM).astype(np.float32))
+EDGE = np.array([[1, 1, 0, 1],
+                 [1, 0, 1, 0],
+                 [1, 1, 1, 1]], bool)
+RHO_SCALE = np.array([0.5, 1.0, 2.0], np.float32)
+
+TIMING = CostProfile(t_worker=ConstantService(1.0),
+                     t_server_block=ConstantService(0.25))
+#: heavy-tailed service times: creates real queue backlogs (queue_wait
+#: spans) and lets a round complete while the crashed server is still
+#: down (the null-stationarity path)
+STRAGGLER = CostProfile(t_worker=ParetoService(1.0, alpha=1.2),
+                        t_server_block=LognormalService(0.3, 0.4))
+#: a run that exercises every span family: server crash -> WAL replay
+#: (down window + wal_replay instant on the server track) and a worker
+#: crash at 1.0 whose rejoin at 2.0 still has rounds left to join
+#: (down window + crash/rejoin instants on the worker track).
+CHAOS = FaultPlan.of(FaultPlan.server_crash(1, at=2.0, down=3.0),
+                     FaultPlan.crash(0, at=1.0, down=1.0))
+
+
+def _cfg(**kw):
+    kw.setdefault("max_delay", 2)
+    return ADMMConfig(rho=2.0, gamma=0.1, block_fraction=0.5,
+                      num_blocks=M, block_selection="random", l1_coef=1e-3,
+                      clip=0.8, seed=0, **kw)
+
+
+def _flat_loss(z, c):
+    return 0.5 * jnp.sum(jnp.square(z - c))
+
+
+def _session(cfg=None, backend="jnp"):
+    return ConsensusSession.flat(
+        _flat_loss, CENTERS, dim=DIM, cfg=cfg or _cfg(), edge=EDGE,
+        rho_scale=RHO_SCALE, backend=backend)
+
+
+def _runtime(timing=TIMING, backend="jnp", **kw):
+    sess = _session(backend=backend)
+    return PSRuntime(sess.spec, data=sess.data, timing=timing, **kw)
+
+
+def _per_round_folds(rt):
+    """{sid: {round: sorted [(worker, block)]}} from the fold logs."""
+    out = {}
+    for dom in rt.domains:
+        rounds = {}
+        for (v, i, j) in dom.fold_log:
+            rounds.setdefault(v, []).append((i, j))
+        out[dom.sid] = {v: sorted(fs) for v, fs in rounds.items()}
+    return out
+
+
+# ---------------------------------------------------------------------------
+# the determinism contract (the headline pin; scripts/ci.sh re-gates it
+# under forced multi-device XLA)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("backend", ["jnp", "pallas"])
+def test_telemetry_is_inert_under_chaos(tmp_path, backend):
+    """Full telemetry on a chaos run changes NOTHING the runtime
+    computes: bitwise z (both backends — the pallas cell is the
+    fusion-stable bitwise pin), equal metrics (keys, order, values),
+    equal fold logs, equal makespan and staleness trace."""
+    rt_off = _runtime(faults=CHAOS, backend=backend)
+    off = rt_off.run(ROUNDS)
+
+    tel = Telemetry(spans=True,
+                    sink=str(tmp_path / "rounds.jsonl"),
+                    trace_path=str(tmp_path / "run.trace.json"))
+    rt_on = _runtime(faults=CHAOS, telemetry=tel, backend=backend)
+    on = rt_on.run(ROUNDS)
+
+    assert on.makespan == off.makespan
+    np.testing.assert_array_equal(np.asarray(on.z_final),
+                                  np.asarray(off.z_final))
+    assert list(on.metrics) == list(off.metrics)    # exact key order
+    assert on.metrics == off.metrics
+    assert _per_round_folds(rt_on) == _per_round_folds(rt_off)
+    np.testing.assert_array_equal(on.trace.delays, off.trace.delays)
+    assert on.trace.events == off.trace.events
+    assert on.telemetry is tel and off.telemetry is None
+
+
+def test_streamed_records_validate(tmp_path):
+    """Every JSONL line passes the schema; losses stream at full
+    precision and match ``PSRunResult.losses``; stationarity goes null
+    exactly while a block server is down (never silently wrong)."""
+    path = tmp_path / "rounds.jsonl"
+    tel = Telemetry(spans=False, sink=str(path))
+    rt = _runtime(timing=STRAGGLER, faults=CHAOS, telemetry=tel)
+    res = rt.run(ROUNDS)
+
+    records = [json.loads(line) for line in path.read_text().splitlines()]
+    assert len(records) == ROUNDS == tel.records_emitted
+    for rec in records:
+        validate_record(rec)
+        assert set(ROUND_RECORD_SCHEMA) <= set(rec)
+    assert [r["round"] for r in records] == list(range(ROUNDS))
+    assert [r["version"] for r in records] == list(range(1, ROUNDS + 1))
+    # full-precision loss passthrough (no display rounding in the
+    # machine stream)
+    assert [r["loss"] for r in records] == res.losses
+    times = [r["sim_time"] for r in records]
+    assert times == sorted(times) and times[-1] <= res.makespan
+    # stationarity goes null exactly for rounds completing inside the
+    # server-down window [2.0, 5.0) — a crashed *worker* never nulls it
+    null_rounds = [r["round"] for r in records if r["stationarity"] is None]
+    assert null_rounds
+    for rec in records:
+        in_outage = 2.0 <= rec["sim_time"] < 5.0
+        assert (rec["stationarity"] is None) == in_outage, rec["round"]
+        if rec["stationarity"] is not None:
+            pb = rec["stationarity"]["per_block"]
+            assert all(len(pb[k]) == M for k in ("primal", "prox",
+                                                 "grad", "P"))
+        assert len(rec["queue_depth"]) == len(rt.domains)
+
+
+def test_chrome_trace_schema(tmp_path):
+    """The export is loadable trace-event JSON: declared span names
+    only, sane phases, non-negative durations, a thread-name record for
+    every track, and the chaos/durability spans present."""
+    trace_path = tmp_path / "run.trace.json"
+    tel = Telemetry(spans=True, trace_path=str(trace_path))
+    rt = _runtime(timing=STRAGGLER, faults=CHAOS, telemetry=tel)
+    res = rt.run(ROUNDS)
+
+    doc = json.loads(trace_path.read_text())
+    events = doc["traceEvents"]
+    assert events and doc["displayTimeUnit"] == "ms"
+    assert doc["otherData"]["makespan"] == res.makespan
+    named_tids = {e["tid"] for e in events if e["name"] == "thread_name"}
+    tracks = {e["args"]["name"] for e in events if e["name"] == "thread_name"}
+    assert {f"worker {i}" for i in range(N)} <= tracks
+    assert {f"server {s}" for s in range(len(rt.domains))} <= tracks
+    for e in events:
+        assert e["ph"] in ("X", "i", "C", "M")
+        assert e["tid"] in named_tids
+        if e["ph"] == "M":
+            continue
+        assert e["name"] in SPAN_NAMES
+        assert e["ts"] >= 0.0
+        if e["ph"] == "X":
+            assert e["dur"] >= 0.0
+    names = {e["name"] for e in events}
+    assert {"pull", "compute", "commit", "queue_wait"} <= names
+    # chaos + durability visible as spans, same spellings as the trace
+    assert {"server_crash", "server_recover", "wal_replay", "crash",
+            "rejoin", "down"} <= names
+    # the two outage windows (server 1, worker 0) appear as closed
+    # "down" spans of the planned length
+    downs = [e for e in events if e["name"] == "down"]
+    assert sorted(e["dur"] for e in downs) == [1.0e6, 3.0e6]
+
+
+def test_metrics_every_cadence():
+    """Records land at the configured cadence, final round always
+    included; ``metrics_every`` without telemetry is an error."""
+    records = []
+    tel = Telemetry(spans=False, sink=records.append, metrics_every=3)
+    _runtime(telemetry=tel).run(ROUNDS)
+    assert [r["round"] for r in records] == [0, 3, 6, ROUNDS - 1]
+
+    with pytest.raises(ValueError, match="metrics_every"):
+        _runtime(metrics_every=2)
+    with pytest.raises(ValueError, match="metrics_every"):
+        Telemetry(metrics_every=0)
+
+
+def test_session_level_telemetry_coercion():
+    """``run_ps(telemetry=...)`` coerces callables/True like
+    ``as_telemetry`` documents, and hands the Telemetry back on the
+    result."""
+    records = []
+    res = _session().run_ps(ROUNDS, timing=TIMING,
+                            telemetry=records.append)
+    assert len(records) == ROUNDS
+    for rec in records:
+        validate_record(rec)
+    assert res.telemetry is not None
+    assert res.telemetry.spans is not None and len(res.telemetry.spans) > 0
+    assert res.telemetry.events_seen == res.metrics["events"]
+
+    assert as_telemetry(None) is None and as_telemetry(False) is None
+    tel = Telemetry(spans=False)
+    assert as_telemetry(tel) is tel
+    assert as_telemetry(True).sink is None
+    assert isinstance(as_telemetry("stdout"), Telemetry)
+
+
+def test_snapshot_barrier_span(tmp_path):
+    """Checkpointed runs put the quiescent barrier on the runtime
+    track: first worker parked -> snapshot written."""
+    tel = Telemetry(spans=True)
+    rt = _runtime(telemetry=tel)
+    res = rt.run(ROUNDS, checkpoint_every=4,
+                 checkpoint_dir=str(tmp_path / "snaps"))
+    snaps = [e for e in tel.spans._events if e["name"] == "snapshot"]
+    assert len(snaps) == len(res.metrics["snapshots"]) > 0
+    for e in snaps:
+        assert e["ph"] == "X" and e["dur"] >= 0.0
+        assert e["args"]["path"] in res.metrics["snapshots"]
+
+
+# ---------------------------------------------------------------------------
+# hist degenerate cases (promoted from ps/runtime.py::_hist)
+# ---------------------------------------------------------------------------
+
+def test_hist_matches_numpy_on_generic_input():
+    vals = [0.0, 1.0, 2.5, 2.5, 7.0]
+    h = hist(vals, bins=4)
+    counts, edges = np.histogram(vals, bins=4)
+    assert h["counts"] == counts.tolist()
+    np.testing.assert_allclose(h["edges"], edges)
+
+
+def test_hist_empty_input_no_phantom_observation():
+    h = hist([], bins=8)
+    assert h["counts"] == [0] * 8
+    assert h["edges"][0] == 0.0 and h["edges"][-1] == 1.0
+    assert sum(h["counts"]) == 0
+
+
+def test_hist_all_equal_values_centered_unit_range():
+    h = hist([3.0, 3.0, 3.0], bins=8)
+    assert sum(h["counts"]) == 3
+    assert h["edges"][0] == pytest.approx(2.5)
+    assert h["edges"][-1] == pytest.approx(3.5)
+    widths = np.diff(h["edges"])
+    assert (widths > 0).all()
+
+
+def test_hist_rejects_bad_bins():
+    with pytest.raises(ValueError, match="bins"):
+        hist([1.0], bins=0)
+
+
+# ---------------------------------------------------------------------------
+# metrics registry: stable-name validation + collection order
+# ---------------------------------------------------------------------------
+
+def test_registry_rejects_undeclared_name():
+    reg = MetricsRegistry()
+    with pytest.raises(ValueError, match="not declared"):
+        reg.counter("totally_new_metric", lambda: 0)
+    reg.counter("totally_new_metric", lambda: 0, check=False)  # scratch ok
+
+
+def test_registry_rejects_kind_mismatch_and_duplicates():
+    reg = MetricsRegistry()
+    with pytest.raises(ValueError, match="declared as a gauge"):
+        reg.counter("makespan", lambda: 0.0)    # makespan is a gauge
+    reg.gauge("makespan", lambda: 7.0)
+    with pytest.raises(ValueError, match="already registered"):
+        reg.gauge("makespan", lambda: 8.0)
+    with pytest.raises(ValueError, match="unknown instrument kind"):
+        reg.register("events", "dial", lambda: 0)
+
+
+def test_registry_collects_in_registration_order():
+    reg = MetricsRegistry()
+    reg.gauge("makespan", lambda: 1.0)
+    reg.counter("events", lambda: 2)
+    reg.counter("commits", lambda: 3)
+    assert list(reg.collect()) == ["makespan", "events", "commits"]
+    assert reg.collect(["commits"]) == {"commits": 3}
+    assert "events" in reg and reg.get("events").unit == METRICS["events"][1]
+    table = reg.describe()
+    assert [row["name"] for row in table] == ["makespan", "events",
+                                              "commits"]
+    assert all(row["help"] for row in table)
+
+
+def test_timeseries_buckets():
+    ts = TimeSeries()
+    for t, v in [(0.1, 1.0), (0.4, 2.0), (1.2, 5.0)]:
+        ts.append(t, v)
+    out = ts.buckets(1.0)
+    assert out["width"] == 1.0
+    assert out["buckets"] == [
+        {"t0": 0.0, "count": 2, "sum": 3.0, "last": 2.0},
+        {"t0": 1.0, "count": 1, "sum": 5.0, "last": 5.0}]
+    assert TimeSeries().buckets(0.5)["buckets"] == []
+    with pytest.raises(ValueError, match="width"):
+        ts.buckets(0.0)
+
+    reg = MetricsRegistry()
+    series = reg.series("scratch_series")
+    series.append(1.0, 2.0)
+    assert reg.series("scratch_series") is series       # fetch, not new
+    assert reg.collect()["scratch_series"] == [(1.0, 2.0)]
+
+
+# ---------------------------------------------------------------------------
+# span-name and trace-kind vocabularies (one registry, no drift)
+# ---------------------------------------------------------------------------
+
+def test_span_tracer_rejects_unknown_and_mistyped_names():
+    tr = SpanTracer()
+    with pytest.raises(ValueError, match="unknown span kind"):
+        tr.complete("worker 0", "made_up_span", 0.0, 1.0)
+    with pytest.raises(ValueError, match="declared as"):
+        tr.complete("worker 0", "commit", 0.0, 1.0)   # commit is instant
+    with pytest.raises(ValueError, match="ends before"):
+        tr.complete("worker 0", "pull", 2.0, 1.0)
+    tr.complete("worker 0", "pull", 1.0, 2.0, round=0)
+    tr.instant("server 0", "commit", 2.0, version=1)
+    tr.counter("server 0", "queue_depth", 2.0, depth=3)
+    assert len(tr) == 3
+    doc = tr.to_chrome({"seed": 0})
+    # thread-name metadata precedes events; tids are stable per track
+    assert [e["ph"] for e in doc["traceEvents"][:2]] == ["M", "M"]
+    assert doc["otherData"] == {"seed": 0}
+
+
+def test_trace_event_kinds_validated():
+    tr = DelayTrace.empty(2, N, M, bound=2)
+    tr.add_event("crash", time=1.0, worker=0)
+    with pytest.raises(ValueError, match="unknown trace event kind"):
+        tr.add_event("meteor_strike", time=1.0)
+    tr.add_transport("drop", time=1.0, worker=0)
+    with pytest.raises(ValueError, match="unknown transport event kind"):
+        tr.add_transport("wormhole", time=1.0)
+    # every runtime spelling stays declared
+    assert {"crash", "rejoin", "server_crash",
+            "server_recover"} <= TRACE_EVENT_KINDS
+    assert {"drop", "dup", "reorder", "retransmit",
+            "pull_timeout"} <= TRANSPORT_EVENT_KINDS
+    # chaos/transport kinds double as span instants (cross-referencable
+    # between a saved DelayTrace and a Perfetto trace)
+    for kind in TRACE_EVENT_KINDS - {"leave", "join", "slowdown",
+                                     "server_spike", "link_loss"}:
+        assert SPAN_NAMES[kind][0] == "instant"
+    for kind in TRANSPORT_EVENT_KINDS:
+        assert SPAN_NAMES[kind][0] == "instant"
+
+
+def test_make_sink_coercion(tmp_path, capsys):
+    assert make_sink(None) is None
+    sink = make_sink(str(tmp_path / "out.jsonl"))
+    assert isinstance(sink, JsonlSink)
+    sink.emit({"round": 0})
+    sink.close()
+    assert json.loads((tmp_path / "out.jsonl").read_text()) == {"round": 0}
+    got = []
+    cb = make_sink(got.append)
+    assert isinstance(cb, CallbackSink)
+    cb.emit({"round": 1})
+    assert got == [{"round": 1}]
+    make_sink("stdout").emit({"round": 2})
+    assert json.loads(capsys.readouterr().out) == {"round": 2}
+    with pytest.raises(TypeError, match="sink"):
+        make_sink(42)
+
+
+def test_validate_record_names_offending_key():
+    good = {"round": 0, "version": 1, "sim_time": 1.0, "loss": 0.5,
+            "stationarity": None, "queue_depth": [0], "commits": 1,
+            "pushes": 2, "stall_count": 0, "stall_time": 0.0,
+            "transport": None}
+    assert validate_record(dict(good)) == good
+    with pytest.raises(ValueError, match="'commits'"):
+        validate_record({**good, "commits": "three"})
+    missing = dict(good)
+    del missing["loss"]
+    with pytest.raises(ValueError, match="'loss'"):
+        validate_record(missing)
+    with pytest.raises(ValueError, match="per_block"):
+        validate_record({**good, "stationarity": {"P": 1.0}})
