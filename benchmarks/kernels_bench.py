@@ -130,7 +130,8 @@ def _quad_loss(z, c):
 def _session(backend, N, M, dblk, mesh=None, data=None):
     dim = M * dblk
     cfg = ADMMConfig(rho=2.0, gamma=0.1, max_delay=1, block_fraction=0.5,
-                     num_blocks=M, l1_coef=1e-3, clip=1.0, backend=backend)
+                     num_blocks=M, l1_coef=1e-3, clip=1.0, backend=backend,
+                     autotune="cached")
     if data is None:
         data = jax.ShapeDtypeStruct((N, dim), jnp.float32)
     return ConsensusSession.flat(_quad_loss, data, dim=dim, cfg=cfg,
@@ -143,35 +144,55 @@ def _abstract_mesh():
     return AbstractMesh((("data", MESH_SHAPE[0]), ("model", MESH_SHAPE[1])))
 
 
-def _tree_spec(backend, N, M, dblk, mesh=None):
+def _tree_spec(backend, N, M, dblk, mesh=None, concrete=False):
     """A ragged pytree spec at the same packed scale as the flat case:
     block j packs two leaves (dblk-128, 128), the last block only one —
-    real padding in the packed (M, dblk) table, exercising the
-    BlockLayout lowering end to end (shapes only; nothing allocated)."""
+    a genuinely ragged BlockLayout exercised end to end. The per-worker
+    data (and loss) are per-leaf, matching how a params-pytree workload
+    actually feeds batches — the loss never concatenates the pytree into
+    one flat vector (that concat's transpose alone used to cost ~28 GB
+    per kddA epoch). ``concrete=False`` builds ShapeDtypeStructs only
+    (costing at full kddA scale); ``concrete=True`` allocates seeded
+    arrays for the wall-clock runs."""
     from repro.core.blocks import TreeBlocks, make_block_layout
     from repro.core.space import TreeSpace, make_spec
 
-    params = {f"w{j:03d}a": jax.ShapeDtypeStruct((dblk - 128,), jnp.float32)
-              for j in range(M)}
-    params.update({f"w{j:03d}b": jax.ShapeDtypeStruct((128,), jnp.float32)
-                   for j in range(M - 1)})
-    names = sorted(params)                    # == jax dict flatten order
+    shapes = {f"w{j:03d}a": (dblk - 128,) for j in range(M)}
+    shapes.update({f"w{j:03d}b": (128,) for j in range(M - 1)})
+    names = sorted(shapes)                    # == jax dict flatten order
+    if concrete:
+        rng = np.random.RandomState(0)
+        params = {n: jnp.asarray(rng.randn(*shapes[n]), jnp.float32)
+                  for n in names}
+        data = {n: jnp.asarray(rng.randn(N, *shapes[n]), jnp.float32)
+                for n in names}
+    else:
+        params = {n: jax.ShapeDtypeStruct(shapes[n], jnp.float32)
+                  for n in names}
+        data = {n: jax.ShapeDtypeStruct((N,) + shapes[n], jnp.float32)
+                for n in names}
     tblocks = TreeBlocks(num_blocks=M,
                          leaf_block_ids=tuple(int(n[1:4]) for n in names),
                          treedef=jax.tree.structure(params))
     space = TreeSpace(blocks=tblocks, num_workers=N,
                       layout=make_block_layout(params, tblocks))
-    dim = sum(int(np.prod(params[n].shape)) for n in names)
     cfg = ADMMConfig(rho=2.0, gamma=0.1, max_delay=1, block_fraction=0.5,
-                     num_blocks=M, l1_coef=1e-3, clip=1.0, backend=backend)
+                     num_blocks=M, l1_coef=1e-3, clip=1.0, backend=backend,
+                     autotune="cached")
 
     def tree_loss(p, c):
-        z = jnp.concatenate([p[n] for n in names])
-        return 0.5 * jnp.sum(jnp.square(z - c))
+        return 0.5 * sum(jnp.sum(jnp.square(p[n] - c[n])) for n in names)
 
     spec = make_spec(space, cfg, tree_loss, backend=backend, mesh=mesh)
-    data = jax.ShapeDtypeStruct((N, dim), jnp.float32)
     return spec, params, data
+
+
+def _tree_session(backend, N, M, dblk, mesh=None):
+    """Concrete TreeSpace session for the wall-clock rows."""
+    spec, params, data = _tree_spec(backend, N, M, dblk, mesh=mesh,
+                                    concrete=True)
+    cfg = ADMMConfig(num_blocks=M, backend=backend, autotune="cached")
+    return ConsensusSession(spec=spec, cfg=cfg, z0=params, data=data)
 
 
 def _tree_epoch_cost(backend, N, M, dblk):
@@ -218,6 +239,7 @@ def _shard_epoch_cost(N, M, dblk):
 
 
 def measure_cases(emit):
+    from repro.kernels.autotune import device_kind, lookup_tile
     out = []
     shards = MESH_SHAPE[0] * MESH_SHAPE[1]
     for name, N, M, dblk in CASES:
@@ -229,6 +251,9 @@ def measure_cases(emit):
         saving = 1.0 - pl_cost.hbm_bytes / jnp_cost.hbm_bytes
         shard_frac = sh_cost.hbm_bytes / pl_cost.hbm_bytes
         tree_shard_frac = tr_sh_cost.hbm_bytes / tr_cost.hbm_bytes
+        tree_flat_ratio = tr_cost.hbm_bytes / pl_cost.hbm_bytes
+        tiles = {op: lookup_tile(op, N, M, dblk)
+                 for op in ("worker_select_update", "server_prox_fused")}
         rec = {
             "name": name, "N": N, "M": M, "dblk": dblk, "dim": M * dblk,
             "jnp": {"hbm_bytes": int(jnp_cost.hbm_bytes),
@@ -250,7 +275,8 @@ def measure_cases(emit):
             # over model — flipped from the old replicated-z fallback)
             "tree_pallas": {"hbm_bytes": int(tr_cost.hbm_bytes),
                             "flops": int(tr_cost.flops),
-                            "v5e_us": tr_cost.hbm_bytes / HBM_BW * 1e6},
+                            "v5e_us": tr_cost.hbm_bytes / HBM_BW * 1e6,
+                            "flat_bytes_ratio": tree_flat_ratio},
             "tree_pallas_sharded": {
                 "hbm_bytes_per_shard": int(tr_sh_cost.hbm_bytes),
                 "flops_per_shard": int(tr_sh_cost.flops),
@@ -260,11 +286,19 @@ def measure_cases(emit):
                 "ideal_frac": 1.0 / shards,
             },
             "bytes_saving_frac": saving,
+            # tuned tiles the pallas dispatch uses at this shape (cached
+            # winners from benchmarks/kernels_tuned.json; null = miss,
+            # heuristic tiles apply)
+            "autotune": {"device_kind": device_kind(),
+                         "tiles": {op: (list(t) if t else None)
+                                   for op, t in tiles.items()}},
         }
         out.append(rec)
         emit(f"epoch_{name}_N{N}_M{M},{rec['pallas']['v5e_us']:.1f},"
              f"jnp_us={rec['jnp']['v5e_us']:.1f};"
              f"bytes_saving={saving:.2%}")
+        emit(f"epoch_{name}_tree_vs_flat,{rec['tree_pallas']['v5e_us']:.1f},"
+             f"tree_flat_bytes_ratio={tree_flat_ratio:.2f}")
         emit(f"epoch_{name}_shard_d{MESH_SHAPE[0]}m{MESH_SHAPE[1]},"
              f"{rec['pallas_sharded']['v5e_us']:.1f},"
              f"shard_bytes_frac={shard_frac:.3f};ideal={1.0/shards:.3f}")
@@ -295,33 +329,45 @@ def _median_epoch_ms(sess, data, epochs=5):
 
 def measure_walltime(emit):
     """jit + block_until_ready, median of 5 — jnp vs pallas(interpret)
-    vs sharded-pallas at the smoke shape. CPU-relative numbers (pallas
-    runs in interpret mode here); recorded so the perf trajectory of the
-    epoch is measured, not only modeled."""
+    vs sharded-pallas, plus the TreeSpace lowering (tree_pallas /
+    tree_pallas_sharded), at the smoke shape. CPU-relative numbers
+    (pallas runs in interpret mode here); recorded so the perf
+    trajectory of the epoch is measured, not only modeled. The pallas
+    variants dispatch with autotune="cached", so the tuned tiles in use
+    are part of the measurement (recorded per case in the cost rows)."""
     name, N, M, dblk = CASES[0]
     dim = M * dblk
     rng = np.random.RandomState(0)
     data = jnp.asarray(rng.randn(N, dim), jnp.float32)
-    variants = [("jnp", "jnp", None), ("pallas", "pallas", None)]
     need = MESH_SHAPE[0] * MESH_SHAPE[1]
     mesh = None
     if jax.device_count() >= need:
         from repro.launch.mesh import make_test_mesh
         mesh = make_test_mesh(need, model=MESH_SHAPE[1])
-        variants.append(("pallas_sharded", "pallas", mesh))
+    variants = [("jnp", "jnp", None, False),
+                ("pallas", "pallas", None, False),
+                ("pallas_sharded", "pallas", mesh, False),
+                ("tree_pallas", "pallas", None, True),
+                ("tree_pallas_sharded", "pallas", mesh, True)]
     entries = []
-    for label, backend, m in variants:
-        ms, n = _median_epoch_ms(_session(backend, N, M, dblk, mesh=m,
-                                          data=data), data)
+    for label, backend, m, tree in variants:
+        if label.endswith("sharded") and m is None:
+            emit(f"wallclock_{name}_{label},0,skipped;"
+                 f"need_{need}_devices_have_{jax.device_count()}")
+            continue
+        if tree:
+            sess = _tree_session(backend, N, M, dblk, mesh=m)
+            ms, n = _median_epoch_ms(sess, sess.data)
+        else:
+            ms, n = _median_epoch_ms(_session(backend, N, M, dblk, mesh=m,
+                                              data=data), data)
         entries.append({"variant": label, "median_ms": ms, "n": n})
         emit(f"wallclock_{name}_{label},{ms * 1e3:.0f},median_of_{n};ms={ms:.3f}")
-    if mesh is None:
-        emit(f"wallclock_{name}_pallas_sharded,0,skipped;"
-             f"need_{need}_devices_have_{jax.device_count()}")
     return {"case": name, "shape": {"N": N, "M": M, "dblk": dblk},
             "device_count": jax.device_count(),
             "method": "jit + block_until_ready, median of 5 epochs "
-                      "(pallas in interpret mode on CPU)",
+                      "(pallas in interpret mode on CPU; pallas variants "
+                      "use autotune=cached tiles)",
             "entries": entries}
 
 
@@ -401,6 +447,16 @@ def main(emit=print, smoke: bool = False) -> None:
                 f"{max_tree_frac} (ideal "
                 f"1/{MESH_SHAPE[0] * MESH_SHAPE[1]} = "
                 f"{1.0 / (MESH_SHAPE[0] * MESH_SHAPE[1]):.3f})")
+        # tree/flat gate: the lane-aligned layout + dynamic-slice unpack
+        # must keep the ragged pytree epoch's HBM traffic within a small
+        # multiple of the flat epoch (it was ~8.3x before the layout
+        # refactor — per-leaf row slices charged the full table per leaf)
+        max_ratio = baseline["max_tree_flat_bytes_ratio"]
+        ratio = kdda["tree_pallas"]["flat_bytes_ratio"]
+        if ratio > max_ratio:
+            failures.append(
+                f"kdda_like: tree/flat epoch HBM ratio {ratio:.2f} > "
+                f"{max_ratio}")
     OUT_JSON.write_text(json.dumps(report, indent=2) + "\n")
     emit(f"bench_json,0,written={OUT_JSON.name}")
     if failures:

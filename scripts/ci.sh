@@ -22,6 +22,14 @@ echo "[ci] kernels bench (smoke)"
 env PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" \
     python benchmarks/kernels_bench.py --smoke
 
+# kernel autotuner smoke: the deterministic tile sweep for the two
+# fused epoch kernels must run end to end on this device kind and
+# produce a winner for every (op, case) cell — regressions here would
+# silently fall back to the default tile heuristic at session build
+echo "[ci] kernel autotuner (smoke sweep)"
+env PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" \
+    python -m repro.kernels.autotune --smoke
+
 # PS-runtime coordination gate: a deterministic locked-vs-lockfree
 # comparison at 8 workers (benchmarks/speedup.py --smoke, service times
 # measured from the real jitted hot path) must show the paper's block-

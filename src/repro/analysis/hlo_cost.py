@@ -203,15 +203,15 @@ def analyze_hlo(hlo: str) -> Cost:
             if op in _FREE_OPS:
                 continue
             if op == "fusion":
-                called = re.search(r"calls=%([^\s,]+)", ins.attrs)
+                called = re.search(r"calls=%?([^\s,]+)", ins.attrs)
                 if called:
                     sub = comp_cost(called.group(1))
                     total.flops += sub.flops     # flops only; bytes at boundary
                 total.hbm_bytes += _boundary_bytes(ins, shapes, comps)
                 continue
             if op == "while":
-                body = re.search(r"body=%([^\s,]+)", ins.attrs)
-                cond = re.search(r"condition=%([^\s,]+)", ins.attrs)
+                body = re.search(r"body=%?([^\s,]+)", ins.attrs)
+                cond = re.search(r"condition=%?([^\s,]+)", ins.attrs)
                 trip = 1
                 tm = _TRIP_RE.search(ins.attrs)
                 if tm:
@@ -222,14 +222,14 @@ def analyze_hlo(hlo: str) -> Cost:
                     total.add(comp_cost(cond.group(1)), trip + 1)
                 continue
             if op in ("call", "async-start"):
-                called = re.search(r"(?:to_apply|calls)=%([^\s,]+)", ins.attrs)
+                called = re.search(r"(?:to_apply|calls)=%?([^\s,]+)", ins.attrs)
                 if called:
                     total.add(comp_cost(called.group(1)))
                 continue
             if op == "conditional":
                 for c in re.findall(r"(?:branch_computations=\{([^}]*)\}|"
-                                    r"true_computation=%([^\s,]+)|"
-                                    r"false_computation=%([^\s,]+))", ins.attrs):
+                                    r"true_computation=%?([^\s,]+)|"
+                                    r"false_computation=%?([^\s,]+))", ins.attrs):
                     for g in c:
                         for nm in re.findall(r"%?([\w\.\-]+)", g or ""):
                             if nm in comps:
@@ -257,7 +257,7 @@ def analyze_hlo(hlo: str) -> Cost:
             else:
                 total.flops += _elems_of(ins.type_text)
             if op in ("reduce", "map", "sort", "scatter", "select-and-scatter"):
-                called = re.search(r"to_apply=%([^\s,]+)", ins.attrs)
+                called = re.search(r"to_apply=%?([^\s,]+)", ins.attrs)
                 # tiny scalar computations — ignore
         memo[name] = total
         return total
@@ -271,13 +271,18 @@ def _boundary_bytes(ins: Instr, shapes: Dict[str, str],
                     comps: Optional[Dict[str, List["Instr"]]] = None) -> int:
     """HBM traffic of one top-level instruction.
 
-    In-place patterns are special-cased: dynamic-(update-)slice on a big
-    buffer touches only the slice (XLA aliases the buffer), so counting
-    the full operand would overcharge scan carries by ~num_layers x.
+    Windowed patterns are special-cased: (dynamic-)slice and
+    dynamic-update-slice on a big buffer touch only the window (XLA
+    aliases the buffer / reads only the sliced region), so counting the
+    full operand would overcharge scan carries by ~num_layers x and
+    per-leaf unpacks of a packed table by ~num_leaves x.
     """
     op = ins.op
     result = _bytes_of(ins.type_text)
-    if op == "dynamic-slice":
+    if op in ("slice", "dynamic-slice"):
+        # Either slice kind reads only the window it produces, never the
+        # full operand — charging operand+result would bill a per-leaf
+        # unpack of a packed block table at num_leaves x the table.
         return 2 * result
     if op == "dynamic-update-slice":
         upd = _bytes_of(shapes.get(ins.operands[1], "")) if len(ins.operands) > 1 else 0
@@ -289,7 +294,7 @@ def _boundary_bytes(ins: Instr, shapes: Dict[str, str],
         upd = _bytes_of(shapes.get(ins.operands[2], "")) if len(ins.operands) > 2 else result
         return 2 * upd
     if op == "fusion" and comps is not None:
-        called = re.search(r"calls=%([^\s,]+)", ins.attrs)
+        called = re.search(r"calls=%?([^\s,]+)", ins.attrs)
         root = None
         if called and called.group(1) in comps:
             body = comps[called.group(1)]

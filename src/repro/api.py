@@ -77,7 +77,8 @@ class ConsensusSession:
              l2_coef: float = 0.0,
              selector=None, delay_model=None,
              backend: Optional[str] = None,
-             mesh: Any = None) -> "ConsensusSession":
+             mesh: Any = None,
+             autotune: Optional[str] = None) -> "ConsensusSession":
         """Flat-vector consensus over ``dim`` coordinates split into
         ``cfg.num_blocks`` blocks. Regularizer terms default to the
         config's (``cfg.l1_coef`` / ``cfg.clip``); kwargs override.
@@ -95,7 +96,7 @@ class ConsensusSession:
             clip=cfg.clip if clip is None else clip,
             l2_coef=l2_coef, rho_scale=rho_scale)
         spec = problem.spec(cfg, selector=selector, delay_model=delay_model,
-                            backend=backend, mesh=mesh)
+                            backend=backend, mesh=mesh, autotune=autotune)
         return ConsensusSession(spec=spec, cfg=cfg, data=problem.data,
                                 problem=problem)
 
@@ -107,7 +108,8 @@ class ConsensusSession:
                rho_scale: Optional[Any] = None,
                selector=None, delay_model=None,
                backend: Optional[str] = None,
-               mesh: Any = None) -> "ConsensusSession":
+               mesh: Any = None,
+               autotune: Optional[str] = None) -> "ConsensusSession":
         """Params-pytree consensus: leaves are balanced into
         ``cfg.num_blocks`` logical blocks (or pass explicit ``blocks``);
         per-worker batches stream in through ``step``/``run``.
@@ -123,7 +125,8 @@ class ConsensusSession:
                           layout=make_block_layout(params, blocks))
         spec = make_spec(space, cfg, loss_fn, edge=edge, rho_scale=rho_scale,
                          selector=selector, delay_model=delay_model,
-                         track_x=False, backend=backend, mesh=mesh)
+                         track_x=False, backend=backend, mesh=mesh,
+                         autotune=autotune)
         return ConsensusSession(spec=spec, cfg=cfg, z0=params)
 
     # ------------------------------------------------------------------

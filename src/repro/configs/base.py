@@ -182,6 +182,12 @@ class ADMMConfig:
     # ("test" | "pod" | "multipod"). Workers shard over the data axes,
     # FlatSpace block servers over the model axis (core/sharded.py).
     mesh: Any = None
+    # per-device kernel tile autotuning (kernels/autotune.py):
+    # "off" = static heuristics; "cached" = use winners persisted in
+    # benchmarks/kernels_tuned.json (heuristic fallback on a miss);
+    # "sweep" = measure this session's shapes up front, persist the
+    # winners, then run cached
+    autotune: str = "off"
     seed: int = 0
 
 

@@ -1,7 +1,7 @@
 from .admm import server_update, theorem1_feasible, worker_update
-from .blocks import (BlockLayout, FlatBlocks, TreeBlocks,
+from .blocks import (LANE, BlockLayout, FlatBlocks, TreeBlocks,
                      edge_set_from_support, make_block_layout,
-                     make_flat_blocks, make_tree_blocks)
+                     make_flat_blocks, make_tree_blocks, round_up_to_lane)
 from .consensus import (AsyBADMMState, ConsensusProblem, asybadmm_step,
                         init_state, make_problem, make_step_fn, run)
 from .metrics import (block_residuals, kkt_violations, stationarity,

@@ -33,6 +33,16 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+#: TPU vector-lane width. Packed block rows are rounded up to a multiple of
+#: this at layout-build time so every kernel takes the no-pad (8, 128) vreg
+#: fast path — alignment is a property of the layout, not a per-call pad.
+LANE = 128
+
+
+def round_up_to_lane(n: int, lane: int = LANE) -> int:
+    """Smallest multiple of ``lane`` >= max(n, 1)."""
+    return -(-max(int(n), 1) // lane) * lane
+
 
 # --------------------------------------------------------------------------
 # flat mode
@@ -40,38 +50,78 @@ import numpy as np
 
 @dataclasses.dataclass(frozen=True)
 class FlatBlocks:
+    """Flat-vector block partition onto the lane-aligned ``(M, dblk)`` table.
+
+    The coordinate partition is governed by ``used_dim`` (block j owns
+    coordinates ``[j*used_dim, (j+1)*used_dim)`` of the original vector);
+    ``block_dim`` is ``used_dim`` rounded up to the 128-lane boundary, so
+    rows carry ``block_dim - used_dim`` trailing pad lanes (plus the usual
+    tail-of-vector pad inside the last block's used region). Pad lanes are
+    zero on pack, never read on unpack, and structurally inert through
+    every epoch op (see :class:`BlockLayout`).
+    """
     dim: int          # original vector dim
     num_blocks: int   # M
-    block_dim: int    # padded per-block dim
+    block_dim: int    # lane-aligned per-block row width (dblk)
+    used_dim: int = 0 # coordinates per block before lane padding (0 -> block_dim)
+
+    def __post_init__(self):
+        if self.used_dim == 0:
+            object.__setattr__(self, "used_dim", self.block_dim)
+        if not 0 < self.used_dim <= self.block_dim:
+            raise ValueError(
+                f"used_dim={self.used_dim} must be in (0, block_dim="
+                f"{self.block_dim}]")
 
     @property
     def padded_dim(self) -> int:
+        """Table capacity M * dblk (includes lane padding)."""
         return self.num_blocks * self.block_dim
+
+    @property
+    def logical_dim(self) -> int:
+        """Coordinate capacity M * used_dim (before lane padding)."""
+        return self.num_blocks * self.used_dim
+
+    def padding_mask(self) -> np.ndarray:
+        """(M, dblk) bool — True on real coordinates, False on padding."""
+        mask = np.zeros((self.num_blocks, self.block_dim), bool)
+        for j in range(self.num_blocks):
+            used = min(self.used_dim, max(0, self.dim - j * self.used_dim))
+            mask[j, :used] = True
+        return mask
 
     def to_blocks(self, v):
         """(..., d) -> (..., M, block_dim)."""
-        pad = self.padded_dim - self.dim
-        vp = jnp.pad(v, [(0, 0)] * (v.ndim - 1) + [(0, pad)])
-        return vp.reshape(v.shape[:-1] + (self.num_blocks, self.block_dim))
+        lead = [(0, 0)] * (v.ndim - 1)
+        vp = jnp.pad(v, lead + [(0, self.logical_dim - self.dim)])
+        rows = vp.reshape(v.shape[:-1] + (self.num_blocks, self.used_dim))
+        if self.used_dim == self.block_dim:
+            return rows
+        return jnp.pad(rows, lead + [(0, 0),
+                                     (0, self.block_dim - self.used_dim)])
 
     def from_blocks(self, b):
-        """(..., M, block_dim) -> (..., d)."""
-        flat = b.reshape(b.shape[:-2] + (self.padded_dim,))
+        """(..., M, block_dim) -> (..., d). Pad lanes are never read."""
+        rows = b[..., : self.used_dim]
+        flat = rows.reshape(b.shape[:-2] + (self.logical_dim,))
         return flat[..., : self.dim]
 
 
 def make_flat_blocks(dim: int, num_blocks: int) -> FlatBlocks:
-    block_dim = -(-dim // num_blocks)
-    return FlatBlocks(dim=dim, num_blocks=num_blocks, block_dim=block_dim)
+    used_dim = -(-dim // num_blocks)
+    return FlatBlocks(dim=dim, num_blocks=num_blocks,
+                      block_dim=round_up_to_lane(used_dim), used_dim=used_dim)
 
 
 def edge_set_from_support(support: np.ndarray, blocks: FlatBlocks) -> np.ndarray:
     """support: (N, d) bool — which coordinates each worker's data touches.
-    Returns E: (N, M) bool (worker i, block j) — the paper's edge set."""
+    Returns E: (N, M) bool (worker i, block j) — the paper's edge set.
+    Lane padding carries no support, so it is computed over ``used_dim``."""
     N, d = support.shape
-    pad = blocks.padded_dim - d
+    pad = blocks.logical_dim - d
     sp = np.pad(support, [(0, 0), (0, pad)])
-    return sp.reshape(N, blocks.num_blocks, blocks.block_dim).any(axis=-1)
+    return sp.reshape(N, blocks.num_blocks, blocks.used_dim).any(axis=-1)
 
 
 # --------------------------------------------------------------------------
@@ -127,7 +177,9 @@ class BlockLayout:
     Built ONCE per (tree structure, block assignment) by
     :func:`make_block_layout`. Block j's leaves are raveled and
     concatenated (in leaf order) into row j; rows are zero-padded to
-    ``block_dim`` = the largest packed block. ``to_blocks``/
+    ``block_dim`` = the largest packed block rounded up to the 128-lane
+    boundary (:data:`LANE`), so kernels always see aligned rows.
+    ``to_blocks``/
     ``from_blocks`` mirror :class:`FlatBlocks` — leading batch axes
     (worker N, ring depth D+1) pass through — and round-trip bitwise:
     arithmetic happens in ``dtype`` (float32), every leaf dtype that
@@ -200,18 +252,29 @@ class BlockLayout:
                         else jnp.concatenate(parts, axis=-1))
         return jnp.stack(rows, axis=-2)
 
+    def leaf_starts(self) -> Tuple[int, ...]:
+        """Per leaf: start offset within the row-major flattened table."""
+        return tuple(self.block_ids[k] * self.block_dim + self.leaf_offsets[k]
+                     for k in range(len(self.leaf_shapes)))
+
     def from_blocks(self, arr):
         """Unpack a block table ``batch + (M, dblk)`` back to the pytree
-        (leaves cast back to their stored dtypes; padding dropped)."""
+        (leaves cast back to their stored dtypes; padding dropped).
+
+        Flattens the table once and takes one contiguous slice per leaf
+        at a static offset — each leaf reads only its own window, so the
+        unpack's HBM traffic is proportional to the model, not to
+        num_leaves x the whole table.
+        """
         batch = tuple(arr.shape[:-2])
+        flat = arr.reshape(batch + (self.num_blocks * self.block_dim,))
         leaves = []
         for k, (shape, dt) in enumerate(zip(self.leaf_shapes,
                                             self.leaf_dtypes)):
             size = int(np.prod(shape, dtype=np.int64))
-            row = arr[..., self.block_ids[k], :]
-            flat = jax.lax.slice_in_dim(row, self.leaf_offsets[k],
-                                        self.leaf_offsets[k] + size, axis=-1)
-            leaves.append(flat.reshape(batch + shape).astype(dt))
+            start = self.leaf_starts()[k]
+            piece = jax.lax.slice_in_dim(flat, start, start + size, axis=-1)
+            leaves.append(piece.reshape(batch + shape).astype(dt))
         return jax.tree.unflatten(self.tree.treedef, leaves)
 
 
@@ -247,5 +310,5 @@ def make_block_layout(tree, blocks: TreeBlocks = None, *,
         leaf_offsets=tuple(offsets),
         block_leaves=block_leaves,
         block_sizes=tuple(block_sizes),
-        block_dim=max(1, max(block_sizes)),
+        block_dim=round_up_to_lane(max(1, max(block_sizes))),
         dtype=np.dtype(dtype).name)

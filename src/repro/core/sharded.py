@@ -119,10 +119,28 @@ def consensus_state_specs(spec: ConsensusSpec, state) -> ConsensusState:
         t=P(), rng=P())
 
 
+def grad_split_size(spec: ConsensusSpec):
+    """Workers-per-device of the model-split gradient pass, or None when
+    grads replicate over model (no model split, or the local worker
+    count does not divide by the model axis)."""
+    space = spec.space
+    if not _splits_model(space):
+        return None
+    Nl = space.num_workers // num_workers(space.mesh)
+    msize = model_axis_size(space.mesh)
+    return Nl // msize if Nl and Nl % msize == 0 else None
+
+
 def consensus_data_specs(spec: ConsensusSpec, data):
-    """Per-worker data: leading worker axis over the data mesh axes."""
+    """Per-worker data: leading worker axis over the data mesh axes —
+    and additionally over ``model`` when the gradient pass splits the
+    local workers across it (every device then holds exactly the rows
+    its grad shard differentiates)."""
     daxes = data_axes(spec.space.mesh)
-    return jax.tree.map(lambda a: P(*((daxes,) + (None,) * (a.ndim - 1))),
+    ax0 = tuple(daxes) if isinstance(daxes, (tuple, list)) else (daxes,)
+    if grad_split_size(spec) is not None:
+        ax0 = ax0 + ("model",)
+    return jax.tree.map(lambda a: P(*((ax0,) + (None,) * (a.ndim - 1))),
                         data)
 
 
@@ -156,6 +174,10 @@ class _MeshCollectives:
     def all_gather_model(self, x, axis):
         return lax.all_gather(x, "model", axis=axis, tiled=True)
 
+    def all_to_all_model(self, x, split_axis, concat_axis):
+        return lax.all_to_all(x, "model", split_axis, concat_axis,
+                              tiled=True)
+
     def all_gather_data(self, x):
         return lax.all_gather(x, self.daxes, axis=0, tiled=True)
 
@@ -166,9 +188,11 @@ class _MeshCollectives:
 class _SimCollectives:
     """Single-device stand-in with the same SHAPE semantics, so the
     per-shard program can be lowered (abstractly) without any devices
-    and costed by analysis/hlo_cost — each fake collective is charged
-    roughly its DMA boundary (gathers write the full buffer, psum
-    reads+writes the local shard)."""
+    and costed by analysis/hlo_cost. Each stand-in is chosen so its
+    generic operand+result charge equals what the analyzer charges the
+    REAL collective op's boundary: all-gather -> one pad (local shard in,
+    full buffer out), all-to-all -> one reshape (same bytes in and out),
+    psum -> one multiply (shard in, shard out)."""
 
     def __init__(self, nsh: int, msize: int):
         self.nsh, self.msize = nsh, msize
@@ -179,11 +203,23 @@ class _SimCollectives:
     def model_index(self):
         return jnp.zeros((), jnp.int32)
 
+    @staticmethod
+    def _gather(x, axis, size):
+        cfg = [(0, 0, 0)] * x.ndim
+        cfg[axis] = (0, (size - 1) * x.shape[axis], 0)
+        return lax.pad(x, jnp.zeros((), x.dtype), cfg)
+
     def all_gather_model(self, x, axis):
-        return jnp.concatenate([x] * self.msize, axis=axis)
+        return self._gather(x, axis, self.msize)
+
+    def all_to_all_model(self, x, split_axis, concat_axis):
+        shape = list(x.shape)
+        shape[split_axis] //= self.msize
+        shape[concat_axis] *= self.msize
+        return x.reshape(shape)
 
     def all_gather_data(self, x):
-        return jnp.concatenate([x] * self.nsh, axis=0)
+        return self._gather(x, 0, self.nsh)
 
     def psum_data(self, x):
         return jax.tree.map(lambda a: a * jnp.float32(self.nsh), x)
@@ -202,12 +238,20 @@ def _epoch_body(spec: ConsensusSpec, space_l, coll, Nl: int, Ml: int,
     arrive replicated at full (N, M) / (N,) shape."""
     N, M = edge.shape
     split_model = Ml < M
+    msize = M // Ml if split_model else 1
+    split_grads = split_model and Nl % msize == 0
+    Ng = Nl // msize if split_grads else Nl       # local data rows
     rng, r_delay, r_sel, r_batch = epoch_keys(state.rng, spec.minibatch)
     wi = coll.worker_shard_index()
     mi = coll.model_index() if split_model else None
 
     def rows(a):                                  # full (N, ...) -> local N
         return lax.dynamic_slice_in_dim(a, wi * Nl, Nl, 0)
+
+    def take(a):                                  # local Nl -> grad shard
+        if not split_grads:
+            return a
+        return lax.dynamic_slice_in_dim(a, mi * Ng, Ng, 0)
 
     def cols(a, axis=1):                          # full M -> local blocks
         if not split_model:
@@ -219,20 +263,49 @@ def _epoch_body(spec: ConsensusSpec, space_l, coll, Nl: int, Ml: int,
     z_tilde = space_l.gather(state.z_hist, cols(rows(delays)))
 
     # --- minibatch draw, like delay/selection: FULL (N, S) replicated,
-    #     sliced to the local worker rows (== the single-device draw) ---
+    #     sliced to the local worker rows (== the single-device draw).
+    #     Data arrives sharded to the rows this device differentiates:
+    #     (Nl, ...) normally, (Ng, ...) under the split gradient pass
+    #     (consensus_data_specs adds the model axis). ---
     if spec.minibatch is not None and spec.minibatch < 1.0:
         shape = validate_minibatch_data(data)
         if shape is not None:              # leafless data: no-op, like
             S = shape[1]                   # subsample_worker_data
-            idx_l = rows(minibatch_rows(r_batch, N, S, spec.minibatch))
+            idx_l = take(rows(minibatch_rows(r_batch, N, S, spec.minibatch)))
             data = jax.tree.map(
-                lambda a: a[jnp.arange(Nl)[:, None], idx_l], data)
+                lambda a: a[jnp.arange(Ng)[:, None], idx_l], data)
 
     # --- grads need every block of z~ for the local workers (the loss
-    #     reads the whole variable): gather the block shards back ---
-    z_tilde_full = (coll.all_gather_model(z_tilde, axis=1)
-                    if split_model else z_tilde)
-    losses, g = space_l.worker_grads(spec.loss_fn, z_tilde_full, data)
+    #     reads the whole variable). The model axis is redundant during
+    #     this pass — every model shard would differentiate the same Nl
+    #     workers against the same gathered z~ — so when the local
+    #     workers divide evenly, split them across it (grads are
+    #     per-worker: pure extra data parallelism), then route the
+    #     results with one all_to_all (worker axis scattered back, block
+    #     axis collected). Per-worker grads and losses are bitwise
+    #     identical to the unsplit path, so the trajectory, the
+    #     selection draw, and the reported loss are unchanged while the
+    #     per-shard gradient traffic shrinks by 1/model instead of
+    #     replicating. ---
+    if split_grads:
+        # NOT take-then-gather: each model shard holds DIFFERENT blocks,
+        # so gathering take(z_tilde) would stitch chunk m's blocks onto
+        # chunk m's workers. The all_to_all routes every shard's block
+        # slice of the destination's worker rows — the exact inverse of
+        # the gradient exchange below.
+        zt_g = coll.all_to_all_model(z_tilde, 0, 1)   # (Ng, M, dblk)
+        space_g = dataclasses.replace(space_l, num_workers=Ng)
+        losses_g, g_g = space_g.worker_grads(spec.loss_fn, zt_g, data)
+        losses = coll.all_gather_model(losses_g, axis=0)
+        g_cols = coll.all_to_all_model(g_g, 1, 0)     # (Nl, Ml, dblk)
+        gnorm_fn = lambda: coll.all_gather_data(
+            coll.all_gather_model(space_g.grad_sqnorm(g_g), axis=0))
+    else:
+        z_tilde_full = (coll.all_gather_model(z_tilde, axis=1)
+                        if split_model else z_tilde)
+        losses, g = space_l.worker_grads(spec.loss_fn, z_tilde_full, data)
+        g_cols = cols(g)
+        gnorm_fn = lambda: coll.all_gather_data(space_l.grad_sqnorm(g))
 
     # --- selection at FULL (N, M), replicated — identical to the
     #     single-device draw (Gauss-Southwell additionally gathers the
@@ -240,7 +313,7 @@ def _epoch_body(spec: ConsensusSpec, space_l, coll, Nl: int, Ml: int,
     ctx = SelectorContext(
         rng=r_sel, edge=edge, t=state.t,
         block_fraction=spec.block_fraction,
-        grad_sqnorm=lambda: coll.all_gather_data(space_l.grad_sqnorm(g)))
+        grad_sqnorm=gnorm_fn)
     sel = spec.selector(ctx)
 
     # --- partial participation (chaos replay): same full-(N, 1) mask
@@ -252,7 +325,7 @@ def _epoch_body(spec: ConsensusSpec, space_l, coll, Nl: int, Ml: int,
 
     # --- worker update (11)(12)(9) + select writes on the local tile ---
     y, w_cache, x = space_l.worker_select_update(
-        cols(g), state.y, z_tilde, state.w_cache, state.x,
+        g_cols, state.y, z_tilde, state.w_cache, state.x,
         cols(rows(sel)), rows(rho_vec), spec.track_x)
 
     # --- the paper's w push: partial edge-masked reduce over the LOCAL

@@ -474,6 +474,16 @@ class _PackedOps:
     def _stub(self) -> bool:
         return self.backend == "pallas_stub"
 
+    def _tile(self, op: str, N: int, M: int, d: int):
+        """Static (blk_m, blk_d) for this kernel dispatch from the
+        autotuner table ("cached"/"sweep" modes); None -> the kernels'
+        heuristics. Shapes are static at trace time, so this is a pure
+        host-side lookup — it never enters the jaxpr."""
+        if getattr(self, "autotune", "off") == "off":
+            return None
+        from ..kernels.autotune import lookup_tile
+        return lookup_tile(op, N, M, d)
+
     # ---- representation -------------------------------------------------
     def to_user(self, z):
         return self.packer.from_blocks(z)
@@ -513,9 +523,11 @@ class _PackedOps:
     def worker_select_update(self, g, y, z_tilde, w_cache, x, sel, rho_vec,
                              track_x):
         if self._use_kernels():
+            N, M, d = g.shape
             out = kernel_ops.admm_worker_select_update(
                 g, y, z_tilde, w_cache, sel, rho_vec,
-                x if track_x else None, boundary_stub=self._stub())
+                x if track_x else None, boundary_stub=self._stub(),
+                tile=self._tile("worker_select_update", N, M, d))
             return out if track_x else (out[0], out[1], x)
         x_new, y_new, w_new = self.worker_update(g, y, z_tilde, rho_vec)
         return (self.select(sel, y_new, y),
@@ -532,10 +544,12 @@ class _PackedOps:
     def server_consensus_update(self, z_cur, w_cache, edge, rho_sum, gamma,
                                 reg):
         if self._use_kernels() and getattr(reg, "fusable", False):
+            N, M, d = w_cache.shape
             return kernel_ops.server_prox_update(
                 z_cur, w_cache, edge, rho_sum, gamma, reg.l1_coef,
                 0.0 if reg.clip is None else reg.clip,
-                boundary_stub=self._stub())
+                boundary_stub=self._stub(),
+                tile=self._tile("server_prox_fused", N, M, d))
         w_sum = self.reduce_workers(w_cache, edge)
         return self.server_update(z_cur, w_sum, rho_sum, gamma, reg.prox)
 
@@ -574,6 +588,7 @@ class FlatSpace(_PackedOps):
     num_workers: int
     backend: str = "jnp"
     mesh: Any = None
+    autotune: str = "off"
 
     def init_repr(self, z0):
         if z0 is None:
@@ -609,6 +624,7 @@ class TreeSpace(_PackedOps):
     num_workers: int
     backend: str = "jnp"
     mesh: Any = None
+    autotune: str = "off"
     layout: Any = None                    # BlockLayout (required to run)
 
     @property
@@ -686,7 +702,8 @@ def epoch_keys(rng, minibatch):
 
 def make_spec(space, cfg, loss_fn, *, edge=None, rho_scale=None, reg=None,
               selector=None, delay_model=None, track_x=False,
-              backend=None, mesh=None, minibatch=None) -> ConsensusSpec:
+              backend=None, mesh=None, minibatch=None,
+              autotune=None) -> ConsensusSpec:
     """Build a ConsensusSpec from an ADMMConfig plus problem structure.
 
     ``backend`` (jnp | pallas | auto) overrides ``cfg.backend`` and is
@@ -697,12 +714,21 @@ def make_spec(space, cfg, loss_fn, *, edge=None, rho_scale=None, reg=None,
     ``mesh`` (a jax Mesh, or a preset name for
     ``repro.launch.mesh.resolve_mesh``) overrides ``cfg.mesh`` and is
     resolved onto the space — when set, ``asybadmm_epoch`` runs the
-    SPMD-sharded implementation (core/sharded.py) over it."""
+    SPMD-sharded implementation (core/sharded.py) over it.
+
+    ``autotune`` (off | cached | sweep) overrides ``cfg.autotune`` and
+    selects the kernel-tile source (kernels/autotune.py). "sweep" runs
+    the deterministic tile sweep for this spec's shapes here — eagerly,
+    never inside a trace — persists the winners, then dispatches like
+    "cached"."""
+    from ..kernels.autotune import resolve_autotune
     resolved = resolve_backend(
         backend if backend is not None else getattr(cfg, "backend", "auto"))
     from ..launch.mesh import resolve_mesh           # no cycle: mesh.py is leaf
     resolved_mesh = resolve_mesh(
         mesh if mesh is not None else getattr(cfg, "mesh", None))
+    resolved_tune = resolve_autotune(
+        autotune if autotune is not None else getattr(cfg, "autotune", "off"))
     if dataclasses.is_dataclass(space):
         updates = {}
         if getattr(space, "backend", None) != resolved:
@@ -710,11 +736,22 @@ def make_spec(space, cfg, loss_fn, *, edge=None, rho_scale=None, reg=None,
         if getattr(space, "mesh", None) is not resolved_mesh \
                 and resolved_mesh is not None:
             updates["mesh"] = resolved_mesh
+        if getattr(space, "autotune", None) != resolved_tune \
+                and hasattr(space, "autotune"):
+            updates["autotune"] = resolved_tune
         if updates:
             space = dataclasses.replace(space, **updates)
     if getattr(space, "mesh", None) is not None:
         from .sharded import validate_space_mesh
         validate_space_mesh(space)
+    if resolved_tune == "sweep" and getattr(space, "autotune", None) == "sweep":
+        if getattr(space, "backend", "jnp") == "pallas":
+            from ..kernels.autotune import sweep_for_space
+            sweep_for_space(space.num_workers, space.num_blocks,
+                            space.packer.block_dim,
+                            mesh=getattr(space, "mesh", None))
+        # sweep happens once, here; dispatch reads the cached winners
+        space = dataclasses.replace(space, autotune="cached")
     N, M = space.num_workers, space.num_blocks
     if edge is None:
         edge = jnp.ones((N, M), bool)

@@ -22,6 +22,7 @@ Two entry points:
 from __future__ import annotations
 
 import functools
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -30,6 +31,20 @@ from jax.experimental import pallas as pl
 BLK_R = 256
 BLK_M = 8
 LANE = 128
+
+
+def pick_blk_m(M: int, tuned: Optional[int] = None) -> int:
+    """Sublane grid tile: the largest divisor of M that is <= BLK_M (the
+    M grid is never padded — block j is row j everywhere, the block-id
+    contract — so M=1 PS commits and odd model-shard sizes tile at a
+    smaller divisor). A cached autotuner winner ``tuned`` is used
+    verbatim when it divides M."""
+    if tuned is not None and 0 < tuned <= M and M % tuned == 0:
+        return tuned
+    bm = min(M, BLK_M)
+    while M % bm:
+        bm -= 1
+    return bm
 
 
 # ---------------------------------------------------------------------------
@@ -93,8 +108,25 @@ def _kernel_3d(rho_ref, m_ref, g_ref, y_ref, zt_ref, w_ref, *refs,
         xo_ref[0] = jnp.where(keep, x, x_ref[0]).astype(xo_ref.dtype)
 
 
-def _pick_lane_tile(d: int) -> int:
-    """Largest lane-multiple tile <= 2048 dividing d (d % 128 == 0)."""
+def _pick_lane_tile(d: int, tuned: Optional[int] = None) -> int:
+    """Lane grid tile: the largest lane-multiple <= 2048 dividing d.
+
+    Precondition: ``d % 128 == 0``. Lane-aligned layouts
+    (core.blocks.make_flat_blocks / make_block_layout) guarantee it;
+    raw ragged widths raise an actionable error instead of the old
+    silent non-termination of the decrement loop. A cached autotuner
+    winner ``tuned`` (kernels/autotune.py) is used verbatim when it is
+    a lane multiple dividing d.
+    """
+    if d % LANE != 0:
+        raise ValueError(
+            f"lane tile requires d % {LANE} == 0, got d={d}; build the "
+            f"block table through a lane-aligned layout "
+            f"(core.blocks.make_flat_blocks / make_block_layout round "
+            f"block_dim up to {LANE}) instead of passing ragged rows.")
+    if tuned is not None and tuned % LANE == 0 and 0 < tuned <= d \
+            and d % tuned == 0:
+        return tuned
     blk_d = min(d, 2048)
     while d % blk_d:
         blk_d -= LANE
@@ -102,23 +134,26 @@ def _pick_lane_tile(d: int) -> int:
 
 
 def admm_worker_select_update_3d(g, y, z_tilde, w_old, sel_mask, rho,
-                                 x_old=None, *, interpret: bool = True):
+                                 x_old=None, *, interpret: bool = True,
+                                 blk_m: Optional[int] = None,
+                                 blk_d: Optional[int] = None):
     """Fused worker update + Alg. 1 select writes, epoch-native.
 
-    g, y, z_tilde, w_old [, x_old] : (N, M, d) with d % 128 == 0 and
-        M % blk_m == 0 (blk_m = min(8, M));
+    g, y, z_tilde, w_old [, x_old] : (N, M, d) with d % 128 == 0
+        (lane-aligned layout rows); the M grid tiles at the largest
+        divisor of M <= 8 — never padded;
     sel_mask : (N, M, 1) float — 1.0 where the (worker, block) pair was
         selected this epoch, 0.0 otherwise;
-    rho      : (N, 1) per-worker penalties (traced operand).
+    rho      : (N, 1) per-worker penalties (traced operand);
+    blk_m, blk_d : optional tile overrides (autotuner winners; validated
+        against the divisibility rules, heuristic fallback otherwise).
 
     Returns (y', w'[, x']): selected entries take the fresh update,
     unselected keep the old value — one pass over HBM instead of four.
     """
     N, M, d = g.shape
-    assert d % LANE == 0, (N, M, d)
-    blk_m = min(BLK_M, M)
-    assert M % blk_m == 0, (M, blk_m)
-    blk_d = _pick_lane_tile(d)
+    blk_m = pick_blk_m(M, tuned=blk_m)
+    blk_d = _pick_lane_tile(d, tuned=blk_d)
     grid = (N, M // blk_m, d // blk_d)
     tspec = pl.BlockSpec((1, blk_m, blk_d), lambda n, i, j: (n, i, j))
     mspec = pl.BlockSpec((1, blk_m, 1), lambda n, i, j: (n, i, 0))

@@ -1,11 +1,22 @@
 """Public jit'd wrappers around the Pallas kernels.
 
-Handle arbitrary shapes/dtypes: flatten to 2D, pad to (8,128) vreg /
-(128,128) MXU alignment (skipping the pad-copy entirely when the buffer
-is already aligned), dispatch, slice back. ``interpret`` defaults to
-True off-TPU (this container is CPU-only: interpret mode executes the
-kernel body in Python for validation; on TPU the same code compiles to
-Mosaic).
+Lane alignment is a property of the layout, not a per-call pad: since
+the lane-aligned packed refactor, ``core/blocks.py`` rounds every block
+row up to the 128-lane boundary at layout-build time, so these wrappers
+*require* aligned inputs and always take the no-copy fast path (the old
+pad-copy branches burned an extra HBM round trip per epoch on ragged
+layouts). Unaligned buffers raise an actionable error pointing at the
+layout constructors. The MXU ops (``matmul`` / ``logreg_grad``) still
+pad internally — data matrices are not layout-controlled. ``interpret``
+defaults to True off-TPU (this container is CPU-only: interpret mode
+executes the kernel body in Python for validation; on TPU the same code
+compiles to Mosaic).
+
+Tile shapes (``blk_m``, ``blk_d``) default to the static heuristics in
+``admm_update.py`` / ``prox_update.py``; the fused epoch ops accept a
+static ``tile=(blk_m, blk_d)`` override, which ``core/space.py`` feeds
+from the per-device autotuner table (``kernels/autotune.py``) when
+``ADMMConfig(autotune=)`` is "cached" or "sweep".
 
 ``rho`` enters every ADMM op as a *traced array operand* — never a jit
 static — so rho sweeps and heterogeneous per-worker rho_vec share one
@@ -22,7 +33,7 @@ fusions) when the benchmark costs the kernel-backed epoch.
 from __future__ import annotations
 
 import functools
-from typing import Optional
+from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -46,17 +57,19 @@ def _round_up(n: int, m: int) -> int:
 
 
 def _to_2d(v, lane=LANE, sublane=SUBLANE):
-    """Flatten to (R, lane) with R % sublane == 0; returns (arr2d, orig).
-
-    When the element count is already (sublane*lane)-aligned this is a
-    pure reshape — no zero-fill + scatter copy."""
+    """Flatten an (sublane*lane)-aligned buffer to (R, lane), R % sublane
+    == 0 — a pure reshape, never a zero-fill + scatter copy. Raises for
+    unaligned element counts: lane alignment is the layout's job."""
     flat = v.reshape(-1)
     n = flat.shape[0]
-    rows = _round_up(-(-n // lane), sublane)
-    total = rows * lane
-    if total == n:
-        return flat.reshape(rows, lane), (v.shape, n)
-    return jnp.pad(flat, (0, total - n)).reshape(rows, lane), (v.shape, n)
+    if n % (sublane * lane) != 0:
+        raise ValueError(
+            f"buffer of {n} elements (shape {v.shape}) is not "
+            f"({sublane}x{lane})-vreg aligned; kernel ops require "
+            f"lane-aligned buffers. Pack through a lane-aligned layout "
+            f"(core.blocks.make_flat_blocks / make_block_layout round "
+            f"block_dim up to {lane}) instead of passing raw leaves.")
+    return flat.reshape(n // lane, lane), (v.shape, n)
 
 
 def _from_2d(a2d, orig):
@@ -91,11 +104,13 @@ def _prox_stub(zt, ws, rs, gamma, l1, clip):
 
 @functools.partial(jax.jit,
                    static_argnames=("gamma", "l1", "clip", "interpret",
-                                    "boundary_stub"))
+                                    "boundary_stub", "tile"))
 def prox_consensus(z_tilde, w_sum, rho_sum, gamma: float, l1: float = 0.0,
                    clip: float = 0.0, interpret: Optional[bool] = None, *,
-                   boundary_stub: bool = False):
-    """Fused eq. (13). z_tilde, w_sum: (M, d); rho_sum: (M,) or (M, 1)."""
+                   boundary_stub: bool = False,
+                   tile: Optional[Tuple[int, int]] = None):
+    """Fused eq. (13). z_tilde, w_sum: (M, d) lane-aligned; rho_sum: (M,)
+    or (M, 1). ``tile=(blk_m, blk_d)`` statically overrides the grid."""
     interpret = _default_interpret() if interpret is None else interpret
     M, d = z_tilde.shape
     rho_sum = rho_sum.reshape(M, 1).astype(z_tilde.dtype)
@@ -104,32 +119,23 @@ def prox_consensus(z_tilde, w_sum, rho_sum, gamma: float, l1: float = 0.0,
             functools.partial(_prox_stub, gamma=gamma, l1=l1, clip=clip),
             jax.ShapeDtypeStruct(z_tilde.shape, z_tilde.dtype),
             z_tilde, w_sum, rho_sum)
-    dp = _round_up(d, LANE)
-    Mp = _round_up(M, _prox.BLK_M)
-    if (Mp, dp) == (M, d):                 # aligned: no pad copies
-        zt, ws, rs = z_tilde, w_sum, rho_sum
-    else:
-        zt = jnp.pad(z_tilde, ((0, Mp - M), (0, dp - d)))
-        ws = jnp.pad(w_sum, ((0, Mp - M), (0, dp - d)))
-        rs = jnp.ones((Mp, 1), z_tilde.dtype).at[:M].set(rho_sum)
-    out = _prox.prox_consensus_2d(zt, ws, rs, gamma, l1, clip,
-                                  interpret=interpret)
-    return out[:M, :d] if (Mp, dp) != (M, d) else out
+    _require_lane_aligned(d, "prox_consensus")
+    bm, bd = tile if tile is not None else (None, None)
+    return _prox.prox_consensus_2d(z_tilde, w_sum, rho_sum, gamma, l1, clip,
+                                   interpret=interpret, blk_m=bm, blk_d=bd)
 
 
 # ---------------------------------------------------------------------------
 # epoch-native fused ops (the VariableSpace pallas backend)
 # ---------------------------------------------------------------------------
 
-def _blk_m(M: int) -> int:
-    return M if M <= _admm.BLK_M else _admm.BLK_M
-
-
-def _pad3(a, Mp: int, dp: int):
-    N, M, d = a.shape
-    if (Mp, dp) == (M, d):
-        return a
-    return jnp.pad(a, ((0, 0), (0, Mp - M), (0, dp - d)))
+def _require_lane_aligned(d: int, op: str) -> None:
+    if d % LANE != 0:
+        raise ValueError(
+            f"{op}: block row width d={d} is not a multiple of {LANE}; "
+            f"lane alignment is a property of the layout — build blocks "
+            f"via core.blocks.make_flat_blocks / make_block_layout (which "
+            f"round block_dim up to {LANE}) rather than padding per call.")
 
 
 def _worker_stub(g, y, zt, w_old, smask, rho2, x_old):
@@ -141,17 +147,19 @@ def _worker_stub(g, y, zt, w_old, smask, rho2, x_old):
 
 
 @functools.partial(jax.jit,
-                   static_argnames=("interpret", "boundary_stub"))
+                   static_argnames=("interpret", "boundary_stub", "tile"))
 def admm_worker_select_update(g, y, z_tilde, w_old, sel, rho_vec,
                               x_old=None, *,
                               interpret: Optional[bool] = None,
-                              boundary_stub: bool = False):
+                              boundary_stub: bool = False,
+                              tile: Optional[Tuple[int, int]] = None):
     """Worker side of one epoch of Algorithm 1, fused: eqs. (11)+(12)+(9)
     plus the sel-masked merge of y / w_cache [/ x] in one HBM pass.
 
-    g, y, z_tilde, w_old [, x_old] : (N, M, dblk);
+    g, y, z_tilde, w_old [, x_old] : (N, M, dblk) with dblk lane-aligned;
     sel     : (N, M) bool — the selected (worker, block) pairs;
-    rho_vec : (N,) per-worker penalties (traced — heterogeneous rho_i).
+    rho_vec : (N,) per-worker penalties (traced — heterogeneous rho_i);
+    tile    : static (blk_m, blk_d) grid override (autotuner winners).
 
     Returns (y', w'[, x']).
     """
@@ -169,17 +177,12 @@ def admm_worker_select_update(g, y, z_tilde, w_old, sel, rho_vec,
             cb = lambda *a: _worker_stub(*a[:-1], x_old=a[-1])
             args = args + (x_old,)
         return jax.pure_callback(cb, tuple(shapes), *args)
-    bm = _blk_m(M)
-    Mp, dp = _round_up(M, bm), _round_up(d, LANE)
-    pads = (Mp, dp) != (M, d)
-    gp, yp, zp, wp = (_pad3(a, Mp, dp) for a in (g, y, z_tilde, w_old))
-    xp = None if x_old is None else _pad3(x_old, Mp, dp)
-    # padded blocks carry mask 0 -> they keep the (zero) old values
-    mp = _pad3(smask, Mp, 1)
-    out = _admm.admm_worker_select_update_3d(gp, yp, zp, wp, mp, rho2, xp,
-                                             interpret=interpret)
-    if pads:
-        out = tuple(o[:, :M, :d] for o in out)
+    _require_lane_aligned(d, "admm_worker_select_update")
+    bm, bd = tile if tile is not None else (None, None)
+    out = _admm.admm_worker_select_update_3d(g, y, z_tilde, w_old, smask,
+                                             rho2, x_old,
+                                             interpret=interpret,
+                                             blk_m=bm, blk_d=bd)
     return tuple(out)
 
 
@@ -191,17 +194,20 @@ def _server_stub(z_cur, w_cache, emask, rs, gamma, l1, clip):
 
 
 @functools.partial(jax.jit, static_argnames=("gamma", "l1", "clip",
-                                             "interpret", "boundary_stub"))
+                                             "interpret", "boundary_stub",
+                                             "tile"))
 def server_prox_update(z_cur, w_cache, edge, rho_sum, gamma: float,
                        l1: float = 0.0, clip: float = 0.0, *,
                        interpret: Optional[bool] = None,
-                       boundary_stub: bool = False):
+                       boundary_stub: bool = False,
+                       tile: Optional[Tuple[int, int]] = None):
     """Server side of one epoch of Algorithm 1, fused: the edge-masked
     reduction of the stale-w cache over workers AND the prox step (13)
     in one kernel — the (M, d) w_sum intermediate never touches HBM.
 
-    z_cur: (M, d); w_cache: (N, M, d); edge: (N, M) bool;
-    rho_sum: (M,) traced per-block penalty sums. Returns z_new (M, d).
+    z_cur: (M, d) lane-aligned; w_cache: (N, M, d); edge: (N, M) bool;
+    rho_sum: (M,) traced per-block penalty sums; ``tile=(blk_m, blk_d)``
+    statically overrides the grid. Returns z_new (M, d).
     """
     interpret = _default_interpret() if interpret is None else interpret
     N, M, d = w_cache.shape
@@ -212,17 +218,11 @@ def server_prox_update(z_cur, w_cache, edge, rho_sum, gamma: float,
             functools.partial(_server_stub, gamma=gamma, l1=l1, clip=clip),
             jax.ShapeDtypeStruct(z_cur.shape, z_cur.dtype),
             z_cur, w_cache, emask, rs)
-    bm = _blk_m(M)
-    Mp, dp = _round_up(M, bm), _round_up(d, LANE)
-    pads = (Mp, dp) != (M, d)
-    if pads:
-        z_cur = jnp.pad(z_cur, ((0, Mp - M), (0, dp - d)))
-        # padded rho_sum rows are 1.0 so mu stays nonzero off the slice
-        rs = jnp.ones((Mp, 1), jnp.float32).at[:M].set(rs)
-    out = _prox.server_prox_fused_2d(
-        z_cur, _pad3(w_cache, Mp, dp), _pad3(emask, Mp, 1), rs,
-        gamma, l1, clip, interpret=interpret)
-    return out[:M, :d] if pads else out
+    _require_lane_aligned(d, "server_prox_update")
+    bm, bd = tile if tile is not None else (None, None)
+    return _prox.server_prox_fused_2d(z_cur, w_cache, emask, rs,
+                                      gamma, l1, clip, interpret=interpret,
+                                      blk_m=bm, blk_d=bd)
 
 
 # ---------------------------------------------------------------------------

@@ -16,11 +16,14 @@ Two entry points:
 from __future__ import annotations
 
 import functools
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
+
+from .admm_update import pick_blk_m
 
 BLK_M = 8
 LANE = 128
@@ -45,7 +48,18 @@ def _kernel(zt_ref, ws_ref, rs_ref, z_ref, *, gamma: float, l1: float,
     z_ref[...] = v.astype(z_ref.dtype)
 
 
-def _pick_blk_d(d: int) -> int:
+def _pick_blk_d(d: int, tuned: Optional[int] = None) -> int:
+    """Lane tile for the prox grids (d % 128 == 0 — lane-aligned layout
+    rows; raises otherwise). A cached autotuner winner ``tuned`` is used
+    verbatim when it is a lane multiple dividing d."""
+    if d % LANE != 0:
+        raise ValueError(
+            f"prox lane tile requires d % {LANE} == 0, got d={d}; build "
+            f"the block table through a lane-aligned layout "
+            f"(core.blocks.make_flat_blocks / make_block_layout).")
+    if tuned is not None and tuned % LANE == 0 and 0 < tuned <= d \
+            and d % tuned == 0:
+        return tuned
     blk_d = min(d, 512)
     while d % blk_d:
         blk_d //= 2
@@ -53,13 +67,16 @@ def _pick_blk_d(d: int) -> int:
 
 
 def prox_consensus_2d(z_tilde, w_sum, rho_sum, gamma: float, l1: float,
-                      clip: float, *, interpret: bool = True):
-    """z_tilde, w_sum: (M, d) with d % 128 == 0, M % 8 == 0;
-    rho_sum: (M, 1). Returns z_new (M, d)."""
+                      clip: float, *, interpret: bool = True,
+                      blk_m: Optional[int] = None,
+                      blk_d: Optional[int] = None):
+    """z_tilde, w_sum: (M, d) with d % 128 == 0 (lane-aligned rows; the
+    M grid tiles at the largest divisor of M <= 8, never padded);
+    rho_sum: (M, 1); blk_m/blk_d optionally override the grid tiles
+    (autotuner winners). Returns z_new (M, d)."""
     M, d = z_tilde.shape
-    assert d % LANE == 0 and M % BLK_M == 0, (M, d)
-    blk_m = BLK_M
-    blk_d = _pick_blk_d(d)
+    blk_m = pick_blk_m(M, tuned=blk_m)
+    blk_d = _pick_blk_d(d, tuned=blk_d)
     grid = (M // blk_m, d // blk_d)
     spec = pl.BlockSpec((blk_m, blk_d), lambda i, j: (i, j))
     rs_spec = pl.BlockSpec((blk_m, 1), lambda i, j: (i, 0))
@@ -98,24 +115,29 @@ def _fused_kernel(z_ref, rs_ref, e_ref, w_ref, out_ref, acc_ref, *,
 
 
 def server_prox_fused_2d(z_cur, w_cache, edge_mask, rho_sum, gamma: float,
-                         l1: float, clip: float, *, interpret: bool = True):
+                         l1: float, clip: float, *, interpret: bool = True,
+                         blk_m: Optional[int] = None,
+                         blk_d: Optional[int] = None):
     """Eq. (13) with the worker reduction fused into the grid.
 
-    z_cur   : (M, d), d % 128 == 0, M % blk_m == 0 (blk_m = min(8, M));
+    z_cur   : (M, d), d % 128 == 0 (lane-aligned rows; the M grid tiles
+        at the largest divisor of M <= 8 — M=1 PS commits included);
     w_cache : (N, M, d) stale-w cache across all workers;
     edge_mask: (N, M, 1) float — 1.0 where (i, j) in E, else 0.0;
-    rho_sum : (M, 1) per-block sum of rho_i over the neighborhood.
+    rho_sum : (M, 1) per-block sum of rho_i over the neighborhood;
+    blk_m, blk_d : optional tile overrides (autotuner winners).
 
     The grid is (M/blk_m, d/blk_d, N) with the worker axis innermost:
     each (block, d) tile accumulates its edge-masked w contribution in a
     VMEM scratch across the N sweeps, and the prox fires on the last
-    worker — the reduced w_sum never exists as an HBM buffer.
+    worker — the reduced w_sum never exists as an HBM buffer. The tile
+    choice never reorders the N accumulation, so tuned tiles are
+    bitwise-equivalent to the heuristic.
     """
     N, M, d = w_cache.shape
-    assert z_cur.shape == (M, d) and d % LANE == 0, (N, M, d)
-    blk_m = min(BLK_M, M)
-    assert M % blk_m == 0, (M, blk_m)
-    blk_d = _pick_blk_d(d)
+    assert z_cur.shape == (M, d), (N, M, d)
+    blk_m = pick_blk_m(M, tuned=blk_m)
+    blk_d = _pick_blk_d(d, tuned=blk_d)
     grid = (M // blk_m, d // blk_d, N)
     spec = pl.BlockSpec((blk_m, blk_d), lambda i, j, n: (i, j))
     rs_spec = pl.BlockSpec((blk_m, 1), lambda i, j, n: (i, 0))

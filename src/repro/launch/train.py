@@ -143,6 +143,13 @@ def main() -> None:
                          "device), test (8 host devices, data=4 x "
                          "model=2), pod (data=16 x model=16), multipod; "
                          "workers shard over the data axes")
+    ap.add_argument("--autotune", default="off",
+                    choices=["off", "cached", "sweep"],
+                    help="kernel tile autotuning (kernels/autotune.py): "
+                         "off = static heuristics; cached = winners from "
+                         "benchmarks/kernels_tuned.json; sweep = measure "
+                         "this run's shapes up front, persist, then run "
+                         "cached")
     ap.add_argument("--delay-model", default="uniform",
                     choices=sorted(DELAY_MODELS),
                     help="Assumption-3 staleness: uniform U{0..D}, "
@@ -275,6 +282,7 @@ def main() -> None:
                           backend=args.backend,
                           mesh=args.mesh,
                           minibatch=args.minibatch,
+                          autotune=args.autotune,
                           seed=args.seed)
         delay_model = None                       # uniform == config default
         if args.delay_model == "constant":

@@ -19,8 +19,9 @@ import pytest
 
 from repro.api import ConsensusSession
 from repro.configs.base import ADMMConfig
-from repro.core.blocks import (BlockLayout, make_block_layout,
-                               make_tree_blocks)
+from repro.core.blocks import (LANE, BlockLayout, make_block_layout,
+                               make_flat_blocks, make_tree_blocks,
+                               round_up_to_lane)
 
 
 def _ragged_tree():
@@ -114,6 +115,103 @@ def test_block_id_contract():
                                       np.asarray(leaf).ravel())
 
 
+def test_block_dim_is_lane_rounded():
+    """Lane alignment is a property of the LAYOUT: block_dim is the max
+    block payload rounded up to the 128-lane boundary, never the raw
+    payload — so every kernel below sees vreg-aligned rows without a
+    per-call pad copy."""
+    tree = _ragged_tree()
+    for m in (1, 2, 3):
+        layout = make_block_layout(tree, num_blocks=m)
+        assert layout.block_dim % LANE == 0
+        assert layout.block_dim == round_up_to_lane(max(layout.block_sizes))
+    # flat layouts too, including dims already on the boundary
+    for dim, m in ((256, 2), (315, 3), (129, 1)):
+        fb = make_flat_blocks(dim, m)
+        assert fb.block_dim % LANE == 0
+        assert fb.block_dim == round_up_to_lane(fb.used_dim)
+        assert fb.used_dim * m >= dim
+
+
+def test_roundtrip_at_lane_boundary_bitwise():
+    """Leaf sizes straddling the 128 boundary (127/128/129) round-trip
+    bit-exactly in every stored dtype — the rounded row never bleeds
+    pad lanes into payload."""
+    r = np.random.RandomState(5)
+    for size in (127, 128, 129):
+        tree = {
+            "f32": jnp.asarray(r.randn(size), jnp.float32),
+            "bf16": jnp.asarray(r.randn(size), jnp.float32).astype(jnp.bfloat16),
+            "f16": jnp.asarray(r.randn(size), jnp.float32).astype(jnp.float16),
+        }
+        layout = make_block_layout(tree, num_blocks=3)
+        packed = layout.to_blocks(tree)
+        assert packed.shape[-1] % LANE == 0
+        back = layout.from_blocks(packed)
+        for a, b in zip(jax.tree.leaves(tree), jax.tree.leaves(back)):
+            assert a.dtype == b.dtype
+            np.testing.assert_array_equal(
+                np.asarray(a).view(np.uint8), np.asarray(b).view(np.uint8))
+        np.testing.assert_array_equal(
+            np.asarray(packed)[~layout.padding_mask()], 0.0)
+
+
+def test_padding_inert_through_prox_and_edge_mask():
+    """Zero pad lanes stay exactly zero through the fused server op
+    (edge-masked w reduction + prox) and the plain prox: soft-threshold
+    of 0 with w_sum 0 is 0, so padding can never contaminate z."""
+    from repro.kernels import ops
+
+    N, M = 3, 2
+    tree = {"a": jnp.ones((100,), jnp.float32),
+            "b": jnp.ones((130,), jnp.float32)}
+    layout = make_block_layout(tree, num_blocks=M)
+    pad = ~layout.padding_mask()
+    assert pad.any()
+    r = np.random.RandomState(7)
+    z = layout.to_blocks(jax.tree.map(
+        lambda a: jnp.asarray(r.randn(*a.shape), a.dtype), tree))
+    w_cache = jnp.stack([z * (k + 1) for k in range(N)])
+    edge = jnp.asarray(r.rand(N, M) < 0.7)
+    rho_sum = jnp.full((M,), 2.0, jnp.float32)
+    z_new = ops.server_prox_update(z, w_cache, edge, rho_sum,
+                                   gamma=0.1, l1=1e-3, clip=0.5)
+    np.testing.assert_array_equal(np.asarray(z_new)[pad], 0.0)
+    assert float(np.max(np.abs(np.asarray(z_new)))) > 0.0
+    z_prox = ops.prox_consensus(z, z * 0.5, rho_sum, gamma=0.1, l1=1e-3,
+                                clip=0.5)
+    np.testing.assert_array_equal(np.asarray(z_prox)[pad], 0.0)
+
+
+def test_sharded_divisibility_of_lane_rounded_layout():
+    """Model-axis sharding splits the BLOCK axis, never the lane axis:
+    the per-shard state keeps full lane-aligned rows, and indivisible
+    block counts still fail eagerly with the num_blocks message."""
+    from jax.sharding import AbstractMesh
+
+    mesh = AbstractMesh((("data", 4), ("model", 2)))
+    params = {"w": jnp.zeros((300,), jnp.float32)}
+    cfg = ADMMConfig(rho=1.0, gamma=0.1, num_blocks=4, seed=0)
+
+    def loss(p, c):
+        return 0.5 * jnp.sum(jnp.square(p["w"] - c))
+
+    sess = ConsensusSession.pytree(loss, params, cfg, num_workers=4,
+                                   mesh=mesh)
+    from repro.core.sharded import consensus_state_specs
+    state = jax.eval_shape(sess.init)
+    specs = consensus_state_specs(sess.spec, state)
+    yspec = specs.y
+    assert yspec[1] == "model" and yspec[2] is None   # blocks split, lanes whole
+    assert state.y.shape[2] % LANE == 0
+    assert state.y.shape[1] % 2 == 0                  # M divides the model axis
+    with pytest.raises(ValueError, match="num_blocks"):
+        ConsensusSession.pytree(loss, params,
+                                ADMMConfig(rho=1.0, gamma=0.1, num_blocks=3,
+                                           seed=0),
+                                num_workers=4, mesh=mesh)
+
+
 def _ragged_session(max_delay=1, clip=0.8):
     """A pytree session whose LPT assignment leaves real padding in
     some rows (block sizes 13, 12, 4 -> dblk 13)."""
@@ -181,6 +279,7 @@ try:
         template = {k: jax.ShapeDtypeStruct(v.shape[lead:], v.dtype)
                     for k, v in tree.items()}
         layout = make_block_layout(template, num_blocks=m)
+        assert layout.block_dim % LANE == 0
         packed = layout.to_blocks(tree)
         assert packed.shape == prefix + (m, layout.block_dim)
         back = layout.from_blocks(packed)

@@ -99,6 +99,44 @@ def test_dus_aliasing_not_overcharged():
     assert c.hbm_bytes < TRIPS * D * 4 * 20, c.hbm_bytes
 
 
+def test_static_slice_charged_per_window():
+    """Slicing K small leaves out of one big buffer must cost O(leaf
+    bytes), not O(K x buffer bytes) — the packed-layout unpack
+    (BlockLayout.from_blocks) is exactly this pattern."""
+    n, K, w = 1 << 20, 16, 256
+    x = jax.ShapeDtypeStruct((n,), jnp.float32)
+
+    def unpack(buf):
+        return [jax.lax.slice_in_dim(buf, k * w, (k + 1) * w) for k in range(K)]
+
+    hlo = (jax.jit(unpack).lower(x)
+           .compiler_ir(dialect="hlo").as_hlo_text())
+    c = analyze_hlo(hlo)
+    # 2x window per leaf; naive operand+result charging would be ~K * n * 4
+    assert c.hbm_bytes <= 4 * K * w * 4, c.hbm_bytes
+    assert c.hbm_bytes < 0.01 * K * n * 4, c.hbm_bytes
+
+
+def test_preopt_call_bodies_counted():
+    """The pre-optimization dump writes ``to_apply=inner.3`` without the
+    ``%`` sigil — the analyzer must still recurse into the callee, or
+    every kernel custom-call boundary vanishes from bench numbers."""
+    n = 1 << 16
+    x = jax.ShapeDtypeStruct((n,), jnp.float32)
+
+    def f(v):
+        def inner(y):
+            return y * 2.0 + 1.0
+        return jax.jit(inner)(v) + v
+
+    hlo = (jax.jit(f).lower(x)
+           .compiler_ir(dialect="hlo").as_hlo_text())
+    assert "to_apply=" in hlo
+    c = analyze_hlo(hlo)
+    # inner body alone moves >= 2 array-loads + 1 store
+    assert c.hbm_bytes > 3 * n * 4, c.hbm_bytes
+
+
 def test_collective_bytes_unscaled_parser_on_known_text():
     hlo = "  %ar = bf16[256,128]{1,0} all-reduce(%x)\n"
     cb = collective_bytes(hlo)

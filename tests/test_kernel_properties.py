@@ -15,13 +15,22 @@ small = st.floats(-50.0, 50.0, allow_nan=False, width=32)
 arrays = st.lists(small, min_size=1, max_size=200)
 
 
+def _lane_pad(vals):
+    """Embed arbitrary-length draws in the (8*128)-aligned buffer the
+    kernel ops require since the layout refactor (zero fill is inert:
+    the ops are elementwise)."""
+    out = np.zeros(1024, np.float32)
+    out[: len(vals)] = vals
+    return jnp.asarray(out)
+
+
 @given(arrays, arrays, arrays, st.floats(0.1, 200.0))
 @settings(max_examples=40, deadline=None)
 def test_kernel_matches_core_update(gs, ys, zs, rho):
     n = min(len(gs), len(ys), len(zs))
-    g = jnp.asarray(gs[:n], jnp.float32)
-    y = jnp.asarray(ys[:n], jnp.float32)
-    z = jnp.asarray(zs[:n], jnp.float32)
+    g = _lane_pad(gs[:n])
+    y = _lane_pad(ys[:n])
+    z = _lane_pad(zs[:n])
     kx, ky, kw = ops.admm_worker_update(g, y, z, rho, interpret=True)
     cx, cy, cw = worker_update(g, y, z, rho)
     # kernel emits the algebraic identity y' = -g exactly; the unfused

@@ -1,5 +1,12 @@
 """Pallas kernels vs pure-jnp oracles: shape/dtype sweeps (interpret mode
-executes the kernel body on CPU; on TPU the same code compiles)."""
+executes the kernel body on CPU; on TPU the same code compiles).
+
+Since the lane-aligned layout refactor the kernel ops CONSUME alignment
+instead of producing it: buffers must be (8x128)-vreg aligned (flat
+ops) / have d % 128 == 0 (batched ops) — the layouts in core/blocks.py
+guarantee this, and raw ragged buffers raise actionable errors, pinned
+below.
+"""
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -7,7 +14,8 @@ import pytest
 
 from repro.kernels import ops, ref
 
-SHAPES = [(64,), (1000,), (8, 128), (7, 33), (3, 5, 17), (2048,), (513,)]
+# every shape is (8*128)-element aligned — the layout's output contract
+SHAPES = [(1024,), (2048,), (8, 128), (2, 8, 128), (4, 2, 128)]
 DTYPES = [jnp.float32, jnp.bfloat16]
 
 
@@ -34,15 +42,24 @@ def test_admm_worker_update(shape, dtype, rho):
                                    rtol=rtol, atol=atol)
 
 
+@pytest.mark.parametrize("shape", [(64,), (7, 33), (3, 5, 17), (513,)])
+def test_worker_update_rejects_unaligned(shape):
+    """Ragged buffers no longer get a silent pad copy — the error names
+    the layout builders that produce aligned tables."""
+    a = jnp.ones(shape, jnp.float32)
+    with pytest.raises(ValueError, match="make_flat_blocks"):
+        ops.admm_worker_update(a, a, a, 1.0, interpret=True)
+
+
 def test_admm_worker_y_identity():
     """Eq. 25: kernel's y' must equal -g exactly."""
-    g = jnp.asarray(np.random.randn(333), jnp.float32)
-    _, yn, _ = ops.admm_worker_update(g, jnp.ones(333), jnp.ones(333), 3.0,
-                                      interpret=True)
+    g = jnp.asarray(np.random.randn(1024), jnp.float32)
+    o = jnp.ones(1024)
+    _, yn, _ = ops.admm_worker_update(g, o, o, 3.0, interpret=True)
     np.testing.assert_array_equal(np.asarray(yn), -np.asarray(g))
 
 
-@pytest.mark.parametrize("M,d", [(1, 8), (5, 200), (16, 1024), (3, 129)])
+@pytest.mark.parametrize("M,d", [(1, 128), (5, 256), (16, 1024), (3, 384)])
 @pytest.mark.parametrize("l1,clip", [(0.0, 0.0), (0.05, 0.0), (0.05, 0.4)])
 def test_prox_consensus(M, d, l1, clip):
     rng = np.random.RandomState(0)
@@ -56,6 +73,12 @@ def test_prox_consensus(M, d, l1, clip):
     np.testing.assert_allclose(out, exp, rtol=1e-5, atol=1e-6)
     if clip > 0:
         assert float(jnp.max(jnp.abs(out))) <= clip + 1e-6
+
+
+def test_prox_consensus_rejects_ragged_rows():
+    zt = jnp.ones((3, 129), jnp.float32)
+    with pytest.raises(ValueError, match="prox_consensus.*129"):
+        ops.prox_consensus(zt, zt, jnp.ones(3), gamma=0.1, interpret=True)
 
 
 @pytest.mark.parametrize("m,k,n", [(128, 128, 128), (256, 384, 128),
@@ -96,8 +119,8 @@ def test_logreg_grad_matches_autodiff():
                                jax.grad(loss)(w), rtol=1e-4, atol=1e-5)
 
 
-@pytest.mark.parametrize("N,M,d", [(3, 4, 5), (2, 8, 128), (4, 12, 200),
-                                   (1, 1, 7)])
+@pytest.mark.parametrize("N,M,d", [(3, 4, 128), (2, 8, 128), (4, 12, 256),
+                                   (1, 1, 128)])
 @pytest.mark.parametrize("with_x", [False, True])
 def test_admm_worker_select_update(N, M, d, with_x):
     """Batched worker kernel: update (11)(12)(9) + sel-masked merges in
@@ -122,7 +145,7 @@ def test_admm_worker_select_update(N, M, d, with_x):
                                   np.asarray(y)[keep])
 
 
-@pytest.mark.parametrize("N,M,d", [(3, 4, 5), (2, 8, 128), (4, 12, 200)])
+@pytest.mark.parametrize("N,M,d", [(3, 4, 128), (2, 8, 128), (4, 12, 256)])
 @pytest.mark.parametrize("l1,clip", [(0.0, 0.0), (0.05, 0.4)])
 def test_server_prox_update(N, M, d, l1, clip):
     """Fused server kernel: edge-masked worker reduction + prox (13)
@@ -142,13 +165,49 @@ def test_server_prox_update(N, M, d, l1, clip):
         assert float(jnp.max(jnp.abs(out))) <= clip + 1e-6
 
 
+@pytest.mark.parametrize("op,args", [
+    ("admm_worker_select_update",
+     lambda a3, sel, rho: ops.admm_worker_select_update(
+         a3, a3, a3, a3, sel, rho, interpret=True)),
+    ("server_prox_update",
+     lambda a3, sel, rho: ops.server_prox_update(
+         a3[0], a3, sel, rho[0] * jnp.ones(a3.shape[1]), gamma=0.1,
+         interpret=True)),
+])
+def test_batched_ops_reject_ragged_rows(op, args):
+    """d % 128 != 0 raises the layout-pointing error instead of the old
+    silent non-termination of the tile-decrement loop."""
+    a3 = jnp.ones((2, 4, 129), jnp.float32)
+    sel = jnp.ones((2, 4), bool)
+    rho = jnp.ones(2, jnp.float32)
+    with pytest.raises(ValueError, match=f"{op}.*129"):
+        args(a3, sel, rho)
+
+
+def test_pick_lane_tile_contract():
+    """The lane-tile picker: actionable error off the lane grid, tuned
+    winners consulted verbatim only when they are lane multiples
+    dividing d, heuristic fallback otherwise."""
+    from repro.kernels.admm_update import _pick_lane_tile, pick_blk_m
+
+    with pytest.raises(ValueError, match="d % 128 == 0, got d=136"):
+        _pick_lane_tile(136)
+    assert _pick_lane_tile(4096) == 2048          # heuristic: cap at 2048
+    assert _pick_lane_tile(3 * 128) == 384        # largest lane divisor
+    assert _pick_lane_tile(4096, tuned=512) == 512    # tuned divides -> used
+    assert _pick_lane_tile(4096, tuned=384) == 2048   # tuned !divides -> fallback
+    assert _pick_lane_tile(4096, tuned=100) == 2048   # tuned !lane-mult -> fallback
+    assert pick_blk_m(12, tuned=6) == 6
+    assert pick_blk_m(12, tuned=5) == pick_blk_m(12)  # non-divisor ignored
+
+
 def test_admm_worker_update_rho_is_traced():
     """Sweeping rho must not recompile: rho is an array operand, not a
     jit-static argument (each distinct value used to trigger a fresh
     Mosaic compile)."""
     ops.admm_worker_update._clear_cache()
-    g = jnp.asarray(np.random.randn(256), jnp.float32)
-    o = jnp.ones(256)
+    g = jnp.asarray(np.random.randn(1024), jnp.float32)
+    o = jnp.ones(1024)
     for rho in (0.5, 2.0, 100.0, 3.7):
         x, yn, w = ops.admm_worker_update(g, o, o, rho, interpret=True)
         xe, yne, we = ref.admm_worker_update_ref(g, o, o, rho)
@@ -159,7 +218,8 @@ def test_admm_worker_update_rho_is_traced():
 
 def test_to_2d_aligned_is_reshape_only():
     """(8*128)-aligned buffers must pass through _to_2d without a
-    zero-fill + scatter copy (no `pad` / `scatter` in the jaxpr)."""
+    zero-fill + scatter copy (no `pad` / `scatter` in the jaxpr), and
+    unaligned buffers are a layout bug — they raise, never pad."""
     from repro.kernels.ops import _from_2d, _to_2d
 
     def roundtrip(v):
@@ -171,7 +231,5 @@ def test_to_2d_aligned_is_reshape_only():
     assert "pad" not in jaxpr and "scatter" not in jaxpr, jaxpr
     np.testing.assert_array_equal(np.asarray(roundtrip(aligned)),
                                   np.ones((8, 128)))
-    # unaligned still round-trips exactly
-    odd = jnp.asarray(np.random.randn(3, 5, 17), jnp.float32)
-    np.testing.assert_array_equal(np.asarray(roundtrip(odd)),
-                                  np.asarray(odd))
+    with pytest.raises(ValueError, match="vreg aligned"):
+        _to_2d(jnp.ones((3, 5, 17)))
